@@ -1,0 +1,94 @@
+"""Paper Table 3 analogue (small scale): ablation of dynamic quantization,
+block-wise quantization, and the stable embedding layer; plus App H
+(AdaGrad), App I (stable-embedding components) and Fig 3 (sensitivity).
+
+Each row trains the small LM for a few hundred steps on the synthetic
+corpus; 'unstable' = diverged/NaN. Scale is laptop-size by necessity — the
+ORDERING of rows is the reproduced claim, and the background runs in
+EXPERIMENTS.md extend these to longer horizons."""
+from __future__ import annotations
+
+import dataclasses
+
+from benchmarks.common import emit, small_lm, train_lm
+
+
+def bench_table3_ablation(steps=120):
+    cfg, pipe = small_lm()
+    cfg_nostab = dataclasses.replace(cfg, stable_embedding=False)
+    rows = [
+        # (label, cfg, optimizer, opt kwargs)
+        ("adam32", cfg_nostab, "adam32", {}),
+        ("adam32+stable", cfg, "adam32", {}),
+        ("adam8_linear", cfg_nostab, "adam8",
+         dict(qmap_m="linear", qmap_r="linear",
+              override_32bit=lambda p: False)),
+        ("adam8_linear+stable", cfg, "adam8",
+         dict(qmap_m="linear", qmap_r="linear")),
+        ("adam8_dynamic_tensorwise", cfg_nostab, "adam8",
+         dict(blockwise_norm=False, override_32bit=lambda p: False)),
+        ("adam8_dynamic_blockwise", cfg_nostab, "adam8",
+         dict(override_32bit=lambda p: False)),
+        ("adam8_dynamic_blockwise+stable", cfg, "adam8", {}),
+    ]
+    results = {}
+    for label, c, opt_name, kw in rows:
+        loss, _, div = train_lm(c, pipe, opt_name, steps, lr=1e-2, **kw)
+        results[label] = (loss, div)
+        emit(f"table3/{label}", 0.0,
+             "UNSTABLE" if div else f"loss={loss:.3f}")
+    return results
+
+
+def bench_appH_adagrad(steps=120):
+    cfg, pipe = small_lm()
+    for name in ["adagrad32", "adagrad8"]:
+        loss, _, div = train_lm(cfg, pipe, name, steps, lr=5e-3)
+        emit(f"appH/{name}", 0.0, "UNSTABLE" if div else f"loss={loss:.3f}")
+    loss, _, div = train_lm(cfg, pipe, "adagrad8", steps, lr=5e-3,
+                            stochastic_rounding=False)
+    emit("appH/adagrad8_det", 0.0, "UNSTABLE" if div else f"loss={loss:.3f}")
+
+
+def bench_appI_stable_embedding(steps=120):
+    cfg, pipe = small_lm()
+    import dataclasses as dc
+    for label, c in [
+        ("stable(ln+xavier+32bit)", cfg),
+        ("baseline_embed", dc.replace(cfg, stable_embedding=False)),
+    ]:
+        loss, _, div = train_lm(c, pipe, "adam8", steps, lr=1e-2)
+        emit(f"appI/{label}", 0.0, "UNSTABLE" if div else f"loss={loss:.3f}")
+    # 32-bit state override off (embedding quantized too)
+    loss, _, div = train_lm(cfg, pipe, "adam8", steps, lr=1e-2,
+                            override_32bit=lambda p: False)
+    emit("appI/stable_but_8bit_embed_state", 0.0,
+         "UNSTABLE" if div else f"loss={loss:.3f}")
+
+
+def bench_fig3_sensitivity(steps=80):
+    """Fig 3: the 8-vs-32-bit gap should be roughly constant across
+    hyperparameters."""
+    cfg, pipe = small_lm()
+    gaps = []
+    for lr in [3e-3, 1e-2]:
+        for b1 in [0.9, 0.87]:
+            l32, _, _ = train_lm(cfg, pipe, "adam32", steps, lr=lr, beta1=b1)
+            l8, _, _ = train_lm(cfg, pipe, "adam8", steps, lr=lr, beta1=b1)
+            gap = l8 - l32
+            gaps.append(gap)
+            emit(f"fig3/lr{lr}_b1{b1}", 0.0,
+                 f"adam32={l32:.3f} adam8={l8:.3f} gap={gap:+.3f}")
+    spread = max(gaps) - min(gaps)
+    emit("fig3/gap_spread", 0.0, f"{spread:.3f} (small => drop-in safe)")
+
+
+def main():
+    bench_table3_ablation()
+    bench_appH_adagrad()
+    bench_appI_stable_embedding()
+    bench_fig3_sensitivity()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Roofline table from the dry-run artifacts (deliverable g): per
+(arch x shape x mesh) the three terms, dominant bottleneck, and the
+MODEL_FLOPS/HLO_FLOPS 'useful compute' ratio."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+
+def bench_roofline(art_dir="artifacts/dryrun"):
+    files = sorted(glob.glob(os.path.join(art_dir, "*.json")))
+    if not files:
+        emit("roofline/NO_ARTIFACTS", 0.0,
+             "run scripts/run_dryrun_grid.sh first")
+        return
+    n_ok = n_skip = n_fail = 0
+    for f in files:
+        with open(f) as fh:
+            art = json.load(fh)
+        tag = f"{art['arch']}/{art['shape']}/{art['mesh']}"
+        if art["status"] == "ok":
+            n_ok += 1
+            r = art["roofline"]
+            dom = r["bottleneck"]
+            emit(f"roofline/{tag}", 0.0,
+                 f"compute={r['compute_s']:.3e}s memory={r['memory_s']:.3e}s "
+                 f"coll={r['collective_s']:.3e}s bottleneck={dom} "
+                 f"useful={r['useful_flops_ratio']:.2f} "
+                 f"mem/dev={art['memory']['total_per_device']/2**30:.2f}GiB")
+        elif art["status"].startswith("skipped"):
+            n_skip += 1
+            emit(f"roofline/{tag}", 0.0, art["status"])
+        else:
+            n_fail += 1
+            emit(f"roofline/{tag}", 0.0, "FAILED")
+    emit("roofline/summary", 0.0, f"ok={n_ok} skipped={n_skip} failed={n_fail}")
+
+
+def main():
+    bench_roofline()
+
+
+if __name__ == "__main__":
+    main()

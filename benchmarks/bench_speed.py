@@ -1,0 +1,88 @@
+"""Paper Table 5 analogue: optimizer update runtime in isolation.
+
+The paper reports ms per update per 1B params on V100; this container is
+CPU-only so absolute numbers differ, but the *relative* cost of 8-bit vs
+32-bit updates (and the Pallas-interpret validation path) is measured, and
+the kernel's TPU roofline position is derived analytically (bytes streamed /
+HBM bw — the kernel is bandwidth-bound; DESIGN.md §3)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.core import qmap
+from repro.kernels import ops, ref
+
+
+def bench_table5_update_speed(n_params: int = 1 << 20):
+    nb, bsz = n_params // 2048, 2048
+    key = jax.random.PRNGKey(0)
+    p = jax.random.normal(key, (nb, bsz))
+    g = jax.random.normal(key, (nb, bsz)) * 0.01
+    qs = jnp.asarray(qmap.get_qmap("dynamic", True))
+    qu = jnp.asarray(qmap.get_qmap("dynamic", False))
+    cm, am = ref.quantize_ref(p * 0.01, qs)
+    cr, ar = ref.quantize_ref(jnp.abs(p) * 1e-4, qu)
+    kw = dict(lr=1e-3, beta1=0.9, beta2=0.999, eps=1e-8, weight_decay=0.0,
+              step=3.0)
+
+    @jax.jit
+    def adam8_jnp(p, g, cm, am, cr, ar):
+        return ops.adam8_update(p, g, cm, am, cr, ar, qs, qu, impl="jnp", **kw)
+
+    @jax.jit
+    def adam32(p, g, m, r):
+        m2 = 0.9 * m + 0.1 * g
+        r2 = 0.999 * r + 0.001 * g * g
+        return p - 1e-3 * (m2 / (1 - 0.9 ** 3)) / (
+            jnp.sqrt(r2 / (1 - 0.999 ** 3)) + 1e-8), m2, r2
+
+    m = jnp.zeros_like(p)
+    r = jnp.zeros_like(p)
+    us32, _ = time_fn(adam32, p, g, m, r)
+    us8, _ = time_fn(adam8_jnp, p, g, cm, am, cr, ar)
+    emit(f"table5/adam32_jnp_us_per_{n_params}p", us32,
+         f"{us32 * 1e9 / n_params / 1000:.1f}ms/1Bparam")
+    emit(f"table5/adam8_jnp_us_per_{n_params}p", us8,
+         f"{us8 * 1e9 / n_params / 1000:.1f}ms/1Bparam")
+
+    # Pallas interpret path (correctness-bearing, not perf-bearing on CPU)
+    small = 1 << 16
+    nb2 = small // 2048
+    us8k, _ = time_fn(
+        lambda: ops.adam8_update(p[:nb2], g[:nb2], cm[:nb2], am[:nb2],
+                                 cr[:nb2], ar[:nb2], qs, qu,
+                                 impl="interpret", **kw), iters=2, warmup=1)
+    emit(f"table5/adam8_pallas_interpret_us_per_{small}p", us8k,
+         "validation-path")
+
+    # TPU roofline position (analytic): bytes/param streamed by the fused
+    # kernel: p(4+4) g(4) codes(2x(1+1)) absmax(~0) = 16B/param.
+    bytes_per_param = 16.0
+    t_1b = 1e9 * bytes_per_param / 819e9
+    emit("table5/adam8_tpu_hbm_bound_ms_per_1B", 0.0,
+         f"{t_1b * 1e3:.1f}ms (819GB/s v5e; paper reports 47ms on V100)")
+
+
+def bench_quantize_throughput():
+    qs = jnp.asarray(qmap.get_qmap("dynamic", True))
+    x = jax.random.normal(jax.random.PRNGKey(0), (512, 2048))
+
+    @jax.jit
+    def q(x):
+        return ref.quantize_ref(x, qs)
+
+    us, _ = time_fn(q, x)
+    n = x.size
+    emit("table5/quantize_blockwise_jnp_us_per_1Melem", us * (1 << 20) / n,
+         f"{n / us:.0f} elem/us")
+
+
+def main():
+    bench_table5_update_speed()
+    bench_quantize_throughput()
+
+
+if __name__ == "__main__":
+    main()

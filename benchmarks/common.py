@@ -1,0 +1,56 @@
+"""Shared helpers for the benchmark harness (one module per paper table)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import base
+from repro.core.optim import make_optimizer
+from repro.data.pipeline import DataConfig, SyntheticLMPipeline
+from repro.train import loop as L
+
+ROWS: list[tuple[str, float, str]] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.3f},{derived}")
+
+
+def time_fn(fn, *args, iters=5, warmup=2):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6, out
+
+
+def small_lm(vocab=256, d_model=128, n_layers=2, seq=64, batch=16,
+             **cfg_overrides):
+    cfg = base.reduced(base.get_config("paper-lm-209m"), d_model=d_model,
+                       n_layers=n_layers, vocab_size=vocab, n_heads=4,
+                       n_kv_heads=4, head_dim=d_model // 4,
+                       d_ff=4 * d_model, **cfg_overrides)
+    pipe = SyntheticLMPipeline(DataConfig(vocab_size=vocab, seq_len=seq,
+                                          global_batch=batch))
+    return cfg, pipe
+
+
+def train_lm(cfg, pipe, opt_name, steps, lr=5e-3, seed=0, hyper=None,
+             **opt_kw):
+    """Returns (final_loss, losses, diverged)."""
+    opt = make_optimizer(opt_name, lr=lr, min_8bit_size=1024, **opt_kw)
+    state, _ = L.init_train_state(cfg, opt, jax.random.PRNGKey(seed))
+    step = jax.jit(L.make_train_step(cfg, opt, hyper or L.TrainHyper()))
+    losses = []
+    for i in range(steps):
+        batch = {k: jnp.asarray(v) for k, v in pipe.batch_at(i).items()}
+        state, m = step(state, batch)
+        li = float(m["loss"])
+        losses.append(li)
+        if not jnp.isfinite(li) or li > 50:
+            return li, losses, True
+    return losses[-1], losses, False

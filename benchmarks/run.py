@@ -1,0 +1,42 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.
+
+  PYTHONPATH=src python -m benchmarks.run            # full suite
+  PYTHONPATH=src python -m benchmarks.run --only table3,roofline
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+SUITES = {
+    "memory": ("benchmarks.bench_memory", "Tables 1+2 (memory)"),
+    "speed": ("benchmarks.bench_speed", "Table 5 (optimizer runtime)"),
+    "qerror": ("benchmarks.bench_qerror", "Table 6 + App D (quant error)"),
+    "ablation": ("benchmarks.bench_ablation",
+                 "Table 3 + App H/I + Fig 3 (training ablations)"),
+    "roofline": ("benchmarks.bench_roofline", "Dry-run roofline table"),
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", type=str, default=None,
+                    help="comma-separated suite names")
+    args = ap.parse_args()
+    names = list(SUITES) if not args.only else args.only.split(",")
+    print("name,us_per_call,derived")
+    for n in names:
+        mod_name, desc = SUITES[n]
+        print(f"# === {n}: {desc} ===")
+        mod = __import__(mod_name, fromlist=["main"])
+        try:
+            mod.main()
+        except Exception as e:  # keep the harness running
+            print(f"{n}/ERROR,0,{e!r}", file=sys.stderr)
+            print(f"{n}/ERROR,0,{e!r}")
+
+
+if __name__ == "__main__":
+    main()

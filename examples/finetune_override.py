@@ -1,0 +1,41 @@
+"""Per-layer 32-bit override example (the paper's GlobalOptimManager
+pattern): quantize every state EXCEPT layers you name — here the embedding
+(paper §2.3 stable-embedding rule) plus the final norm.
+
+    PYTHONPATH=src python examples/finetune_override.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs import base
+from repro.core.optim import Quant8Leaf, Full32Leaf, make_optimizer
+from repro.data.pipeline import DataConfig, SyntheticLMPipeline
+from repro.train import loop as L
+
+
+def my_override(path: str) -> bool:
+    return "embed" in path or "final_norm" in path
+
+
+def main():
+    cfg = base.reduced(base.get_config("granite-3-8b"),
+                       d_model=128, n_layers=2, vocab_size=256)
+    pipe = SyntheticLMPipeline(DataConfig(vocab_size=256, seq_len=32,
+                                          global_batch=8))
+    opt = make_optimizer("adamw8", lr=3e-3, weight_decay=0.01,
+                         override_32bit=my_override)
+    state, _ = L.init_train_state(cfg, opt, jax.random.PRNGKey(0))
+    kinds = jax.tree_util.tree_map(
+        lambda l: type(l).__name__, state.opt_state.leaves,
+        is_leaf=lambda x: isinstance(x, (Quant8Leaf, Full32Leaf)))
+    print("per-leaf state kinds:",
+          {k: str(v)[:60] for k, v in kinds.items()})
+    step = jax.jit(L.make_train_step(cfg, opt))
+    for i in range(30):
+        batch = {k: jnp.asarray(v) for k, v in pipe.batch_at(i).items()}
+        state, m = step(state, batch)
+    print("final loss:", float(m["loss"]))
+
+
+if __name__ == "__main__":
+    main()

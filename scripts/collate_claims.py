@@ -1,0 +1,23 @@
+"""Collate artifacts/claims/*.jsonl into the EXPERIMENTS §claims table."""
+import glob
+import json
+import os
+import sys
+
+
+def main(d="artifacts/claims"):
+    print("| run | steps | final loss | min loss | diverged |")
+    print("|---|---|---|---|---|")
+    for f in sorted(glob.glob(os.path.join(d, "*.jsonl"))):
+        name = os.path.basename(f)[:-6]
+        losses = [json.loads(l)["loss"] for l in open(f) if l.strip()]
+        if not losses:
+            continue
+        final = losses[-1]
+        diverged = (final != final) or final > 10 * min(losses) or final > 50
+        print(f"| {name} | {len(losses)} | {final:.3f} | {min(losses):.3f} "
+              f"| {'YES' if diverged else 'no'} |")
+
+
+if __name__ == "__main__":
+    main(*(sys.argv[1:2] or ["artifacts/claims"]))

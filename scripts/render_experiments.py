@@ -1,0 +1,51 @@
+"""Render the §Dry-run and §Roofline tables of EXPERIMENTS.md from the
+dry-run artifacts.  Usage:
+    PYTHONPATH=src python scripts/render_experiments.py [artifacts/dryrun]
+Prints markdown to stdout.
+"""
+import glob
+import json
+import os
+import sys
+
+
+def fmt_bytes(b):
+    return f"{b / 2**30:.2f}"
+
+
+def main(art_dir="artifacts/dryrun"):
+    rows = []
+    for f in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        rows.append(json.load(open(f)))
+
+    for mesh in ["pod", "multipod"]:
+        sel = [a for a in rows if a["mesh"] == mesh]
+        if not sel:
+            continue
+        print(f"\n### Mesh `{mesh}` "
+              f"({'16x16=256 chips' if mesh == 'pod' else '2x16x16=512 chips'})\n")
+        print("| arch | shape | status | compute s | memory s | collective s "
+              "| bottleneck | MODEL/HLO flops | args GiB/dev | temp GiB/dev |")
+        print("|---|---|---|---|---|---|---|---|---|---|")
+        for a in sel:
+            if a["status"] != "ok":
+                print(f"| {a['arch']} | {a['shape']} | {a['status'][:28]} "
+                      f"| | | | | | | |")
+                continue
+            r = a["roofline"]
+            m = a["memory"]
+            print(f"| {a['arch']} | {a['shape']} | ok "
+                  f"| {r['compute_s']:.2e} | {r['memory_s']:.2e} "
+                  f"| {r['collective_s']:.2e} | **{r['bottleneck']}** "
+                  f"| {r['useful_flops_ratio']:.2f} "
+                  f"| {fmt_bytes(m['argument_bytes'])} "
+                  f"| {fmt_bytes(m['temp_bytes'])} |")
+        ok = sum(1 for a in sel if a["status"] == "ok")
+        sk = sum(1 for a in sel if a["status"].startswith("skip"))
+        fa = len(sel) - ok - sk
+        print(f"\n{ok} compiled, {sk} skipped (long_500k/full-attention), "
+              f"{fa} failed.")
+
+
+if __name__ == "__main__":
+    main(*(sys.argv[1:2] or ["artifacts/dryrun"]))

@@ -1,0 +1,2 @@
+from repro.configs.base import (ModelConfig, get_config, list_archs,  # noqa: F401
+                                load_all, reduced, register)

@@ -1,0 +1,11 @@
+"""Core of the paper's contribution: block-wise dynamic 8-bit quantization
+and the 8-bit optimizers built on it."""
+from repro.core.blockwise import (  # noqa: F401
+    DEFAULT_BLOCK_SIZE,
+    QuantizedTensor,
+    dequantize,
+    quantize,
+    quantization_error,
+    zeros_like_quantized,
+)
+from repro.core.qmap import get_qmap  # noqa: F401

@@ -1,0 +1,187 @@
+"""Block-wise 8-bit quantization (paper §2.1) — pure-JAX reference path.
+
+A tensor is treated as a flat 1-D sequence, padded to a multiple of the block
+size B (paper default 2048), reshaped to ``(n_blocks, B)``, and each block is
+normalized by its own absmax before nearest-code lookup in a 256-entry
+codebook.  Outliers are confined to a single block and the per-block max is
+representable with zero quantization error (for the +1.0 code).
+
+This module is the numerical source of truth; ``repro.kernels`` provides the
+Pallas TPU implementations which are tested against these functions.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import qmap as qmap_lib
+
+DEFAULT_BLOCK_SIZE = 2048
+
+
+def pad_to_blocks(flat: jax.Array, block_size: int) -> jax.Array:
+    """Pad a flat array with zeros to a whole number of blocks."""
+    n = flat.shape[0]
+    n_blocks = -(-n // block_size)
+    pad = n_blocks * block_size - n
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(n_blocks, block_size)
+
+
+def nearest_code(x_norm: jax.Array, bounds: jax.Array) -> jax.Array:
+    """Nearest-neighbour code via the 255 midpoint boundaries.
+
+    ``code = sum_j [x > b_j]`` — identical to argmin over |q - x| for a sorted
+    codebook; branchless and gather-free (the form our TPU kernel uses).
+    On the XLA path we use searchsorted (binary search) which is O(log n).
+    """
+    return jnp.searchsorted(bounds, x_norm, side="right").astype(jnp.uint8)
+
+
+def quantize_blocks(
+    blocks: jax.Array,
+    codebook: jax.Array,
+    *,
+    stochastic_rounding: bool = False,
+    key: Optional[jax.Array] = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Quantize ``(n_blocks, B)`` f32 -> (codes uint8, absmax f32 (n_blocks,)).
+
+    ``stochastic_rounding`` rounds to one of the two neighbouring codes with
+    probability proportional to proximity (paper App H notes this helps
+    AdaGrad-style wide-range states).
+    """
+    blocks = blocks.astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(blocks), axis=-1)
+    scale = jnp.where(absmax > 0, absmax, 1.0)
+    x = blocks / scale[:, None]
+    bounds = (codebook[1:] + codebook[:-1]) * 0.5
+    codes = jnp.searchsorted(bounds, x, side="right").astype(jnp.int32)
+    if stochastic_rounding:
+        if key is None:
+            raise ValueError("stochastic_rounding requires a PRNG key")
+        # Neighbouring code on the far side of x.
+        q_near = codebook[codes]
+        direction = jnp.where(x > q_near, 1, -1)
+        other = jnp.clip(codes + direction, 0, 255)
+        q_other = codebook[other]
+        span = jnp.abs(q_other - q_near)
+        p_other = jnp.where(span > 0, jnp.abs(x - q_near) / jnp.where(span > 0, span, 1.0), 0.0)
+        u = jax.random.uniform(key, x.shape)
+        codes = jnp.where(u < p_other, other, codes)
+    return codes.astype(jnp.uint8), absmax
+
+
+def dequantize_blocks(codes: jax.Array, absmax: jax.Array, codebook: jax.Array) -> jax.Array:
+    """Dequantize (codes, absmax) -> f32 blocks."""
+    return codebook[codes.astype(jnp.int32)] * absmax[:, None]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class QuantizedTensor:
+    """8-bit block-wise quantized tensor in the flat block domain.
+
+    codes:  uint8 ``(n_blocks, B)``
+    absmax: f32  ``(n_blocks,)``
+    The logical (unpadded) element count and original shape are static
+    metadata so the tensor can be restored exactly.
+    """
+
+    codes: jax.Array
+    absmax: jax.Array
+    shape: tuple  # original shape (static)
+    qmap_name: str  # static
+    signed: bool  # static
+
+    def tree_flatten(self):
+        return (self.codes, self.absmax), (self.shape, self.qmap_name, self.signed)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        codes, absmax = children
+        shape, qmap_name, signed = aux
+        return cls(codes=codes, absmax=absmax, shape=shape, qmap_name=qmap_name, signed=signed)
+
+    @property
+    def block_size(self) -> int:
+        return self.codes.shape[-1]
+
+    @property
+    def n_elements(self) -> int:
+        return int(np.prod(self.shape)) if len(self.shape) else 1
+
+    def nbytes(self) -> int:
+        return self.codes.size + self.absmax.size * 4
+
+
+def quantize(
+    x: jax.Array,
+    *,
+    qmap_name: str = "dynamic",
+    signed: bool = True,
+    block_size: int = DEFAULT_BLOCK_SIZE,
+    pad_blocks_to: int = 1,
+    stochastic_rounding: bool = False,
+    key: Optional[jax.Array] = None,
+) -> QuantizedTensor:
+    """Quantize an arbitrary-shape tensor into the flat block domain.
+
+    ``pad_blocks_to``: pad n_blocks up to a multiple (so the block dim can be
+    sharded evenly over a device axis — see DESIGN.md §4).
+    """
+    shape = tuple(x.shape)
+    codebook = jnp.asarray(qmap_lib.get_qmap(qmap_name, signed))
+    blocks = pad_to_blocks(x.reshape(-1), block_size)
+    if pad_blocks_to > 1:
+        nb = blocks.shape[0]
+        target = -(-nb // pad_blocks_to) * pad_blocks_to
+        if target != nb:
+            blocks = jnp.pad(blocks, ((0, target - nb), (0, 0)))
+    codes, absmax = quantize_blocks(
+        blocks, codebook, stochastic_rounding=stochastic_rounding, key=key
+    )
+    return QuantizedTensor(codes=codes, absmax=absmax, shape=shape,
+                           qmap_name=qmap_name, signed=signed)
+
+
+def dequantize(qt: QuantizedTensor, dtype=jnp.float32) -> jax.Array:
+    """Restore the original-shape tensor (f32 by default)."""
+    codebook = jnp.asarray(qmap_lib.get_qmap(qt.qmap_name, qt.signed))
+    flat = dequantize_blocks(qt.codes, qt.absmax, codebook).reshape(-1)
+    n = int(np.prod(qt.shape)) if qt.shape else 1
+    return flat[:n].reshape(qt.shape).astype(dtype)
+
+
+def zeros_like_quantized(
+    x: jax.Array,
+    *,
+    qmap_name: str = "dynamic",
+    signed: bool = True,
+    block_size: int = DEFAULT_BLOCK_SIZE,
+    pad_blocks_to: int = 1,
+) -> QuantizedTensor:
+    """Zero-initialized quantized state for a parameter of x's shape.
+
+    The zero code index is where 0.0 sits in the codebook; absmax is 0.
+    """
+    n = int(np.prod(x.shape)) if x.shape else 1
+    n_blocks = -(-n // block_size)
+    if pad_blocks_to > 1:
+        n_blocks = -(-n_blocks // pad_blocks_to) * pad_blocks_to
+    codebook = qmap_lib.get_qmap(qmap_name, signed)
+    zero_code = int(np.argmin(np.abs(codebook)))
+    codes = jnp.full((n_blocks, block_size), zero_code, dtype=jnp.uint8)
+    absmax = jnp.zeros((n_blocks,), dtype=jnp.float32)
+    return QuantizedTensor(codes=codes, absmax=absmax, shape=tuple(x.shape),
+                           qmap_name=qmap_name, signed=signed)
+
+
+def quantization_error(x: jax.Array, qt: QuantizedTensor) -> jax.Array:
+    """Mean absolute dequantization error (for analysis benchmarks)."""
+    return jnp.mean(jnp.abs(dequantize(qt) - x))

@@ -1,0 +1,56 @@
+"""8-bit optimizers (paper core) + 32-bit baselines.
+
+Factory usage (the "two-line change" of the paper):
+
+    opt = make_optimizer("adam8", lr=1e-3)      # instead of "adam32"
+    state = opt.init(params)
+    params, state = opt.apply(grads, state)
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+from repro.core.optim.adafactor import Adafactor, AdafactorConfig
+from repro.core.optim.base import (Full32Leaf, OptimConfig, Quant8Leaf,
+                                   default_override_32bit)
+from repro.core.optim.blockopt import Block8bitOptimizer, OptState
+
+_NAMES = {
+    # name: (algo, bits)
+    "adam8": ("adam", 8), "adamw8": ("adamw", 8), "momentum8": ("momentum", 8),
+    "lamb8": ("lamb", 8), "lars8": ("lars", 8), "adagrad8": ("adagrad", 8),
+    "adam32": ("adam", 32), "adamw32": ("adamw", 32),
+    "momentum32": ("momentum", 32), "lamb32": ("lamb", 32),
+    "lars32": ("lars", 32), "adagrad32": ("adagrad", 32),
+}
+
+
+def make_optimizer(name: str,
+                   override_32bit: Optional[Callable[[str], bool]] = None,
+                   **kwargs):
+    """Build an optimizer by name. ``adafactor32`` or any of
+    adam8/adamw8/momentum8/lamb8/lars8/adagrad8 and their 32-bit twins.
+
+    ``override_32bit``: path predicate forcing 32-bit state for matching
+    leaves (defaults to the paper's stable-embedding rule when the name ends
+    in '8'; pass ``lambda p: False`` to disable)."""
+    if name == "adafactor32":
+        import dataclasses
+        fields = {f.name for f in dataclasses.fields(AdafactorConfig)}
+        return Adafactor(AdafactorConfig(
+            **{k: v for k, v in kwargs.items() if k in fields}))
+    if name not in _NAMES:
+        raise ValueError(f"unknown optimizer '{name}'; have "
+                         f"{sorted(_NAMES) + ['adafactor32']}")
+    algo, bits = _NAMES[name]
+    cfg = OptimConfig(algo=algo, bits=bits, **kwargs)
+    if bits == 8 and override_32bit is None:
+        override_32bit = default_override_32bit
+    return Block8bitOptimizer(cfg, override_32bit=override_32bit)
+
+
+__all__ = [
+    "Adafactor", "AdafactorConfig", "Block8bitOptimizer", "Full32Leaf",
+    "OptimConfig", "OptState", "Quant8Leaf", "default_override_32bit",
+    "make_optimizer",
+]

@@ -1,0 +1,123 @@
+"""Adafactor (Shazeer & Stern, 2018) — the paper's 32-bit memory-efficient
+baseline, in the time-independent-beta2 formulation the paper compares against
+(fixed beta2, first moment enabled, externally supplied lr).
+
+Second moment is factored over the last two dims for ndim>=2 leaves
+(row/col means), full for 1-D leaves.  First moment is full f32 (beta1>0,
+matching the paper's comparison setting).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class AdafactorLeaf:
+    master: jax.Array                 # f32, model shape
+    m: jax.Array                      # f32 first moment
+    v_row: Optional[jax.Array]        # (..., rows) for ndim>=2
+    v_col: Optional[jax.Array]        # (..., cols)
+    v_full: Optional[jax.Array]       # for 1-D/0-D leaves
+
+    def tree_flatten(self):
+        return ((self.master, self.m, self.v_row, self.v_col, self.v_full), ())
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+class AdafactorState(NamedTuple):
+    step: jax.Array
+    leaves: Pytree
+
+
+@dataclasses.dataclass(frozen=True)
+class AdafactorConfig:
+    lr: float = 1e-3
+    beta1: float = 0.9
+    beta2: float = 0.999
+    eps1: float = 1e-30     # regularization inside the factored moment
+    eps2: float = 1e-3      # rms floor
+    clip_threshold: float = 1.0
+    weight_decay: float = 0.0
+
+
+class Adafactor:
+    def __init__(self, config: AdafactorConfig):
+        self.cfg = config
+
+    def init(self, params: Pytree) -> AdafactorState:
+        def leaf(p):
+            p32 = p.astype(jnp.float32)
+            if p.ndim >= 2:
+                return AdafactorLeaf(
+                    master=p32, m=jnp.zeros_like(p32),
+                    v_row=jnp.zeros(p.shape[:-1], jnp.float32),
+                    v_col=jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                    v_full=None)
+            return AdafactorLeaf(master=p32, m=jnp.zeros_like(p32),
+                                 v_row=None, v_col=None,
+                                 v_full=jnp.zeros_like(p32))
+        return AdafactorState(step=jnp.zeros((), jnp.int32),
+                              leaves=jax.tree_util.tree_map(
+                                  leaf, params))
+
+    def apply(self, grads: Pytree, state: AdafactorState, *,
+              lr: Optional[jax.Array] = None, param_dtype=jnp.float32):
+        cfg = self.cfg
+        lr = jnp.asarray(cfg.lr if lr is None else lr, jnp.float32)
+        step_f = (state.step + 1).astype(jnp.float32)
+
+        def upd(leaf: AdafactorLeaf, g):
+            g = g.astype(jnp.float32)
+            g2 = g * g + cfg.eps1
+            if leaf.v_row is not None:
+                vr = cfg.beta2 * leaf.v_row + (1 - cfg.beta2) * jnp.mean(g2, axis=-1)
+                vc = cfg.beta2 * leaf.v_col + (1 - cfg.beta2) * jnp.mean(g2, axis=-2)
+                # v̂ = outer(vr, vc) / mean(vr): rank-1 reconstruction
+                denom = jnp.clip(jnp.mean(vr, axis=-1, keepdims=True), 1e-30)
+                vhat = (vr / denom)[..., :, None] * vc[..., None, :]
+                u = g / (jnp.sqrt(vhat / (1 - cfg.beta2 ** step_f)) + cfg.eps2)
+                new = dataclasses.replace(leaf, v_row=vr, v_col=vc)
+            else:
+                vf = cfg.beta2 * leaf.v_full + (1 - cfg.beta2) * g2
+                u = g / (jnp.sqrt(vf / (1 - cfg.beta2 ** step_f)) + cfg.eps2)
+                new = dataclasses.replace(leaf, v_full=vf)
+            # update clipping (d=1) per Adafactor alg. 4
+            rms_u = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+            u = u / jnp.maximum(1.0, rms_u / cfg.clip_threshold)
+            m2 = cfg.beta1 * new.m + (1 - cfg.beta1) * u
+            p2 = new.master - lr * (m2 + cfg.weight_decay * new.master)
+            return dataclasses.replace(new, m=m2, master=p2)
+
+        new_leaves = jax.tree_util.tree_map(
+            upd, state.leaves, grads,
+            is_leaf=lambda x: isinstance(x, AdafactorLeaf))
+        new_params = jax.tree_util.tree_map(
+            lambda l: l.master.astype(param_dtype), new_leaves,
+            is_leaf=lambda x: isinstance(x, AdafactorLeaf))
+        return new_params, AdafactorState(step=state.step + 1, leaves=new_leaves)
+
+    def params_view(self, state: AdafactorState, param_dtype=jnp.float32):
+        return jax.tree_util.tree_map(
+            lambda l: l.master.astype(param_dtype), state.leaves,
+            is_leaf=lambda x: isinstance(x, AdafactorLeaf))
+
+    def state_bytes(self, state: AdafactorState) -> dict:
+        stats = master = 0
+        for leaf in jax.tree_util.tree_leaves(
+                state.leaves, is_leaf=lambda x: isinstance(x, AdafactorLeaf)):
+            stats += leaf.m.size * 4
+            for v in (leaf.v_row, leaf.v_col, leaf.v_full):
+                if v is not None:
+                    stats += v.size * 4
+            master += leaf.master.size * 4
+        return {"state_bytes": int(stats), "master_bytes": int(master)}

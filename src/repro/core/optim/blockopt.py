@@ -1,0 +1,267 @@
+"""The paper's 8-bit optimizers (and their 32-bit twins) as one engine.
+
+``Block8bitOptimizer`` implements Adam/AdamW/Momentum/LAMB/LARS/AdaGrad with
+per-leaf state that is either block-wise 8-bit quantized (``Quant8Leaf``) or
+full 32-bit (``Full32Leaf`` — used for the 32-bit baselines, for leaves below
+``min_8bit_size``, and for leaves matched by the stable-embedding override,
+paper §2.3).
+
+The update is the paper's §2 procedure: dequantize -> 32-bit math ->
+requantize, executed by the fused Pallas kernel on TPU (``impl='pallas'``) or
+by the identical jnp math elsewhere.
+
+State signedness per algorithm (paper §2.2: the strictly-positive second
+moment uses the unsigned dynamic map with the sign bit re-purposed as an
+extra fraction bit):
+
+  adam/adamw/lamb : m -> signed dynamic, r -> unsigned dynamic
+  momentum/lars   : m -> signed dynamic
+  adagrad         : accumulator -> unsigned dynamic (stored in the m slot)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import qmap as qmap_lib
+from repro.core.optim import base
+from repro.core.optim.base import (Full32Leaf, OptimConfig, Quant8Leaf,
+                                   blocks_to_param, flatten_to_blocks,
+                                   path_str)
+from repro.models.constrain import constrain as _constrain
+from repro.kernels import ops as kops
+
+Pytree = Any
+
+
+class OptState(NamedTuple):
+    step: jax.Array           # int32 scalar, number of updates applied
+    leaves: Pytree            # tree of Quant8Leaf / Full32Leaf
+
+
+def _state1_signed(algo: str) -> bool:
+    return algo != "adagrad"
+
+
+class Block8bitOptimizer:
+    """init/apply optimizer owning the f32 master copy of the params."""
+
+    def __init__(self, config: OptimConfig,
+                 override_32bit: Optional[Callable[[str], bool]] = None):
+        self.cfg = config
+        self.override_32bit = override_32bit or (lambda path: False)
+        signed1 = _state1_signed(config.algo)
+        self._qmap1 = jnp.asarray(
+            qmap_lib.get_qmap(config.qmap_m if signed1 else config.qmap_r, signed1))
+        self._qmap2 = jnp.asarray(qmap_lib.get_qmap(config.qmap_r, False))
+        self._impl = config.impl or kops.default_impl()
+
+    # ------------------------------------------------------------------ init
+    def _leaf_is_8bit(self, path: str, param: jax.Array) -> bool:
+        if self.cfg.bits == 32:
+            return False
+        if param.size < self.cfg.min_8bit_size:
+            return False
+        return not self.override_32bit(path)
+
+    def init(self, params: Pytree) -> OptState:
+        cfg = self.cfg
+
+        def init_leaf(path, p):
+            path = path_str(path)
+            if self._leaf_is_8bit(path, p):
+                # master stays in PARAM SHAPE (sharded like the param) so the
+                # fwd/bwd sees per-layer gathers inside the scan; only the
+                # 8-bit statistics live in the flat block domain.  (The
+                # flat-master variant all-gathered the whole tensor per step:
+                # EXPERIMENTS.md §Perf iteration A2.)
+                master = p.astype(jnp.dtype(cfg.master_dtype))
+                nb = base.n_blocks_for(p.shape, cfg.block_size,
+                                       cfg.shard_multiple)
+                bs = cfg.block_size
+                zc1 = jnp.asarray(jnp.argmin(jnp.abs(self._qmap1)), jnp.uint8)
+                zc2 = jnp.asarray(jnp.argmin(jnp.abs(self._qmap2)), jnp.uint8)
+                second = cfg.has_second_moment
+                return Quant8Leaf(
+                    master=master,
+                    codes_m=jnp.full((nb, bs), zc1, jnp.uint8),
+                    absmax_m=jnp.zeros((nb,), jnp.float32),
+                    codes_r=jnp.full((nb, bs), zc2, jnp.uint8) if second else None,
+                    absmax_r=jnp.zeros((nb,), jnp.float32) if second else None,
+                    shape=tuple(p.shape), n=int(p.size))
+            master = p.astype(jnp.float32)
+            return Full32Leaf(
+                master=master,
+                m=jnp.zeros_like(master),
+                r=jnp.zeros_like(master) if cfg.has_second_moment else None)
+
+        leaves = jax.tree_util.tree_map_with_path(init_leaf, params)
+        return OptState(step=jnp.zeros((), jnp.int32), leaves=leaves)
+
+    # ------------------------------------------------------------- algorithms
+    def _math32(self, g, p, m, r, lr, step_f):
+        """Shared 32-bit update math; returns (m', r', p')."""
+        cfg = self.cfg
+        algo = cfg.algo
+        if algo in ("adam", "adamw", "lamb"):
+            m2 = cfg.beta1 * m + (1.0 - cfg.beta1) * g
+            r2 = cfg.beta2 * r + (1.0 - cfg.beta2) * g * g
+            c1 = 1.0 - cfg.beta1 ** step_f
+            c2 = 1.0 - cfg.beta2 ** step_f
+            upd = (m2 / c1) / (jnp.sqrt(r2 / c2) + cfg.eps) + cfg.weight_decay * p
+            if algo == "lamb":
+                pn = jnp.sqrt(jnp.sum(p * p))
+                un = jnp.sqrt(jnp.sum(upd * upd))
+                trust = jnp.where((pn > 0) & (un > 0), pn / jnp.where(un > 0, un, 1.0), 1.0)
+                upd = trust * upd
+            return m2, r2, p - lr * upd
+        if algo == "momentum":
+            m2 = cfg.beta1 * m + (g + cfg.weight_decay * p)
+            return m2, None, p - lr * m2
+        if algo == "lars":
+            pn = jnp.sqrt(jnp.sum(p * p))
+            gn = jnp.sqrt(jnp.sum(g * g))
+            denom = gn + cfg.weight_decay * pn + 1e-12
+            local = jnp.where(pn > 0, cfg.trust_coeff * pn / denom, 1.0)
+            m2 = cfg.beta1 * m + local * (g + cfg.weight_decay * p)
+            return m2, None, p - lr * m2
+        if algo == "adagrad":
+            # accumulator lives in the m slot (unsigned map)
+            m2 = m + g * g
+            upd = g / (jnp.sqrt(m2) + cfg.eps) + cfg.weight_decay * p
+            return m2, None, p - lr * upd
+        raise ValueError(self.cfg.algo)
+
+    # ---------------------------------------------------------------- update
+    def _apply_quant8(self, leaf: Quant8Leaf, g: jax.Array, lr, step_f, key):
+        cfg = self.cfg
+        gb = flatten_to_blocks(g, cfg.block_size, cfg.shard_multiple)
+        # Tell SPMD the reshard target up front: the flat block domain is
+        # sharded over ALL mesh axes (EXPERIMENTS.md §Perf A1/A2).
+        gb = _constrain(gb, "all", None)
+
+        mdt = jnp.dtype(cfg.master_dtype)
+        mb = flatten_to_blocks(leaf.master, cfg.block_size, cfg.shard_multiple)
+        mb = _constrain(mb, "all", None)
+
+        def back(p2_flat):
+            return blocks_to_param(p2_flat, leaf.shape, leaf.n, mdt)
+
+        use_kernel = (self._impl != "jnp" and cfg.algo in ("adam", "adamw", "momentum")
+                      and cfg.blockwise_norm and not cfg.stochastic_rounding)
+        if use_kernel and cfg.algo in ("adam", "adamw"):
+            p2, cm, am, cr, ar = kops.adam8_update(
+                mb, gb, leaf.codes_m, leaf.absmax_m, leaf.codes_r,
+                leaf.absmax_r, self._qmap1, self._qmap2, lr=lr, beta1=cfg.beta1,
+                beta2=cfg.beta2, eps=cfg.eps, weight_decay=cfg.weight_decay,
+                step=step_f, impl=self._impl)
+            return dataclasses.replace(leaf, master=back(p2), codes_m=cm,
+                                       absmax_m=am, codes_r=cr, absmax_r=ar)
+        if use_kernel and cfg.algo == "momentum":
+            p2, cm, am = kops.momentum8_update(
+                mb, gb, leaf.codes_m, leaf.absmax_m,
+                self._qmap1, lr=lr, beta1=cfg.beta1,
+                weight_decay=cfg.weight_decay, step=step_f, impl=self._impl)
+            return dataclasses.replace(leaf, master=back(p2), codes_m=cm,
+                                       absmax_m=am)
+
+        # jnp path (also used for lamb/lars/adagrad and all ablation modes)
+        from repro.core import blockwise as bw
+        m = bw.dequantize_blocks(leaf.codes_m, leaf.absmax_m, self._qmap1)
+        r = (bw.dequantize_blocks(leaf.codes_r, leaf.absmax_r, self._qmap2)
+             if leaf.codes_r is not None else None)
+        m2, r2, p2 = self._math32(gb, mb.astype(jnp.float32), m, r,
+                                  lr, step_f)
+        p2 = back(p2)
+
+        def requant(x, cb, key):
+            if cfg.blockwise_norm:
+                return bw.quantize_blocks(
+                    x, cb, stochastic_rounding=cfg.stochastic_rounding, key=key)
+            # tensor-wise ablation: single absmax for the whole tensor
+            gmax = jnp.max(jnp.abs(x))
+            scale = jnp.where(gmax > 0, gmax, 1.0)
+            bounds = (cb[1:] + cb[:-1]) * 0.5
+            codes = jnp.searchsorted(bounds, x / scale, side="right").astype(jnp.uint8)
+            absmax = jnp.full((x.shape[0],), gmax, jnp.float32)
+            return codes, absmax
+
+        k1 = k2 = None
+        if cfg.stochastic_rounding and key is not None:
+            k1, k2 = jax.random.split(key)
+        cm, am = requant(m2, self._qmap1, k1)
+        new = dataclasses.replace(leaf, master=p2, codes_m=cm, absmax_m=am)
+        if r2 is not None:
+            cr, ar = requant(r2, self._qmap2, k2)
+            new = dataclasses.replace(new, codes_r=cr, absmax_r=ar)
+        return new
+
+    def _apply_full32(self, leaf: Full32Leaf, g: jax.Array, lr, step_f):
+        g = g.astype(jnp.float32)
+        r = leaf.r if leaf.r is not None else None
+        m2, r2, p2 = self._math32(g, leaf.master, leaf.m, r, lr, step_f)
+        return Full32Leaf(master=p2, m=m2, r=r2)
+
+    def apply(self, grads: Pytree, state: OptState, *,
+              lr: Optional[jax.Array] = None,
+              param_dtype=jnp.float32,
+              key: Optional[jax.Array] = None) -> tuple[Pytree, OptState]:
+        """One optimizer step. Returns (new model-shape params, new state).
+
+        ``lr`` overrides cfg.lr (schedules); ``param_dtype`` is the dtype of
+        the returned model params (the f32 master stays in the state).
+        """
+        lr = jnp.asarray(self.cfg.lr if lr is None else lr, jnp.float32)
+        step_f = (state.step + 1).astype(jnp.float32)
+
+        leaf_idx = [0]
+
+        def upd(leaf, g):
+            i = leaf_idx[0]
+            leaf_idx[0] += 1
+            k = jax.random.fold_in(key, i) if key is not None else None
+            if isinstance(leaf, Quant8Leaf):
+                return self._apply_quant8(leaf, g, lr, step_f, k)
+            return self._apply_full32(leaf, g, lr, step_f)
+
+        new_leaves = jax.tree_util.tree_map(
+            upd, state.leaves, grads,
+            is_leaf=lambda x: isinstance(x, (Quant8Leaf, Full32Leaf)))
+
+        def to_param(leaf):
+            return leaf.master.astype(param_dtype)
+
+        new_params = jax.tree_util.tree_map(
+            to_param, new_leaves,
+            is_leaf=lambda x: isinstance(x, (Quant8Leaf, Full32Leaf)))
+        return new_params, OptState(step=state.step + 1, leaves=new_leaves)
+
+    def params_view(self, state: OptState, param_dtype=jnp.float32) -> Pytree:
+        """Model-shape params reconstructed from the (sharded, flat-block)
+        master copies — ZeRO-3 style: no persistent model-shape duplicate;
+        XLA inserts the all-gather at use sites."""
+        def to_param(leaf):
+            return leaf.master.astype(param_dtype)
+        return jax.tree_util.tree_map(
+            to_param, state.leaves,
+            is_leaf=lambda x: isinstance(x, (Quant8Leaf, Full32Leaf)))
+
+    # ------------------------------------------------------------- utilities
+    def state_bytes(self, state: OptState) -> dict:
+        """Measured memory of optimizer statistics vs 32-bit equivalent."""
+        stats = master = 0
+        for leaf in jax.tree_util.tree_leaves(
+                state.leaves,
+                is_leaf=lambda x: isinstance(x, (Quant8Leaf, Full32Leaf))):
+            if isinstance(leaf, Quant8Leaf):
+                stats += leaf.codes_m.size + leaf.absmax_m.size * 4
+                if leaf.codes_r is not None:
+                    stats += leaf.codes_r.size + leaf.absmax_r.size * 4
+                master += leaf.master.size * leaf.master.dtype.itemsize
+            else:
+                stats += leaf.m.size * 4 + (leaf.r.size * 4 if leaf.r is not None else 0)
+                master += leaf.master.size * 4
+        return {"state_bytes": int(stats), "master_bytes": int(master)}

@@ -1,0 +1,168 @@
+"""Quantization codebooks ("qmaps") for 8-bit optimizer states.
+
+All maps are 256-entry sorted float32 arrays over [-1, 1] (signed) or [0, 1]
+(unsigned).  The dynamic (tree) maps follow the construction of the released
+bitsandbytes implementation (`create_dynamic_map`), which is the reference for
+the paper "8-bit Optimizers via Block-wise Quantization" (Dettmers et al.,
+ICLR 2022):
+
+  * 1 sign bit (signed maps only),
+  * the number of leading zero bits selects a decimal exponent 10^(i - E + 1)
+    for E exponent levels,
+  * the remaining bits linearly quantize the fraction over [0.1, 1].
+
+The unsigned "dynamic quantization" variant (paper §2.2) re-purposes the sign
+bit as one extra fraction bit for the strictly-positive second Adam state.
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+# Number of dynamic-exponent levels used by the reference implementation.
+_MAX_EXP_BITS = 7
+_TOTAL_BITS = 8
+
+
+def _dynamic_levels(signed: bool, inverse: bool = False) -> list[float]:
+    """Positive values of the dynamic (tree) map, before sign mirroring."""
+    data: list[float] = []
+    non_sign_bits = _TOTAL_BITS - 1
+    for i in range(_MAX_EXP_BITS):
+        # Fraction slots double per level; unsigned maps get one extra bit.
+        n_frac = 2 ** (i + non_sign_bits - _MAX_EXP_BITS) * (1 if signed else 2)
+        if n_frac < 1:
+            continue
+        boundaries = np.linspace(0.1, 1.0, n_frac + 1)
+        means = (boundaries[:-1] + boundaries[1:]) / 2.0
+        if inverse:
+            # Inverse dynamic quantization (paper App F.1): swap exponent
+            # order so the *small*-magnitude end gets the most fraction bits.
+            exponent = 10.0 ** (-i)
+        else:
+            exponent = 10.0 ** (-(_MAX_EXP_BITS - 1) + i)
+        data += (exponent * means).tolist()
+    return data
+
+
+def _finalize(values: list[float], signed: bool) -> np.ndarray:
+    values = list(values)
+    values.append(0.0)
+    values.append(1.0)
+    if signed:
+        target = 256
+    else:
+        target = 256
+    assert len(values) <= target, len(values)
+    # Pad (never needed for the standard configs, kept for safety/parity with
+    # the reference implementation which pads with zeros).
+    values += [0.0] * (target - len(values))
+    out = np.sort(np.asarray(values, dtype=np.float32))
+    assert out.shape == (256,)
+    return out
+
+
+@functools.lru_cache(maxsize=None)
+def dynamic_map(signed: bool = True) -> np.ndarray:
+    """Dynamic (tree) quantization map. Signed: Adam m / momentum. Unsigned:
+    Adam r (second moment), with the sign bit re-used as a fraction bit."""
+    pos = _dynamic_levels(signed=signed)
+    if signed:
+        vals = pos + [-v for v in pos]
+    else:
+        vals = pos
+    return _finalize(vals, signed)
+
+
+@functools.lru_cache(maxsize=None)
+def inverse_dynamic_map(signed: bool = True) -> np.ndarray:
+    """Inverse dynamic quantization (paper Appendix F.1)."""
+    pos = _dynamic_levels(signed=signed, inverse=True)
+    if signed:
+        vals = pos + [-v for v in pos]
+    else:
+        vals = pos
+    return _finalize(vals, signed)
+
+
+@functools.lru_cache(maxsize=None)
+def linear_map(signed: bool = True) -> np.ndarray:
+    """Linear quantization baseline (ablation rows of paper Table 3)."""
+    if signed:
+        return np.linspace(-1.0, 1.0, 256).astype(np.float32)
+    return np.linspace(0.0, 1.0, 256).astype(np.float32)
+
+
+def _norm_ppf(p: np.ndarray) -> np.ndarray:
+    """Inverse CDF of the standard normal (Acklam's rational approximation).
+
+    scipy is not available in the container; this approximation has
+    |rel err| < 1.15e-9 which is far below 8-bit resolution.
+    """
+    p = np.asarray(p, dtype=np.float64)
+    a = [-3.969683028665376e01, 2.209460984245205e02, -2.759285104469687e02,
+         1.383577518672690e02, -3.066479806614716e01, 2.506628277459239e00]
+    b = [-5.447609879822406e01, 1.615858368580409e02, -1.556989798598866e02,
+         6.680131188771972e01, -1.328068155288572e01]
+    c = [-7.784894002430293e-03, -3.223964580411365e-01, -2.400758277161838e00,
+         -2.549732539343734e00, 4.374664141464968e00, 2.938163982698783e00]
+    d = [7.784695709041462e-03, 3.224671290700398e-01, 2.445134137142996e00,
+         3.754408661907416e00]
+    plow, phigh = 0.02425, 1 - 0.02425
+    out = np.empty_like(p)
+    lo = p < plow
+    hi = p > phigh
+    mid = ~(lo | hi)
+    if lo.any():
+        q = np.sqrt(-2 * np.log(p[lo]))
+        out[lo] = (((((c[0] * q + c[1]) * q + c[2]) * q + c[3]) * q + c[4]) * q + c[5]) / \
+                  ((((d[0] * q + d[1]) * q + d[2]) * q + d[3]) * q + 1)
+    if hi.any():
+        q = np.sqrt(-2 * np.log(1 - p[hi]))
+        out[hi] = -(((((c[0] * q + c[1]) * q + c[2]) * q + c[3]) * q + c[4]) * q + c[5]) / \
+                   ((((d[0] * q + d[1]) * q + d[2]) * q + d[3]) * q + 1)
+    if mid.any():
+        q = p[mid] - 0.5
+        r = q * q
+        out[mid] = (((((a[0] * r + a[1]) * r + a[2]) * r + a[3]) * r + a[4]) * r + a[5]) * q / \
+                   (((((b[0] * r + b[1]) * r + b[2]) * r + b[3]) * r + b[4]) * r + 1)
+    return out
+
+
+@functools.lru_cache(maxsize=None)
+def normal_quantile_map(signed: bool = True) -> np.ndarray:
+    """Quantile map per paper Eq. 5 with X = N(0,1) (or |N(0,1)| unsigned)."""
+    k = 256
+    if signed:
+        # Eq. 5: midpoints of 2^k + 1 equally spaced quantiles.
+        qs = _norm_ppf(np.linspace(1.0 / (k + 1), k / (k + 1), k + 1))
+        q = (qs[:-1] + qs[1:]) / 2.0
+    else:
+        # Half-normal: quantiles of |N(0,1)| via Phi^-1((1+p)/2).
+        ps = np.linspace(1.0 / (k + 1), k / (k + 1), k + 1)
+        qs = _norm_ppf((1.0 + ps) / 2.0)
+        q = (qs[:-1] + qs[1:]) / 2.0
+    q = q / np.max(np.abs(q))
+    return np.sort(q.astype(np.float32))
+
+
+QMAPS = {
+    "dynamic": dynamic_map,
+    "inverse_dynamic": inverse_dynamic_map,
+    "linear": linear_map,
+    "quantile_normal": normal_quantile_map,
+}
+
+
+def get_qmap(name: str, signed: bool) -> np.ndarray:
+    """Return the 256-entry sorted codebook for `name`."""
+    try:
+        return QMAPS[name](signed=signed)
+    except KeyError:
+        raise ValueError(f"unknown qmap '{name}'; have {sorted(QMAPS)}") from None
+
+
+def boundaries(qmap: np.ndarray) -> np.ndarray:
+    """255 nearest-neighbour decision boundaries (midpoints) of a sorted map."""
+    return ((qmap[1:] + qmap[:-1]) / 2.0).astype(np.float32)

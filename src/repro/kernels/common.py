@@ -1,0 +1,80 @@
+"""Shared in-kernel helpers for the 8-bit optimizer Pallas kernels.
+
+TPU adaptation notes (DESIGN.md §3): the CUDA kernels of the paper use
+per-thread binary search + shared-memory LUTs.  On TPU we use gather-free
+formulations:
+
+  * nearest-code search: ``code = sum_j [x >= b_j]`` over the 255 midpoint
+    boundaries — broadcast compare + integer sum on the VPU, chunked over the
+    codebook axis so the materialized compare tile stays small in VMEM.
+  * codebook lookup: chunked one-hot contraction ``one_hot(code) @ qmap`` —
+    the MXU-friendly analogue of an SRAM LUT.
+
+Codebook/boundary inputs are padded to 256 lanes (boundary 256 = +inf) so the
+last dim is hardware-aligned.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+CODEBOOK_SIZE = 256
+# Codebook-axis chunk: bounds the (tile_elems, CHUNK) compare/one-hot
+# materialization in VMEM.
+CHUNK = 64
+
+
+def padded_bounds(codebook) -> jax.Array:
+    """255 midpoint boundaries padded with +inf to 256 lanes, shape (1, 256)."""
+    cb = jnp.asarray(codebook, dtype=jnp.float32)
+    b = (cb[1:] + cb[:-1]) * 0.5
+    b = jnp.concatenate([b, jnp.full((1,), jnp.inf, jnp.float32)])
+    return b.reshape(1, CODEBOOK_SIZE)
+
+
+def padded_qmap(codebook) -> jax.Array:
+    """Codebook as (1, 256) f32."""
+    return jnp.asarray(codebook, dtype=jnp.float32).reshape(1, CODEBOOK_SIZE)
+
+
+def encode(x_norm: jax.Array, bounds_row: jax.Array) -> jax.Array:
+    """Nearest-code indices for normalized values in [-1, 1].
+
+    x_norm: (..., N) f32; bounds_row: (1, 256) f32 (last = +inf).
+    Returns int32 codes. ``sum_j [x >= b_j]`` == searchsorted(side='right').
+    """
+    flat = x_norm.reshape(-1)
+    acc = jnp.zeros(flat.shape, dtype=jnp.int32)
+    for c in range(0, CODEBOOK_SIZE, CHUNK):
+        chunk = jax.lax.dynamic_slice(bounds_row, (0, c), (1, CHUNK))  # (1, CHUNK)
+        acc = acc + jnp.sum(
+            (flat[:, None] >= chunk).astype(jnp.int32), axis=-1
+        )
+    return acc.reshape(x_norm.shape)
+
+
+def decode(codes: jax.Array, qmap_row: jax.Array) -> jax.Array:
+    """Codebook lookup via chunked one-hot contraction (MXU-friendly).
+
+    codes: (..., N) int32 in [0, 255]; qmap_row: (1, 256) f32.
+    """
+    flat = codes.reshape(-1)
+    acc = jnp.zeros(flat.shape, dtype=jnp.float32)
+    for c in range(0, CODEBOOK_SIZE, CHUNK):
+        chunk = jax.lax.dynamic_slice(qmap_row, (0, c), (1, CHUNK))[0]  # (CHUNK,)
+        onehot = (flat[:, None] == (c + jax.lax.iota(jnp.int32, CHUNK))[None, :])
+        acc = acc + jax.lax.dot(
+            onehot.astype(jnp.float32), chunk[:, None],
+            preferred_element_type=jnp.float32,
+        )[:, 0]
+    return acc.reshape(codes.shape)
+
+
+def block_requantize(x: jax.Array, bounds_row: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Per-row absmax normalize + encode. x: (R, B) f32 ->
+    (codes int32 (R, B), absmax f32 (R, 1))."""
+    absmax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.where(absmax > 0, absmax, 1.0)
+    codes = encode(x / scale, bounds_row)
+    return codes, absmax

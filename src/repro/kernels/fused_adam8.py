@@ -1,0 +1,123 @@
+"""Pallas TPU kernel: fused 8-bit Adam/AdamW update (the paper's hot kernel).
+
+One HBM pass per state tensor: stream codes(m), codes(r), absmax(m), absmax(r),
+param, grad in; dequantize + 32-bit Adam math + per-block absmax + requantize
+happen entirely in VMEM/VREGs; stream param', codes', absmax' out.  This is
+the TPU realization of the paper's "8-bit to 32-bit conversion
+element-by-element in registers" (§2) — see DESIGN.md §3 for the mapping.
+
+Arithmetic intensity is ~O(600) VPU/MXU ops per ~11 bytes streamed; on v5e the
+kernel sits on the HBM-bandwidth roofline (the codebook search adds compute
+but stays under the memory time for ROWS<=8; see EXPERIMENTS.md §Perf napkin
+math).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.kernels import common
+
+DEFAULT_ROWS = 4
+
+# scalar vector layout: [lr, beta1, beta2, eps, weight_decay, step, 0, 0]
+N_SCALARS = 8
+
+
+def _adam8_kernel(
+    scal_ref,       # (1, 8) f32
+    qm_ref,         # (1, 256) signed qmap
+    bm_ref,         # (1, 256) signed bounds (+inf padded)
+    qr_ref,         # (1, 256) unsigned qmap
+    br_ref,         # (1, 256) unsigned bounds
+    p_ref,          # (ROWS, B) f32
+    g_ref,          # (ROWS, B) f32/bf16
+    cm_ref,         # (ROWS, B) uint8
+    am_ref,         # (ROWS, 1) f32
+    cr_ref,         # (ROWS, B) uint8
+    ar_ref,         # (ROWS, 1) f32
+    p_out,          # (ROWS, B) f32
+    cm_out, am_out, cr_out, ar_out,
+):
+    lr = scal_ref[0, 0]
+    b1 = scal_ref[0, 1]
+    b2 = scal_ref[0, 2]
+    eps = scal_ref[0, 3]
+    wd = scal_ref[0, 4]
+    step = scal_ref[0, 5]
+
+    g = g_ref[...].astype(jnp.float32)
+    p = p_ref[...].astype(jnp.float32)
+
+    # ---- dequantize (one-hot contraction on MXU) ----
+    m = common.decode(cm_ref[...].astype(jnp.int32), qm_ref[...]) * am_ref[...]
+    r = common.decode(cr_ref[...].astype(jnp.int32), qr_ref[...]) * ar_ref[...]
+
+    # ---- 32-bit Adam math in registers ----
+    m = b1 * m + (1.0 - b1) * g
+    r = b2 * r + (1.0 - b2) * g * g
+    c1 = 1.0 - jnp.power(b1, step)
+    c2 = 1.0 - jnp.power(b2, step)
+    update = (m / c1) / (jnp.sqrt(r / c2) + eps) + wd * p
+    p_out[...] = (p - lr * update).astype(p_out.dtype)
+
+    # ---- requantize (per-block absmax is a row reduction in VMEM) ----
+    cm_new, am_new = common.block_requantize(m, bm_ref[...])
+    cr_new, ar_new = common.block_requantize(r, br_ref[...])
+    cm_out[...] = cm_new.astype(jnp.uint8)
+    am_out[...] = am_new
+    cr_out[...] = cr_new.astype(jnp.uint8)
+    ar_out[...] = ar_new
+
+
+@functools.partial(jax.jit, static_argnames=("rows", "interpret"))
+def adam8_update(
+    p: jax.Array,         # (n_blocks, B) f32
+    g: jax.Array,         # (n_blocks, B)
+    codes_m: jax.Array,   # (n_blocks, B) uint8
+    absmax_m: jax.Array,  # (n_blocks,) f32
+    codes_r: jax.Array,
+    absmax_r: jax.Array,
+    qmap_m: jax.Array,    # (256,)
+    qmap_r: jax.Array,    # (256,)
+    scalars: jax.Array,   # (8,) f32: lr, b1, b2, eps, wd, step
+    *,
+    rows: int = DEFAULT_ROWS,
+    interpret: bool = True,
+):
+    n_blocks, bsz = p.shape
+    assert n_blocks % rows == 0, (n_blocks, rows)
+    qm, qr = qmap_m, qmap_r
+    consts = (
+        common.padded_qmap(qm),
+        common.padded_bounds(qm),
+        common.padded_qmap(qr),
+        common.padded_bounds(qr),
+    )
+    grid = (n_blocks // rows,)
+    row_spec = pl.BlockSpec((rows, bsz), lambda i: (i, 0))
+    one_spec = pl.BlockSpec((rows, 1), lambda i: (i, 0))
+    const_spec = pl.BlockSpec((1, common.CODEBOOK_SIZE), lambda i: (0, 0))
+    scal_spec = pl.BlockSpec((1, N_SCALARS), lambda i: (0, 0))
+    outs = pl.pallas_call(
+        _adam8_kernel,
+        grid=grid,
+        in_specs=[scal_spec, const_spec, const_spec, const_spec, const_spec,
+                  row_spec, row_spec, row_spec, one_spec, row_spec, one_spec],
+        out_specs=[row_spec, row_spec, one_spec, row_spec, one_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_blocks, bsz), jnp.float32),
+            jax.ShapeDtypeStruct((n_blocks, bsz), jnp.uint8),
+            jax.ShapeDtypeStruct((n_blocks, 1), jnp.float32),
+            jax.ShapeDtypeStruct((n_blocks, bsz), jnp.uint8),
+            jax.ShapeDtypeStruct((n_blocks, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(scalars.reshape(1, N_SCALARS), *consts,
+      p, g, codes_m, absmax_m[:, None], codes_r, absmax_r[:, None])
+    p_new, cm, am, cr, ar = outs
+    return p_new, cm, am[:, 0], cr, ar[:, 0]

@@ -1,0 +1,69 @@
+"""Pallas TPU kernel: fused 8-bit SGD-with-Momentum update (paper Eq. 1)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.kernels import common
+
+DEFAULT_ROWS = 4
+N_SCALARS = 8  # [lr, beta1, _, _, weight_decay, step, 0, 0] (layout shared with adam)
+
+
+def _momentum8_kernel(scal_ref, qm_ref, bm_ref, p_ref, g_ref, cm_ref, am_ref,
+                      p_out, cm_out, am_out):
+    lr = scal_ref[0, 0]
+    b1 = scal_ref[0, 1]
+    wd = scal_ref[0, 4]
+
+    p = p_ref[...].astype(jnp.float32)
+    g = g_ref[...].astype(jnp.float32) + wd * p
+    m = common.decode(cm_ref[...].astype(jnp.int32), qm_ref[...]) * am_ref[...]
+    m = b1 * m + g
+    p_out[...] = (p - lr * m).astype(p_out.dtype)
+    cm_new, am_new = common.block_requantize(m, bm_ref[...])
+    cm_out[...] = cm_new.astype(jnp.uint8)
+    am_out[...] = am_new
+
+
+@functools.partial(jax.jit, static_argnames=("rows", "interpret"))
+def momentum8_update(
+    p: jax.Array,
+    g: jax.Array,
+    codes_m: jax.Array,
+    absmax_m: jax.Array,
+    qmap_m: jax.Array,
+    scalars: jax.Array,
+    *,
+    rows: int = DEFAULT_ROWS,
+    interpret: bool = True,
+):
+    n_blocks, bsz = p.shape
+    assert n_blocks % rows == 0, (n_blocks, rows)
+    qm = qmap_m
+    grid = (n_blocks // rows,)
+    row_spec = pl.BlockSpec((rows, bsz), lambda i: (i, 0))
+    one_spec = pl.BlockSpec((rows, 1), lambda i: (i, 0))
+    const_spec = pl.BlockSpec((1, common.CODEBOOK_SIZE), lambda i: (0, 0))
+    scal_spec = pl.BlockSpec((1, N_SCALARS), lambda i: (0, 0))
+    outs = pl.pallas_call(
+        _momentum8_kernel,
+        grid=grid,
+        in_specs=[scal_spec, const_spec, const_spec,
+                  row_spec, row_spec, row_spec, one_spec],
+        out_specs=[row_spec, row_spec, one_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_blocks, bsz), jnp.float32),
+            jax.ShapeDtypeStruct((n_blocks, bsz), jnp.uint8),
+            jax.ShapeDtypeStruct((n_blocks, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(scalars.reshape(1, N_SCALARS),
+      common.padded_qmap(qm), common.padded_bounds(qm),
+      p, g, codes_m, absmax_m[:, None])
+    p_new, cm, am = outs
+    return p_new, cm, am[:, 0]

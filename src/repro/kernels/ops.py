@@ -1,0 +1,105 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+``impl`` selects the execution path:
+  * "pallas"   — pl.pallas_call, compiled for TPU (interpret=False).
+  * "interpret"— pl.pallas_call with interpret=True (CPU validation path).
+  * "jnp"      — the pure-jnp oracle from ref.py (XLA codegen; used inside the
+                 distributed train step so the 512-device dry-run doesn't have
+                 to lower the interpreter graph — see DESIGN.md §3).
+
+``default_impl()`` picks "pallas" on TPU and "jnp" elsewhere.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.blockwise_dequant import dequantize_blockwise as _dequant_pallas
+from repro.kernels.blockwise_quant import quantize_blockwise as _quant_pallas
+from repro.kernels.fused_adam8 import adam8_update as _adam8_pallas
+from repro.kernels.fused_momentum8 import momentum8_update as _momentum8_pallas
+
+
+def default_impl() -> str:
+    return "pallas" if jax.default_backend() == "tpu" else "jnp"
+
+
+def _pad_rows(arrs, n_blocks: int, rows: int):
+    """Pad the block dim of each (n_blocks, ...) array to a multiple of rows."""
+    target = -(-n_blocks // rows) * rows
+    if target == n_blocks:
+        return arrs, n_blocks
+    pad = target - n_blocks
+    out = []
+    for a in arrs:
+        cfg = [(0, pad)] + [(0, 0)] * (a.ndim - 1)
+        out.append(jnp.pad(a, cfg))
+    return out, target
+
+
+def quantize_blockwise(x, codebook, *, impl: str | None = None, rows: int = 8):
+    impl = impl or default_impl()
+    if impl == "jnp":
+        return ref.quantize_ref(x, codebook)
+    nb = x.shape[0]
+    (x,), _ = _pad_rows([x], nb, rows)
+    codes, absmax = _quant_pallas(x, codebook, rows=rows,
+                                  interpret=(impl == "interpret"))
+    return codes[:nb], absmax[:nb]
+
+
+def dequantize_blockwise(codes, absmax, codebook, *, impl: str | None = None,
+                         rows: int = 8, dtype=jnp.float32):
+    impl = impl or default_impl()
+    if impl == "jnp":
+        return ref.dequantize_ref(codes, absmax, codebook, dtype)
+    nb = codes.shape[0]
+    (codes, absmax), _ = _pad_rows([codes, absmax], nb, rows)
+    out = _dequant_pallas(codes, absmax, codebook, rows=rows,
+                          interpret=(impl == "interpret"), dtype=dtype)
+    return out[:nb]
+
+
+def adam8_update(p, g, codes_m, absmax_m, codes_r, absmax_r, qmap_m, qmap_r,
+                 *, lr, beta1, beta2, eps, weight_decay, step,
+                 impl: str | None = None, rows: int = 4):
+    """Fused 8-bit Adam step in the flat block domain. Returns
+    (p_new, codes_m', absmax_m', codes_r', absmax_r')."""
+    impl = impl or default_impl()
+    if impl == "jnp":
+        return ref.adam8_ref(p, g, codes_m, absmax_m, codes_r, absmax_r,
+                             qmap_m, qmap_r, lr=lr, beta1=beta1, beta2=beta2,
+                             eps=eps, weight_decay=weight_decay, step=step)
+    scalars = jnp.stack([
+        jnp.asarray(lr, jnp.float32), jnp.asarray(beta1, jnp.float32),
+        jnp.asarray(beta2, jnp.float32), jnp.asarray(eps, jnp.float32),
+        jnp.asarray(weight_decay, jnp.float32), jnp.asarray(step, jnp.float32),
+        jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)])
+    nb = p.shape[0]
+    (p, g, codes_m, absmax_m, codes_r, absmax_r), _ = _pad_rows(
+        [p, g, codes_m, absmax_m, codes_r, absmax_r], nb, rows)
+    p2, cm, am, cr, ar = _adam8_pallas(
+        p, g, codes_m, absmax_m, codes_r, absmax_r, qmap_m, qmap_r, scalars,
+        rows=rows, interpret=(impl == "interpret"))
+    return p2[:nb], cm[:nb], am[:nb], cr[:nb], ar[:nb]
+
+
+def momentum8_update(p, g, codes_m, absmax_m, qmap_m,
+                     *, lr, beta1, weight_decay, step,
+                     impl: str | None = None, rows: int = 4):
+    impl = impl or default_impl()
+    if impl == "jnp":
+        return ref.momentum8_ref(p, g, codes_m, absmax_m, qmap_m, lr=lr,
+                                 beta1=beta1, weight_decay=weight_decay,
+                                 step=step)
+    scalars = jnp.stack([
+        jnp.asarray(lr, jnp.float32), jnp.asarray(beta1, jnp.float32),
+        jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32),
+        jnp.asarray(weight_decay, jnp.float32), jnp.asarray(step, jnp.float32),
+        jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)])
+    nb = p.shape[0]
+    (p, g, codes_m, absmax_m), _ = _pad_rows([p, g, codes_m, absmax_m], nb, rows)
+    p2, cm, am = _momentum8_pallas(p, g, codes_m, absmax_m, qmap_m, scalars,
+                                   rows=rows, interpret=(impl == "interpret"))
+    return p2[:nb], cm[:nb], am[:nb]

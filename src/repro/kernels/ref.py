@@ -1,0 +1,95 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the numerical source of truth the kernels are tested against
+(tests/test_kernels.py sweeps shapes/dtypes and asserts allclose).
+All functions operate in the flat block domain: state tensors are
+``(n_blocks, B)``, absmax is ``(n_blocks,)``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _bounds(codebook: jax.Array) -> jax.Array:
+    return (codebook[1:] + codebook[:-1]) * 0.5
+
+
+def quantize_ref(x: jax.Array, codebook: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """(n_blocks, B) f32 -> (codes uint8, absmax f32)."""
+    x = x.astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(x), axis=-1)
+    scale = jnp.where(absmax > 0, absmax, 1.0)
+    xn = x / scale[:, None]
+    codes = jnp.searchsorted(_bounds(codebook), xn, side="right")
+    return codes.astype(jnp.uint8), absmax
+
+
+def dequantize_ref(codes: jax.Array, absmax: jax.Array, codebook: jax.Array,
+                   dtype=jnp.float32) -> jax.Array:
+    return (codebook[codes.astype(jnp.int32)] * absmax[:, None]).astype(dtype)
+
+
+def adam8_ref(
+    p: jax.Array,            # (n_blocks, B) f32 master params (flat domain)
+    g: jax.Array,            # (n_blocks, B) grads
+    codes_m: jax.Array,      # (n_blocks, B) uint8
+    absmax_m: jax.Array,     # (n_blocks,)   f32
+    codes_r: jax.Array,      # (n_blocks, B) uint8
+    absmax_r: jax.Array,     # (n_blocks,)   f32
+    qmap_m: jax.Array,       # (256,) signed dynamic map
+    qmap_r: jax.Array,       # (256,) unsigned dynamic map
+    *,
+    lr: jax.Array,
+    beta1: jax.Array,
+    beta2: jax.Array,
+    eps: jax.Array,
+    weight_decay: jax.Array,
+    step: jax.Array,         # 1-based update index, for bias correction
+):
+    """One fused 8-bit Adam/AdamW update (paper §2 procedure):
+    dequantize -> 32-bit update -> requantize.  Returns
+    (p_new, codes_m', absmax_m', codes_r', absmax_r')."""
+    g = g.astype(jnp.float32)
+    p = p.astype(jnp.float32)
+    m = dequantize_ref(codes_m, absmax_m, qmap_m)
+    r = dequantize_ref(codes_r, absmax_r, qmap_r)
+
+    m = beta1 * m + (1.0 - beta1) * g
+    r = beta2 * r + (1.0 - beta2) * g * g
+
+    c1 = 1.0 - beta1 ** step
+    c2 = 1.0 - beta2 ** step
+    m_hat = m / c1
+    r_hat = r / c2
+    update = m_hat / (jnp.sqrt(r_hat) + eps) + weight_decay * p
+    p_new = p - lr * update
+
+    cm, am = quantize_ref(m, qmap_m)
+    cr, ar = quantize_ref(r, qmap_r)
+    return p_new, cm, am, cr, ar
+
+
+def momentum8_ref(
+    p: jax.Array,
+    g: jax.Array,
+    codes_m: jax.Array,
+    absmax_m: jax.Array,
+    qmap_m: jax.Array,
+    *,
+    lr: jax.Array,
+    beta1: jax.Array,
+    weight_decay: jax.Array,
+    step: jax.Array,
+):
+    """Fused 8-bit SGD-with-momentum update (paper Eq. 1: m = b1*m + g).
+
+    Matches the reference implementation: the *first* update uses m_0 = g_0
+    (no history), which we express as m = b1*m + g with zero-initialized m.
+    """
+    g = g.astype(jnp.float32) + weight_decay * p.astype(jnp.float32)
+    m = dequantize_ref(codes_m, absmax_m, qmap_m)
+    m = beta1 * m + g
+    p_new = p.astype(jnp.float32) - lr * m
+    cm, am = quantize_ref(m, qmap_m)
+    return p_new, cm, am

@@ -1,0 +1,263 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get("DRYRUN_XLA_FLAGS",
+                                         "--xla_force_host_platform_device_count=512")
+# ^ MUST precede any jax-importing module: jax locks the device count on
+# first init.  (Override via DRYRUN_XLA_FLAGS for the small-mesh test mode.)
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape) cell on the
+production meshes and record memory/cost/collective artifacts.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen1.5-32b \
+      --shape train_4k --mesh pod            # one cell
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh multipod
+
+Per cell this emits artifacts/dryrun/<arch>__<shape>__<mesh>.json with
+memory_analysis(), cost_analysis(), and per-collective byte counts parsed
+from the post-SPMD HLO — the inputs to EXPERIMENTS.md §Dry-run/§Roofline.
+Every compile failure here is a bug in the framework's sharding config.
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import base as cfgs
+from repro.core.optim import make_optimizer
+from repro.launch import mesh as mesh_lib
+from repro.launch.shapes import SHAPES, cell_supported, input_specs
+from repro.models import model as M
+from repro.roofline import analysis as roofline
+from repro.sharding import rules as shard_rules
+from repro.train import loop as train_loop
+
+# per-arch microbatch count for train_4k (activation-memory knob; §Perf)
+MICROBATCHES = {
+    "xlstm-350m": 4,
+    "kimi-k2-1t-a32b": 8, "mixtral-8x22b": 8, "command-r-35b": 4,
+    "qwen1.5-32b": 4, "llava-next-34b": 4, "recurrentgemma-9b": 2,
+    "granite-3-8b": 2,
+}
+
+# perf-tuned per-cell overrides filled in during §Perf hillclimbing:
+# (arch, shape) -> dict(remat=..., microbatches=..., policy kwargs...)
+PERF_OVERRIDES: dict = {}
+
+
+def build_mesh(kind: str):
+    if kind == "pod":
+        return mesh_lib.make_production_mesh(multi_pod=False)
+    if kind == "multipod":
+        return mesh_lib.make_production_mesh(multi_pod=True)
+    if kind == "smoke":   # 8 host devices (tests)
+        return mesh_lib.make_mesh((2, 2, 2), ("pod", "data", "model"))
+    raise ValueError(kind)
+
+
+def lower_cell(arch: str, shape_name: str, mesh_kind: str,
+               overrides: dict | None = None):
+    """Lower+compile one cell; returns the artifact dict."""
+    cfg = cfgs.get_config(arch)
+    case = SHAPES[shape_name]
+    ok, why = cell_supported(cfg, case)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                "status": why}
+    overrides = dict(overrides or {})
+    overrides.update(PERF_OVERRIDES.get((arch, shape_name), {}))
+    cfg_keys = ("remat", "attn_chunk", "scan_layers", "kv_cache_bits")
+    if any(k in overrides for k in cfg_keys):
+        import dataclasses
+        cfg = dataclasses.replace(
+            cfg, **{k: v for k, v in overrides.items() if k in cfg_keys})
+
+    mesh = build_mesh(mesh_kind)
+    n_chips = mesh.size
+    policy = shard_rules.ShardingPolicy()
+    t0 = time.time()
+
+    from repro.models import constrain as constrain_lib
+    dp_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dp_size = 1
+    for a in dp_axes:
+        dp_size *= mesh.shape[a]
+    tp_size = mesh.shape.get("model", 1)
+    constrain_lib.set_activation_axes(
+        dp_axes=dp_axes, tp_axis="model" if tp_size > 1 else None,
+        dp_size=dp_size, tp_size=tp_size)
+
+    with mesh:
+        key = jax.random.PRNGKey(0)
+        box = {}
+
+        def _init():
+            p, s = M.init_model(cfg, key)
+            box["specs"] = s       # static tree of logical-axis tuples
+            return p
+
+        abstract_params = jax.eval_shape(_init)
+        specs = box["specs"]
+        pshard = shard_rules.param_shardings(specs, abstract_params, mesh,
+                                             policy)
+        if "blocks" in pshard:
+            constrain_lib.set_block_param_specs(pshard["blocks"])
+        if case.kind == "train":
+            micro = overrides.get("microbatches",
+                                  MICROBATCHES.get(arch, 1))
+            opt = make_optimizer(
+                "adam8", lr=1e-4,
+                master_dtype=("bfloat16" if cfg.param_dtype == "bfloat16"
+                              else "float32"),
+                shard_multiple=n_chips, weight_decay=0.1, impl="jnp")
+            hyper = train_loop.TrainHyper(microbatches=micro)
+            step_fn = train_loop.make_train_step(cfg, opt, hyper,
+                                                 param_shardings=pshard)
+            abstract_state = jax.eval_shape(
+                lambda p: train_loop.TrainState(
+                    opt_state=opt.init(p),
+                    step=jnp.zeros((), jnp.int32)), abstract_params)
+            st_shard = train_loop.TrainState(
+                opt_state=shard_rules.opt_state_shardings(
+                    abstract_state.opt_state, pshard, mesh, policy),
+                step=jax.sharding.NamedSharding(
+                    mesh, jax.sharding.PartitionSpec()))
+            batch_specs = input_specs(cfg, case)
+            bshard = {k: shard_rules.batch_sharding(mesh, policy, v.ndim,
+                                                    v.shape[0])
+                      for k, v in batch_specs.items()}
+            # donate the train state: master/codes update in place (no
+            # double-buffering of the 8-bit statistics or the master copy)
+            jitted = jax.jit(step_fn, in_shardings=(st_shard, bshard),
+                             out_shardings=(st_shard, None),
+                             donate_argnums=(0,))
+            lowered = jitted.lower(abstract_state, batch_specs)
+        elif case.kind == "prefill":
+            ins = input_specs(cfg, case)
+
+            def prefill_fn(params, tokens, embeds=None):
+                return M.prefill(cfg, params, tokens, max_len=case.seq_len,
+                                 embeds=embeds)
+
+            bshard = {k: shard_rules.batch_sharding(mesh, policy, v.ndim,
+                                                    v.shape[0])
+                      for k, v in ins.items()}
+            args = [abstract_params, ins["tokens"]]
+            in_sh = [pshard, bshard["tokens"]]
+            if "embeds" in ins:
+                args.append(ins["embeds"])
+                in_sh.append(bshard["embeds"])
+            jitted = jax.jit(prefill_fn, in_shardings=tuple(in_sh))
+            lowered = jitted.lower(*args)
+        else:  # decode
+            ins = input_specs(cfg, case)
+            cache_shard = shard_rules.cache_shardings(ins["caches"], cfg,
+                                                      mesh, policy)
+
+            def decode_fn(params, token, caches, pos):
+                return M.decode_step(cfg, params, token, caches, pos)
+
+            tok_shard = shard_rules.batch_sharding(
+                mesh, policy, 2, ins["token"].shape[0])
+            rep = jax.sharding.NamedSharding(mesh,
+                                             jax.sharding.PartitionSpec())
+            # donate the KV cache: decode writes one row in place
+            jitted = jax.jit(
+                decode_fn,
+                in_shardings=(pshard, tok_shard, cache_shard, rep),
+                out_shardings=(None, cache_shard),
+                donate_argnums=(2,))
+            lowered = jitted.lower(abstract_params, ins["token"],
+                                   ins["caches"], ins["pos"])
+
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        constrain_lib.clear_activation_axes()
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        rf = roofline.analyze(cost, hlo, n_chips=n_chips,
+                              model_flops_global=roofline.model_flops(cfg, case))
+
+    art = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "status": "ok", "n_chips": n_chips,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "params": cfg.param_count(), "active_params": cfg.active_param_count(),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "total_per_device": (mem.argument_size_in_bytes
+                                 + mem.temp_size_in_bytes),
+        },
+        "cost": {k: cost[k] for k in ("flops", "bytes accessed")
+                 if k in cost},
+        "roofline": rf.to_dict(),
+    }
+    return art
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str, default=None)
+    ap.add_argument("--shape", type=str, default=None,
+                    choices=list(SHAPES) + [None])
+    ap.add_argument("--mesh", type=str, default="pod",
+                    choices=["pod", "multipod", "smoke"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", type=str, default="artifacts/dryrun")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--kv8", action="store_true",
+                    help="int8 block-quantized KV cache (extension)")
+    args = ap.parse_args()
+
+    cells = []
+    archs = cfgs.list_archs() if (args.all or args.arch is None) \
+        else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) \
+        else [args.shape]
+    for a in archs:
+        for s in shapes:
+            cells.append((a, s))
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = 0
+    for arch, shape_name in cells:
+        tag = f"{arch}__{shape_name}__{args.mesh}".replace("/", "_")
+        if args.kv8:
+            tag += "__kv8"
+        path = os.path.join(args.out, tag + ".json")
+        if os.path.exists(path) and not args.force:
+            print(f"[skip cached] {tag}")
+            continue
+        print(f"[dryrun] {tag} ...", flush=True)
+        try:
+            art = lower_cell(
+                arch, shape_name, args.mesh,
+                overrides={"kv_cache_bits": 8} if args.kv8 else None)
+        except Exception as e:  # a failure here is a framework bug
+            failures += 1
+            art = {"arch": arch, "shape": shape_name, "mesh": args.mesh,
+                   "status": "FAILED", "error": repr(e),
+                   "trace": traceback.format_exc()[-2000:]}
+            print(f"  FAILED: {e!r}")
+        with open(path, "w") as f:
+            json.dump(art, f, indent=1)
+        if art["status"] == "ok":
+            r = art["roofline"]
+            print(f"  ok: compute={r['compute_s']:.3e}s "
+                  f"memory={r['memory_s']:.3e}s coll={r['collective_s']:.3e}s "
+                  f"bottleneck={r['bottleneck']} "
+                  f"useful={r['useful_flops_ratio']:.2f} "
+                  f"(compile {art['compile_s']}s)", flush=True)
+    print(f"done; {failures} failures")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,60 @@
+"""The assigned input-shape set and ShapeDtypeStruct builders (no allocation).
+
+LM shapes are seq_len x global_batch; decode_*/long_* lower ``serve_step``
+(one token against a seq_len KV cache), train_* lower ``train_step``.
+long_500k runs only for sub-quadratic archs (cfg.subquadratic).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCase:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str          # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeCase("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCase("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCase("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCase("long_500k", 524288, 1, "decode"),
+}
+
+
+def cell_supported(cfg, case: ShapeCase) -> tuple[bool, str]:
+    if case.name == "long_500k" and not cfg.subquadratic:
+        return False, "skipped(full-attention)"
+    return True, ""
+
+
+def input_specs(cfg, case: ShapeCase) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    B, S = case.global_batch, case.seq_len
+    ft = cfg.frontend_tokens
+    if case.kind == "train":
+        specs = {"tokens": jax.ShapeDtypeStruct((B, S - ft + 1), jnp.int32)}
+        if ft:
+            specs["embeds"] = jax.ShapeDtypeStruct(
+                (B, ft, cfg.d_model), jnp.dtype(cfg.compute_dtype))
+        return specs
+    if case.kind == "prefill":
+        specs = {"tokens": jax.ShapeDtypeStruct((B, S - ft), jnp.int32)}
+        if ft:
+            specs["embeds"] = jax.ShapeDtypeStruct(
+                (B, ft, cfg.d_model), jnp.dtype(cfg.compute_dtype))
+        return specs
+    if case.kind == "decode":
+        cache = jax.eval_shape(lambda: M.init_cache(cfg, B, S))
+        return {"token": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+                "caches": cache,
+                "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+    raise ValueError(case.kind)

@@ -1,0 +1,102 @@
+"""Activation sharding constraints (divisibility-safe, context-driven).
+
+The launcher configures the mesh axis groups once
+(``set_activation_axes(dp_axes, tp_axis, sizes)``); model code then calls
+``constrain(x, "dp", None, "tp")`` at fusion boundaries.  Every axis is
+dropped silently if it does not divide the corresponding dim — the same
+fallback philosophy as the param-sharding resolver, which is what lets one
+model codebase serve all 10 archs (kv=1 MQA through 384-expert MoE) on a
+fixed (pod, data, model) mesh.
+
+On single-device runs (CPU tests/examples) no axes are configured and every
+call is a no-op.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_CTX = {"dp": None, "tp": None, "dp_size": 1, "tp_size": 1,
+        "block_specs": None}
+
+
+def set_activation_axes(dp_axes=None, tp_axis=None, dp_size=1, tp_size=1):
+    _CTX.update(dp=dp_axes, tp=tp_axis,
+                dp_size=dp_size, tp_size=tp_size)
+
+
+def clear_activation_axes():
+    set_activation_axes(None, None, 1, 1)
+    _CTX["block_specs"] = None
+
+
+def active() -> bool:
+    return _CTX["dp"] is not None or _CTX["tp"] is not None
+
+
+def _axes_and_size(kind):
+    if kind == "all":
+        dp, tp = _CTX["dp"], _CTX["tp"]
+        axes = tuple(dp or ()) + ((tp,) if tp else ())
+        return (axes or None), _CTX["dp_size"] * _CTX["tp_size"]
+    return _CTX[kind], _CTX[f"{kind}_size"]
+
+
+def constrain(x: jax.Array, *dims):
+    """dims: one of None | 'dp' | 'tp' | 'all' per array dim (trailing dims
+    may be omitted).  Axes that don't divide the dim are dropped."""
+    if not active():
+        return x
+    spec = []
+    used = set()
+    for i in range(x.ndim):
+        want = dims[i] if i < len(dims) else None
+        if want is None or want in used:
+            spec.append(None)
+            continue
+        axes, size = _axes_and_size(want)
+        if axes is None or size <= 1 or x.shape[i] % size != 0:
+            spec.append(None)
+            continue
+        spec.append(axes)
+        used.add(want)
+    if all(s is None for s in spec):
+        return x
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+def attn_score_dims(KV: int, G: int, S: int):
+    """Constraint dims for (B, KV, G, S, C) attention tensors: prefer kv-head
+    TP, then q-group TP, then sequence TP (always divides for 4k+ seqs)."""
+    tp_size = _CTX["tp_size"]
+    if tp_size > 1 and KV % tp_size == 0:
+        return ("dp", "tp", None, None, None)
+    if tp_size > 1 and G % tp_size == 0:
+        return ("dp", None, "tp", None, None)
+    if tp_size > 1 and S % tp_size == 0:
+        return ("dp", None, None, "tp", None)
+    return ("dp", None, None, None, None)
+
+
+def set_block_param_specs(specs_tree):
+    """Per-leaf PartitionSpecs for the stacked scan params (leading 'layers'
+    dim included).  Inside the scan body each per-layer slice is constrained
+    to spec[1:], which is what lets SPMD keep the backward xs-grad carry
+    sharded instead of replicated (MaxText's scanned-FSDP pattern;
+    EXPERIMENTS.md §Perf A4)."""
+    _CTX["block_specs"] = specs_tree
+
+
+def constrain_block_params(bp):
+    specs = _CTX["block_specs"]
+    if specs is None:
+        return bp
+
+    def one(x, sh):
+        spec = tuple(sh.spec)[1:] if len(sh.spec) else ()
+        spec = spec + (None,) * (x.ndim - len(spec))
+        if all(e is None for e in spec):
+            return x
+        return jax.lax.with_sharding_constraint(x, P(*spec))
+
+    return jax.tree_util.tree_map(one, bp, specs)

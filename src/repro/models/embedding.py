@@ -1,0 +1,85 @@
+"""Embedding layers: the paper's Stable Embedding Layer (§2.3) and the
+standard fairseq-style baseline (App C), plus modality-frontend stubs.
+
+Stable Embedding = Xavier-uniform init + LayerNorm after lookup (before any
+position information) + 32-bit optimizer states for this layer (enforced by
+the optimizer's override predicate matching 'embed' in the param path).
+
+Baseline embedding = N(0, 1/sqrt(d)) init, outputs scaled by sqrt(d) — the
+recipe App C identifies as a source of instability.
+"""
+from __future__ import annotations
+
+import jax
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers
+
+
+def init_embedding(key, cfg):
+    v, d = cfg.vocab_size, cfg.d_model
+    if cfg.stable_embedding:
+        table = layers.xavier_uniform(key, (v, d))
+        norm, norm_s = layers.init_norm(d, "layernorm")
+        p = {"table": table, "norm": norm}
+        s = {"table": ("vocab", "embed"), "norm": norm_s}
+    else:
+        table = jax.random.normal(key, (v, d)) / np.sqrt(d)
+        p = {"table": table}
+        s = {"table": ("vocab", "embed")}
+    return p, s
+
+
+def apply_embedding(p, tokens, cfg):
+    dt = jnp.dtype(cfg.compute_dtype)
+    x = p["table"].astype(dt)[tokens]
+    if cfg.stable_embedding:
+        x = layers.apply_norm(p["norm"], x, "layernorm")
+    else:
+        x = x * np.sqrt(cfg.d_model).astype(np.float32)
+    return x.astype(dt)
+
+
+def init_head(key, cfg):
+    """Output projection (untied unless cfg.tie_embeddings)."""
+    if cfg.tie_embeddings:
+        return {}, {}
+    p = {"w": layers.dense_init(key, (cfg.d_model, cfg.vocab_size))}
+    s = {"w": ("embed", "vocab")}
+    return p, s
+
+
+def apply_head(p, x, embed_params, cfg):
+    """Logits matmul in compute dtype with f32 accumulation: a full-f32
+    head makes the backward gather f32 logit grads (24.5 GiB/device on
+    stablelm train_4k — EXPERIMENTS.md §Perf C2); bf16xbf16->f32 is the
+    standard accounting and halves that traffic."""
+    from repro.models.constrain import constrain
+    dt = x.dtype
+    w = (embed_params["table"].astype(dt).T if cfg.tie_embeddings
+         else p["w"].astype(dt))
+    logits = jnp.einsum("bsd,dv->bsv", x, w,
+                        preferred_element_type=jnp.float32)
+    return constrain(logits, "dp", None, "tp")
+
+
+# ----------------------------------------------------------- frontend stubs
+# Per the assignment, [vlm]/[audio] archs specify the transformer BACKBONE;
+# the modality frontend is a stub: input_specs() provides precomputed
+# patch/frame embeddings of shape (batch, frontend_tokens, d_model) which are
+# projected and prepended to the token embeddings.
+
+def init_frontend(key, cfg):
+    if cfg.frontend == "none" or cfg.frontend_tokens == 0:
+        return {}, {}
+    p = {"proj": layers.dense_init(key, (cfg.d_model, cfg.d_model))}
+    s = {"proj": ("embed", "embed_out")}
+    return p, s
+
+
+def apply_frontend(p, embeds, cfg):
+    """embeds: (B, frontend_tokens, d_model) precomputed stub features."""
+    dt = jnp.dtype(cfg.compute_dtype)
+    return (embeds.astype(dt) @ p["proj"].astype(dt))

@@ -1,0 +1,97 @@
+"""Mixture-of-Experts FFN with token-choice top-k routing and sort/scatter
+dispatch (DESIGN.md §4: dispatch memory is O(T·k·capacity_factor·d) — no
+(T, E, C) one-hot tensor, which is infeasible at E=384).
+
+Expert compute is a dense grouped einsum ``(E, C, d) x (E, d, f)`` which maps
+onto the MXU and shards cleanly: E over 'model' when divisible (kimi-k2:
+384 % 16 == 0, true expert parallelism), otherwise the expert hidden dim is
+TP-sharded (mixtral: 8 experts on a 16-way axis).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers
+from repro.models.constrain import constrain
+
+
+def init_moe(key, cfg):
+    d, f, E = cfg.d_model, cfg.moe_dff or cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 4)
+    p = {
+        "router": layers.dense_init(ks[0], (d, E), scale=0.02),
+        "w_gate": layers.dense_init(ks[1], (E, d, f)),
+        "w_in": layers.dense_init(ks[2], (E, d, f)),
+        "w_out": layers.dense_init(ks[3], (E, f, d), scale=1.0 / np.sqrt(f)),
+    }
+    s = {
+        "router": ("embed", "unsharded"),
+        "w_gate": ("expert", "embed", "mlp"),
+        "w_in": ("expert", "embed", "mlp"),
+        "w_out": ("expert", "mlp", "embed"),
+    }
+    return p, s
+
+
+def apply_moe(p, x, cfg):
+    """x: (B, S, d) -> (out (B, S, d), aux_metrics dict)."""
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    dt = x.dtype
+    T = B * S
+    xf = x.reshape(T, d)
+
+    # ---- routing (f32) ----
+    logits = (xf.astype(jnp.float32) @ p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                      # (T, E)
+    gate_vals, expert_ids = jax.lax.top_k(probs, k)              # (T, k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # load-balancing aux loss (Switch): E * mean(f_e * p_e)
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(
+        jax.nn.one_hot(expert_ids[:, 0], E, dtype=jnp.float32), axis=0)
+    aux_loss = E * jnp.sum(me * ce)
+    z_loss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+
+    # ---- sort/scatter dispatch with capacity ----
+    capacity = int(max(1, int(T * k * cfg.capacity_factor // E)))
+    flat_expert = expert_ids.reshape(-1)                         # (T*k,)
+    flat_gate = gate_vals.reshape(-1)
+    flat_tok = jnp.repeat(jnp.arange(T), k)
+
+    order = jnp.argsort(flat_expert, stable=True)
+    se, st, sg = flat_expert[order], flat_tok[order], flat_gate[order]
+    counts = jnp.bincount(flat_expert, length=E)                 # (E,)
+    starts = jnp.cumsum(counts) - counts
+    pos = jnp.arange(T * k) - starts[se]                         # slot in expert
+    keep = pos < capacity
+    pos_c = jnp.where(keep, pos, 0)
+
+    # dispatch buffer (E, C, d): experts on 'tp' when divisible (kimi),
+    # else capacity rows on 'dp'
+    buf = jnp.zeros((E, capacity, d), dt)
+    src = jnp.where(keep[:, None], xf[st], 0).astype(dt)
+    buf = constrain(buf.at[se, pos_c].add(src), "tp", "dp", None)
+
+    # ---- expert FFN (grouped einsum) ----
+    if cfg.gated_mlp:
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["w_gate"].astype(dt))) \
+            * jnp.einsum("ecd,edf->ecf", buf, p["w_in"].astype(dt))
+    else:
+        h = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", buf, p["w_in"].astype(dt)))
+    h = constrain(h, "tp", "dp", None)
+    out_buf = constrain(jnp.einsum("ecf,efd->ecd", h, p["w_out"].astype(dt)),
+                        "tp", "dp", None)
+
+    # ---- combine ----
+    gathered = out_buf[se, pos_c]                                # (T*k, d)
+    gathered = jnp.where(keep[:, None], gathered, 0)
+    contrib = gathered.astype(jnp.float32) * sg[:, None]
+    out = jnp.zeros((T, d), jnp.float32).at[st].add(contrib)
+
+    metrics = {"moe_aux_loss": aux_loss, "moe_z_loss": z_loss,
+               "moe_drop_frac": 1.0 - jnp.mean(keep.astype(jnp.float32))}
+    return out.reshape(B, S, d).astype(dt), metrics

@@ -1,0 +1,102 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Block: x -> [linear -> causal depthwise conv1d -> RG-LRU] ⊙ gelu(linear) ->
+linear.  The RG-LRU recurrence:
+
+    r_t = σ(W_a u_t + b_a)              (recurrence gate)
+    i_t = σ(W_x u_t + b_x)              (input gate)
+    a_t = exp(-c · softplus(Λ) · r_t)   (c = 8)
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ u_t)
+
+O(1) decode state: (h, conv tail) — this is why recurrentgemma runs the
+long_500k cell.  Deviation note (DESIGN.md §8): gate projections are full
+matrices (Griffin uses block-diagonal); parameter count noted in configs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers
+from repro.models.scan_utils import checkpointed_scan
+
+_C = 8.0
+
+
+def init_rglru_block(key, cfg):
+    d, W = cfg.d_model, cfg.lru_width or cfg.d_model
+    cw = cfg.conv_width
+    ks = jax.random.split(key, 7)
+    # Λ init so that a = exp(-c softplus(Λ)) is uniform in [0.9, 0.999]
+    a0 = jax.random.uniform(ks[0], (W,), jnp.float32, 0.9, 0.999)
+    lam_raw = jnp.log(jnp.expm1(-jnp.log(a0) / _C))  # softplus^-1
+    p = {
+        "w_rec_in": layers.dense_init(ks[1], (d, W)),
+        "w_gate_in": layers.dense_init(ks[2], (d, W)),
+        "conv_w": layers.dense_init(ks[3], (cw, W), scale=1.0 / np.sqrt(cw)),
+        "w_a": layers.dense_init(ks[4], (W, W)),
+        "b_a": jnp.zeros((W,), jnp.float32),
+        "w_x": layers.dense_init(ks[5], (W, W)),
+        "b_x": jnp.zeros((W,), jnp.float32),
+        "lam": lam_raw,
+        "w_out": layers.dense_init(ks[6], (W, d), scale=1.0 / np.sqrt(W)),
+    }
+    s = {
+        "w_rec_in": ("embed", "lru"), "w_gate_in": ("embed", "lru"),
+        "conv_w": ("unsharded", "lru"),
+        "w_a": ("lru", "lru_out"), "b_a": ("lru",),
+        "w_x": ("lru", "lru_out"), "b_x": ("lru",),
+        "lam": ("lru",),
+        "w_out": ("lru", "embed"),
+    }
+    return p, s
+
+
+def _conv1d_causal(u, w, tail=None):
+    """Depthwise causal conv. u: (B, S, W), w: (cw, W).
+    ``tail``: (B, cw-1, W) previous inputs for decode. Returns (out, new_tail)."""
+    cw = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((u.shape[0], cw - 1, u.shape[2]), u.dtype)
+    ext = jnp.concatenate([tail, u], axis=1)            # (B, S+cw-1, W)
+    out = sum(ext[:, i:i + u.shape[1]] * w[i] for i in range(cw))
+    new_tail = ext[:, -(cw - 1):] if cw > 1 else tail
+    return out, new_tail
+
+
+def _rglru_scan(p, u, h0):
+    """u: (B, S, W) f32; h0: (B, W). Returns (y (B,S,W), h_final)."""
+    log_a_coef = -_C * jax.nn.softplus(p["lam"])        # (W,), negative
+
+    r = jax.nn.sigmoid(u @ p["w_a"] + p["b_a"])         # (B,S,W)
+    i = jax.nn.sigmoid(u @ p["w_x"] + p["b_x"])
+    log_a = log_a_coef * r                               # (B,S,W)
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.clip(1.0 - a * a, 1e-12)) * (i * u)
+
+    def step(h, inp):
+        a_t, x_t = inp
+        h = a_t * h + x_t
+        return h, h
+
+    (hT, ys) = checkpointed_scan(step, h0,
+                                 (a.swapaxes(0, 1), gated.swapaxes(0, 1)))
+    return ys.swapaxes(0, 1), hT
+
+
+def apply_rglru_block(p, x, cfg, *, state=None):
+    """x: (B, S, d). state: None (train/prefill from scratch) or dict
+    {h: (B, W), conv: (B, cw-1, W)}. Returns (out, new_state)."""
+    dt = x.dtype
+    B = x.shape[0]
+    W = cfg.lru_width or cfg.d_model
+    u = (x @ p["w_rec_in"].astype(dt)).astype(jnp.float32)
+    gate = x @ p["w_gate_in"].astype(dt)
+    tail = state["conv"] if state is not None else None
+    u, new_tail = _conv1d_causal(u, p["conv_w"], tail)
+    h0 = state["h"] if state is not None else jnp.zeros((B, W), jnp.float32)
+    y, hT = _rglru_scan(p, u, h0)
+    out = (jax.nn.gelu(gate.astype(jnp.float32)) * y).astype(dt)
+    out = out @ p["w_out"].astype(dt)
+    return out, {"h": hT, "conv": new_tail}

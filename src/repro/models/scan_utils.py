@@ -1,0 +1,44 @@
+"""Checkpointed (sqrt-N) time scan for recurrent layers.
+
+A plain ``lax.scan`` over T timesteps stores every per-step carry for the
+backward pass — for mLSTM's matrix memory that is T x (B,H,D,D) f32, i.e.
+~350 GiB/device for xlstm-350m train_4k (measured in the dry-run baseline;
+EXPERIMENTS.md §Perf iteration B).  ``checkpointed_scan`` nests two scans:
+the outer saves one carry per chunk, the inner is wrapped in
+``jax.checkpoint`` so its carries are recomputed during backward.  Memory
+drops from O(T) to O(T/K + K) carries; K ~ sqrt(T) minimizes it.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def checkpointed_scan(f, init, xs, *, chunk: int = 64):
+    """Semantics of ``jax.lax.scan(f, init, xs)`` with sqrt-N remat.
+
+    xs leaves must share leading dim T; T is padded to a multiple of
+    ``chunk`` internally (f must tolerate processing padded steps only if
+    T % chunk != 0 — we instead require divisibility and fall back to plain
+    scan otherwise)."""
+    leaves = jax.tree_util.tree_leaves(xs)
+    T = leaves[0].shape[0]
+    if T <= chunk or T % chunk != 0:
+        return jax.lax.scan(f, init, xs)
+    n_chunks = T // chunk
+
+    def reshape(x):
+        return x.reshape((n_chunks, chunk) + x.shape[1:])
+
+    xs_c = jax.tree_util.tree_map(reshape, xs)
+
+    @jax.checkpoint
+    def inner(carry, xc):
+        return jax.lax.scan(f, carry, xc)
+
+    carry, ys_c = jax.lax.scan(inner, init, xs_c)
+
+    def unshape(y):
+        return y.reshape((T,) + y.shape[2:])
+
+    return carry, jax.tree_util.tree_map(unshape, ys_c)

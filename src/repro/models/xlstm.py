@@ -1,0 +1,163 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, exponential gating)
+and sLSTM (scalar memory, recurrent gates), both with the paper's stabilizer
+state m to keep exponential gates bounded.
+
+Decode state is O(1) per layer (mLSTM: C (B,H,D,D), n (B,H,D), m (B,H);
+sLSTM: c/n/h (B,W), m (B,W)) — xlstm-350m therefore runs the long_500k cell.
+
+d_ff = 0 in the assigned config: blocks carry their own up/down projections
+(mLSTM: proj factor 2 with SiLU gate branch; sLSTM: GeLU MLP factor 4/3),
+matching the xLSTM block layout.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers
+from repro.models.scan_utils import checkpointed_scan
+
+
+# ------------------------------------------------------------------- mLSTM
+
+def init_mlstm_block(key, cfg):
+    d = cfg.d_model
+    W = int(d * cfg.mlstm_proj_factor)
+    H = cfg.n_heads
+    ks = jax.random.split(key, 8)
+    D = W // H
+    # q/k/v/output-gate are per-head block-diagonal (xLSTM head structure;
+    # also what keeps the 350m config at its nominal parameter budget).
+    p = {
+        "w_up": layers.dense_init(ks[0], (d, W)),
+        "w_gate": layers.dense_init(ks[1], (d, W)),
+        "wq": layers.dense_init(ks[2], (H, D, D), scale=1.0 / np.sqrt(D)),
+        "wk": layers.dense_init(ks[3], (H, D, D), scale=1.0 / np.sqrt(D)),
+        "wv": layers.dense_init(ks[4], (H, D, D), scale=1.0 / np.sqrt(D)),
+        "w_if": layers.dense_init(ks[5], (W, 2 * H), scale=0.02),
+        "b_i": jnp.full((H,), -10.0, jnp.float32),   # input gate starts closed
+        "b_f": jnp.full((H,), 3.0, jnp.float32),     # forget gate starts open
+        "wo_gate": layers.dense_init(ks[6], (H, D, D), scale=1.0 / np.sqrt(D)),
+        "w_down": layers.dense_init(ks[7], (W, d), scale=1.0 / np.sqrt(W)),
+    }
+    s = {
+        "w_up": ("embed", "mlp"), "w_gate": ("embed", "mlp"),
+        "wq": ("heads", "unsharded", "head_out"), "wk": ("heads", "unsharded", "head_out"),
+        "wv": ("heads", "unsharded", "head_out"),
+        "w_if": ("mlp", "unsharded"), "b_i": ("unsharded",), "b_f": ("unsharded",),
+        "wo_gate": ("heads", "unsharded", "head_out"), "w_down": ("mlp", "embed"),
+    }
+    return p, s
+
+
+def _mlstm_scan(q, k, v, log_i, log_f, state):
+    """q/k/v: (B, S, H, D) f32; log_i/log_f: (B, S, H).
+    state: (C (B,H,D,D), n (B,H,D), m (B,H)). Returns (h (B,S,H,D), state)."""
+    D = q.shape[-1]
+    k = k / np.sqrt(D)
+
+    def step(carry, inp):
+        C, n, m = carry
+        q_t, k_t, v_t, li, lf = inp                   # (B,H,D) / (B,H)
+        m_new = jnp.maximum(lf + m, li)
+        i_p = jnp.exp(li - m_new)[..., None]          # (B,H,1)
+        f_p = jnp.exp(lf + m - m_new)[..., None]
+        C = f_p[..., None] * C + i_p[..., None] * (v_t[..., :, None] * k_t[..., None, :])
+        n = f_p * n + i_p * k_t
+        denom = jnp.maximum(jnp.abs(jnp.sum(n * q_t, axis=-1, keepdims=True)), 1.0)
+        h = jnp.einsum("bhvk,bhk->bhv", C, q_t) / denom
+        return (C, n, m_new), h
+
+    inps = tuple(x.swapaxes(0, 1) for x in (q, k, v, log_i, log_f))
+    (state, hs) = checkpointed_scan(step, state, inps)
+    return hs.swapaxes(0, 1), state
+
+
+def apply_mlstm_block(p, x, cfg, *, state=None):
+    dt = x.dtype
+    B, S, d = x.shape
+    H = cfg.n_heads
+    W = p["w_up"].shape[1]
+    D = W // H
+    u = (x @ p["w_up"].astype(dt)).astype(jnp.float32)
+    gate = jax.nn.silu((x @ p["w_gate"].astype(dt)).astype(jnp.float32))
+    uh = u.reshape(B, S, H, D)
+    q = jnp.einsum("bshd,hde->bshe", uh, p["wq"])
+    k = jnp.einsum("bshd,hde->bshe", uh, p["wk"])
+    v = jnp.einsum("bshd,hde->bshe", uh, p["wv"])
+    if_ = u @ p["w_if"]                                # (B,S,2H)
+    log_i = jax.nn.log_sigmoid(if_[..., :H] + p["b_i"])
+    log_f = jax.nn.log_sigmoid(if_[..., H:] + p["b_f"])
+    if state is None:
+        state = (jnp.zeros((B, H, D, D), jnp.float32),
+                 jnp.zeros((B, H, D), jnp.float32),
+                 jnp.zeros((B, H), jnp.float32))
+    h, state = _mlstm_scan(q, k, v, log_i, log_f, state)
+    o = jax.nn.sigmoid(jnp.einsum("bshd,hde->bshe", uh, p["wo_gate"]))
+    out = (o * h).reshape(B, S, W) * gate
+    return (out.astype(dt) @ p["w_down"].astype(dt)), state
+
+
+# ------------------------------------------------------------------- sLSTM
+
+def init_slstm_block(key, cfg):
+    d = cfg.d_model
+    H = cfg.n_heads
+    ks = jax.random.split(key, 4)
+    f = int(d * cfg.slstm_proj_factor)
+    p = {
+        # input projections for z, i, f, o (fused)
+        "w_zifo": layers.dense_init(ks[0], (d, 4 * d)),
+        # recurrent block-diagonal weights per head: (H, 4, Dh, Dh)
+        "r_zifo": layers.dense_init(ks[1], (H, 4, d // H, d // H),
+                                    scale=1.0 / np.sqrt(d // H)),
+        "b_zifo": jnp.concatenate([
+            jnp.zeros((d,)), jnp.full((d,), -5.0),   # i starts mostly closed
+            jnp.full((d,), 3.0), jnp.zeros((d,))]).astype(jnp.float32),
+        "w_up": layers.dense_init(ks[2], (d, f)),
+        "w_down": layers.dense_init(ks[3], (f, d), scale=1.0 / np.sqrt(f)),
+    }
+    s = {
+        "w_zifo": ("embed", "mlp"), "r_zifo": ("heads", "unsharded", "unsharded", "unsharded"),
+        "b_zifo": ("mlp",), "w_up": ("embed", "mlp"), "w_down": ("mlp", "embed"),
+    }
+    return p, s
+
+
+def apply_slstm_block(p, x, cfg, *, state=None):
+    """sLSTM with exponential input gate + stabilizer (xLSTM eqs. 18-27)."""
+    dt = x.dtype
+    B, S, d = x.shape
+    H = cfg.n_heads
+    Dh = d // H
+    zifo_in = (x @ p["w_zifo"].astype(dt)).astype(jnp.float32) + p["b_zifo"]
+    zifo_in = zifo_in.reshape(B, S, 4, d)
+    if state is None:
+        z0 = jnp.zeros((B, d), jnp.float32)
+        state = (z0, z0, z0, jnp.full((B, d), -jnp.inf, jnp.float32))
+
+    r = p["r_zifo"]                                   # (H,4,Dh,Dh)
+
+    def step(carry, inp):
+        c, n, h, m = carry
+        pre = inp                                      # (B,4,d)
+        hh = h.reshape(B, H, Dh)
+        rec = jnp.einsum("bhk,hgkj->bghj", hh, r).reshape(B, 4, d)
+        z_t = jnp.tanh(pre[:, 0] + rec[:, 0])
+        log_i = pre[:, 1] + rec[:, 1]                  # exponential input gate
+        log_f = jax.nn.log_sigmoid(pre[:, 2] + rec[:, 2])
+        o_t = jax.nn.sigmoid(pre[:, 3] + rec[:, 3])
+        m_new = jnp.maximum(log_f + m, log_i)
+        m_safe = jnp.where(jnp.isinf(m_new), 0.0, m_new)
+        i_p = jnp.exp(log_i - m_safe)
+        f_p = jnp.where(jnp.isinf(m), 0.0, jnp.exp(log_f + m - m_safe))
+        c = f_p * c + i_p * z_t
+        n = f_p * n + i_p
+        h_new = o_t * c / jnp.maximum(n, 1.0)
+        return (c, n, h_new, m_new), h_new
+
+    (state, hs) = checkpointed_scan(step, state, zifo_in.swapaxes(0, 1))
+    y = hs.swapaxes(0, 1).astype(dt)                  # (B,S,d)
+    out = jax.nn.gelu(y @ p["w_up"].astype(dt)) @ p["w_down"].astype(dt)
+    return out, state

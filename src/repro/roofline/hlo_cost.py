@@ -1,0 +1,303 @@
+"""Trip-count-aware HLO cost model.
+
+XLA's ``compiled.cost_analysis()`` counts a while-loop body ONCE, which makes
+it useless for scanned-layer models (layers scan, microbatch scan, KV-chunk
+scan, recurrent time scans).  This module parses the post-SPMD optimized HLO
+text and accumulates:
+
+  * flops       — 2 * prod(result dims) * prod(contracting dims) per ``dot``
+                  (matmul flops — the standard MFU accounting; elementwise
+                  flops are not counted, noted in EXPERIMENTS.md),
+  * bytes       — Σ (result + operand bytes) over *top-level* instructions of
+                  executable computations (entry / while bodies / conditional
+                  branches).  Optimized-HLO top-level ops are the fusion
+                  units, i.e. exactly the HBM traffic quanta.  No-traffic ops
+                  (tuple/gte/parameter/constant/bitcast) are skipped,
+  * collectives — per-kind link-bytes with ring-algorithm factors:
+                  all-gather/reduce-scatter: size*(g-1)/g, all-reduce:
+                  2*size*(g-1)/g, all-to-all: size*(g-1)/g,
+                  collective-permute: size,
+
+with every quantity multiplied by the product of enclosing loop trip counts
+(``backend_config={"known_trip_count":{"n":...}}``; fallback: trip 1 +
+a warning flag in the result).
+"""
+from __future__ import annotations
+
+import json
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f16": 2, "bf16": 2, "f32": 4,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f8e4m3b11fnuz": 1, "f8e5m2fnuz": 1, "f8e4m3fnuz": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.*)$")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\((.*)\)\s*->\s*(.*?)\s*\{")
+_TRIP_RE = re.compile(r'known_trip_count[\\\":{ ]+n[\\\":]+\s*\\?\"?(\d+)')
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+
+_NO_TRAFFIC_OPS = {
+    "tuple", "get-tuple-element", "parameter", "constant", "bitcast",
+    "after-all", "partition-id", "replica-id", "while", "conditional",
+    "iota", "rng-bit-generator",
+}
+
+
+def _opcode(rhs: str) -> str:
+    """Opcode of an instruction right-hand side (handles tuple-shape
+    results whose parentheses precede the opcode)."""
+    s = rhs
+    if s.startswith("("):
+        depth = 0
+        for i, ch in enumerate(s):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    s = s[i + 1:]
+                    break
+    head = s.split("(", 1)[0].strip()
+    return head.split()[-1] if head else ""
+
+_COLL_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(text: str) -> list[int]:
+    m = _SHAPE_RE.search(text)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+def _result_of(rhs: str) -> str:
+    """The result shape portion of an instruction right-hand side."""
+    if rhs.startswith("("):
+        return rhs.split(") ", 1)[0] + ")"
+    return rhs.split(" ", 1)[0]
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip()])
+    return default
+
+
+class Computation:
+    def __init__(self, name):
+        self.name = name
+        self.instrs: list[tuple[str, str]] = []    # (result_name, full_rhs)
+        self.shapes: dict[str, str] = {}           # name -> result shape str
+
+
+def parse_computations(hlo: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        hdr = _COMP_HDR_RE.match(line.strip())
+        if hdr and line.strip().endswith("{"):
+            cur = Computation(hdr.group(1))
+            comps[cur.name] = cur
+            # parameters: "argname: shape, argname2: shape2"
+            for part in hdr.group(2).split(", "):
+                if ":" in part:
+                    pname, pshape = part.split(":", 1)
+                    cur.shapes[pname.strip().lstrip("%")] = pshape.strip()
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if m:
+            name, rhs = m.group(1), m.group(2)
+            cur.instrs.append((name, rhs))
+            cur.shapes[name] = _result_of(rhs)
+    return comps
+
+
+def _dot_flops(rhs: str, shapes: dict[str, str]) -> float:
+    out_dims = _shape_dims(_result_of(rhs))
+    n_out = 1
+    for d in out_dims:
+        n_out *= d
+    mc = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", rhs)
+    mo = re.search(r"dot\(([^)]*)\)", rhs)
+    contract = 1
+    if mc and mo:
+        lhs_name = mo.group(1).split(",")[0].strip().lstrip("%")
+        lhs_shape = shapes.get(lhs_name, "")
+        dims = _shape_dims(lhs_shape)
+        for idx in mc.group(1).split(","):
+            if idx and int(idx) < len(dims):
+                contract *= dims[int(idx)]
+    return 2.0 * n_out * contract
+
+
+def analyze_hlo(hlo: str, *, n_devices_hint: int = 1) -> dict:
+    comps = parse_computations(hlo)
+
+    # ---- per-computation local costs + control-flow edges ----
+    local = {}
+    edges = defaultdict(list)       # comp -> [(child_comp, multiplier)]
+    fusion_calls = defaultdict(list)  # comp -> [child fusion computations]
+    unknown_trips = 0
+
+    for cname, comp in comps.items():
+        flops = bytes_ = 0.0
+        coll = defaultdict(float)
+        for iname, rhs in comp.instrs:
+            if " dot(" in rhs or rhs.startswith("dot("):
+                flops += _dot_flops(rhs, comp.shapes)
+            if " while(" in rhs:
+                mt = _TRIP_RE.search(rhs)
+                trip = int(mt.group(1)) if mt else 1
+                if not mt:
+                    unknown_trips += 1
+                mb = re.search(r"body=%?([\w\.\-]+)", rhs)
+                mc2 = re.search(r"condition=%?([\w\.\-]+)", rhs)
+                if mb:
+                    edges[cname].append((mb.group(1), trip))
+                if mc2:
+                    edges[cname].append((mc2.group(1), trip))
+                continue
+            mcond = re.search(r"branch_computations=\{([^}]*)\}", rhs)
+            if mcond:
+                for child in mcond.group(1).split(","):
+                    edges[cname].append((child.strip().lstrip("%"), 1.0))
+            mcall = re.search(r"calls=%?([\w\.\-]+)", rhs)
+            if mcall:
+                fusion_calls[cname].append(mcall.group(1))
+            # bytes: top-level traffic ops only.  Slicing/scatter ops touch
+            # only the slice region, not their full buffer operand:
+            #   dynamic-slice / gather   -> 2 x result (+indices, negligible)
+            #   dynamic-update-slice     -> 2 x update operand (in-place)
+            #   scatter                  -> 2 x updates operand
+            op = _opcode(rhs)
+            if op in _NO_TRAFFIC_OPS:
+                pass
+            elif op in ("dynamic-slice", "gather"):
+                bytes_ += 2.0 * _shape_bytes(_result_of(rhs))
+            elif op in ("dynamic-update-slice", "scatter"):
+                margs = re.search(r"\(([^)]*)\)", rhs[rhs.find("("):])
+                upd = 0
+                if margs:
+                    ops_b = [_shape_bytes(comp.shapes.get(
+                        a.strip().lstrip("%"), ""))
+                        for a in margs.group(1).split(",")]
+                    big = max(ops_b) if ops_b else 0
+                    upd = sum(ops_b) - big     # everything but the buffer
+                bytes_ += 2.0 * upd
+            else:
+                rb = _shape_bytes(_result_of(rhs))
+                ob = 0
+                margs = re.search(r"\(([^)]*)\)", rhs[rhs.find("("):])
+                if margs:
+                    for a in margs.group(1).split(","):
+                        ob += _shape_bytes(comp.shapes.get(
+                            a.strip().lstrip("%"), ""))
+                bytes_ += rb + ob
+            # collectives
+            for kind in _COLL_KINDS:
+                if f" {kind}(" in rhs or rhs.startswith(f"{kind}("):
+                    size = _shape_bytes(_result_of(rhs))
+                    g = _group_size(rhs, n_devices_hint)
+                    factor = (g - 1) / g if g > 1 else 0.0
+                    if kind == "all-reduce":
+                        moved = 2.0 * size * factor
+                    elif kind == "collective-permute":
+                        moved = float(size)
+                    else:
+                        moved = size * factor
+                    coll[kind] += moved
+                    break
+        local[cname] = {"flops": flops, "bytes": bytes_, "coll": dict(coll)}
+
+    # fold fusion-body dot flops into their callers (bytes stay top-level)
+    def fusion_flops(cname, seen=None):
+        seen = seen or set()
+        if cname in seen:
+            return 0.0
+        seen.add(cname)
+        f = 0.0
+        for child in fusion_calls.get(cname, []):
+            f += local.get(child, {"flops": 0})["flops"] \
+                + fusion_flops(child, seen)
+        return f
+
+    # ---- propagate multipliers through control flow ----
+    entry = None
+    for cname in comps:
+        if re.match(r"^main", cname) or entry is None:
+            pass
+    # ENTRY computation: the one not referenced as body/cond/branch/fusion
+    referenced = set()
+    for cname in comps:
+        for child, _ in edges[cname]:
+            referenced.add(child)
+        for child in fusion_calls[cname]:
+            referenced.add(child)
+    candidates = [c for c in comps if c not in referenced]
+    # heuristic: entry is the unreferenced computation with the most instrs
+    entry = max(candidates, key=lambda c: len(comps[c].instrs)) \
+        if candidates else next(iter(comps))
+
+    mult = defaultdict(float)
+    mult[entry] = 1.0
+    stack = [entry]
+    seen_stack = set()
+    while stack:
+        c = stack.pop()
+        if c in seen_stack:
+            continue
+        seen_stack.add(c)
+        for child, trip in edges.get(c, []):
+            mult[child] += mult[c] * trip
+            stack.append(child)
+
+    total = {"flops": 0.0, "bytes": 0.0}
+    coll_total = defaultdict(float)
+    for cname, m in mult.items():
+        if m <= 0 or cname not in local:
+            continue
+        lc = local[cname]
+        total["flops"] += m * (lc["flops"] + fusion_flops(cname))
+        total["bytes"] += m * lc["bytes"]
+        for k, v in lc["coll"].items():
+            coll_total[k] += m * v
+
+    coll_total_sum = sum(coll_total.values())
+    return {
+        "flops": total["flops"],
+        "bytes": total["bytes"],
+        "collective_bytes": coll_total_sum,
+        "collectives": dict(coll_total),
+        "entry": entry,
+        "unknown_trip_whiles": unknown_trips,
+    }

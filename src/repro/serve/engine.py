@@ -1,0 +1,64 @@
+"""Batched serving engine: prefill + decode with a fixed-slot batch.
+
+``ServeEngine`` jit-compiles one prefill and one decode step per (batch,
+prompt-len) bucket and runs greedy/temperature sampling.  ``decode_fn`` is
+the function the dry-run lowers for the decode_32k / long_500k cells.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model as M
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_len: int = 2048
+    temperature: float = 0.0       # 0 => greedy
+    seed: int = 0
+
+
+class ServeEngine:
+    def __init__(self, cfg, params, serve_cfg: ServeConfig = ServeConfig()):
+        self.cfg = cfg
+        self.params = params
+        self.scfg = serve_cfg
+
+        def _prefill(params, tokens):
+            return M.prefill(cfg, params, tokens, max_len=serve_cfg.max_len)
+
+        def _decode(params, token, caches, pos):
+            return M.decode_step(cfg, params, token, caches, pos)
+
+        self._prefill = jax.jit(_prefill)
+        self._decode = jax.jit(_decode)
+
+    def _sample(self, logits, key):
+        if self.scfg.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1)
+        return jax.random.categorical(key, logits / self.scfg.temperature,
+                                      axis=-1)
+
+    def generate(self, prompts: np.ndarray, max_new_tokens: int):
+        """prompts: (B, P) int32 (right-aligned, equal length for the batch
+        bucket). Returns (B, max_new_tokens) int32."""
+        B, P = prompts.shape
+        assert P + max_new_tokens <= self.scfg.max_len
+        key = jax.random.PRNGKey(self.scfg.seed)
+        logits, caches = self._prefill(self.params, jnp.asarray(prompts))
+        out = []
+        key, k = jax.random.split(key)
+        tok = self._sample(logits[:, -1], k)
+        out.append(tok)
+        for i in range(max_new_tokens - 1):
+            key, k = jax.random.split(key)
+            logits, caches = self._decode(self.params, tok[:, None], caches,
+                                          jnp.asarray(P + i, jnp.int32))
+            tok = self._sample(logits[:, 0], k)
+            out.append(tok)
+        return np.asarray(jnp.stack(out, axis=1))

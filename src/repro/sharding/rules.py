@@ -1,0 +1,214 @@
+"""Logical-axis sharding rules -> PartitionSpecs (DESIGN.md §4).
+
+Every param carries a tuple of logical axis names (from the model init).
+Resolution is greedy and *divisibility-safe*:
+
+  pass 1 (TP): each logical name tries its preferred mesh axes; an axis is
+    taken only if it divides the dim and isn't already used on this param.
+    (qwen's 40 heads on a 16-way 'model' axis simply fall through — the
+    assignment's sharding footgun, handled by construction.)
+  pass 2 (FSDP): remaining axes (pod, data, and 'model' if still free) are
+    swept onto the largest divisible dims of large params, fully sharding
+    weights ZeRO-3 style.
+
+Optimizer state: Quant8Leaf lives in the flat block domain — codes/absmax/
+master shard their block dim over *all* mesh axes (whole quantization blocks
+per device); Full32Leaf mirrors the param's spec.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.core.optim.base import Full32Leaf, Quant8Leaf
+from repro.core.optim.adafactor import AdafactorLeaf
+
+Pytree = Any
+
+# preferred mesh axes per logical axis name (pass 1)
+DEFAULT_TP_RULES = {
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "mlp": ("model",),
+    "vocab": ("model",),
+    "expert": ("model",),
+    "lru": ("model",),
+    "head_out": (),
+    "embed": (),            # embed dim is FSDP territory, not TP
+    "embed_out": (),
+    "layers": (),           # scan dim: never sharded
+    "unsharded": (),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPolicy:
+    tp_rules: Optional[dict] = None
+    fsdp_axes: tuple = ("pod", "data")
+    fsdp_include_model_if_free: bool = True
+    fsdp_min_size: int = 1 << 20       # params smaller than 1M stay replicated
+    data_axes: tuple = ("pod", "data")  # batch sharding
+    # Params containing these logical dims are left out of the FSDP sweep:
+    # a head/embedding that is both vocab-TP and embed-FSDP makes SPMD
+    # resolve the head backward by all-gathering f32 logit grads
+    # (26 GiB/device measured; EXPERIMENTS.md §Perf C3).
+    fsdp_exclude_logical: tuple = ("vocab",)
+
+    def rules(self):
+        r = dict(DEFAULT_TP_RULES)
+        if self.tp_rules:
+            r.update(self.tp_rules)
+        return r
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name]
+
+
+def resolve_spec(logical: tuple, shape: tuple, mesh: Mesh,
+                 policy: ShardingPolicy) -> P:
+    """Greedy TP + FSDP resolution for one param."""
+    rules = policy.rules()
+    assert len(logical) == len(shape), (logical, shape)
+    assign: list[list[str]] = [[] for _ in shape]
+    used: set[str] = set()
+    avail = set(mesh.axis_names)
+
+    # pass 1: TP preferences
+    for i, (name, dim) in enumerate(zip(logical, shape)):
+        for ax in rules.get(name, ()):  # unknown names -> no TP
+            if ax in avail and ax not in used and dim % _axis_size(mesh, ax) == 0:
+                assign[i].append(ax)
+                used.add(ax)
+                break
+
+    # pass 2: FSDP sweep for large params
+    if (int(np.prod(shape)) >= policy.fsdp_min_size
+            and not any(l in policy.fsdp_exclude_logical for l in logical)):
+        fsdp = list(policy.fsdp_axes)
+        if policy.fsdp_include_model_if_free and "model" not in used \
+                and "model" in avail:
+            fsdp.append("model")
+        for ax in fsdp:
+            if ax not in avail or ax in used:
+                continue
+            # place on the largest dim still divisible by the extra factor
+            order = sorted(range(len(shape)),
+                           key=lambda i: -(shape[i] // max(
+                               math.prod(_axis_size(mesh, a) for a in assign[i]), 1)))
+            for i in order:
+                if logical[i] in ("layers",):
+                    continue
+                cur = math.prod(_axis_size(mesh, a) for a in assign[i]) if assign[i] else 1
+                if shape[i] % (cur * _axis_size(mesh, ax)) == 0:
+                    assign[i].append(ax)
+                    used.add(ax)
+                    break
+
+    return P(*[tuple(a) if len(a) > 1 else (a[0] if a else None)
+               for a in assign])
+
+
+def param_shardings(specs: Pytree, abstract_params: Pytree, mesh: Mesh,
+                    policy: ShardingPolicy) -> Pytree:
+    """Tree of NamedShardings matching the params tree."""
+    def one(spec, p):
+        return NamedSharding(mesh, resolve_spec(tuple(spec), tuple(p.shape),
+                                                mesh, policy))
+    is_spec = lambda t: isinstance(t, tuple) and all(isinstance(e, str) for e in t)
+    return jax.tree_util.tree_map(one, specs, abstract_params, is_leaf=is_spec)
+
+
+def flat_block_spec(mesh: Mesh) -> P:
+    """Spec for the flat block domain: block dim over ALL mesh axes."""
+    return P(tuple(mesh.axis_names), None)
+
+
+def opt_state_shardings(abstract_opt_state, param_shard_tree, mesh: Mesh,
+                        policy: ShardingPolicy):
+    """Shardings for a Block8bitOptimizer / Adafactor state."""
+    blocks = NamedSharding(mesh, flat_block_spec(mesh))
+    vec = NamedSharding(mesh, P(tuple(mesh.axis_names)))
+    rep = NamedSharding(mesh, P())
+
+    def leaf(st, pshard):
+        if isinstance(st, Quant8Leaf):
+            return Quant8Leaf(master=pshard, codes_m=blocks, absmax_m=vec,
+                              codes_r=None if st.codes_r is None else blocks,
+                              absmax_r=None if st.absmax_r is None else vec,
+                              shape=st.shape, n=st.n)
+        if isinstance(st, Full32Leaf):
+            return Full32Leaf(master=pshard, m=pshard,
+                              r=None if st.r is None else pshard)
+        if isinstance(st, AdafactorLeaf):
+            def reduce_last(ps, drop_axis):
+                spec = list(ps.spec) + [None] * (st.master.ndim - len(ps.spec))
+                del spec[drop_axis]
+                return NamedSharding(mesh, P(*spec))
+            return AdafactorLeaf(
+                master=pshard, m=pshard,
+                v_row=None if st.v_row is None else reduce_last(pshard, -1),
+                v_col=None if st.v_col is None else reduce_last(pshard, -2),
+                v_full=None if st.v_full is None else pshard)
+        raise TypeError(type(st))
+
+    is_state_leaf = lambda x: isinstance(x, (Quant8Leaf, Full32Leaf, AdafactorLeaf))
+    leaves = jax.tree_util.tree_map(leaf, abstract_opt_state.leaves,
+                                    param_shard_tree, is_leaf=is_state_leaf)
+    return type(abstract_opt_state)(step=rep, leaves=leaves)
+
+
+def batch_sharding(mesh: Mesh, policy: ShardingPolicy, ndim: int = 2,
+                   batch_dim_size: Optional[int] = None):
+    """Batch-dim sharding over the data axes; drops axes that do not divide
+    the batch (long_500k has global_batch=1 -> fully replicated)."""
+    axes = tuple(a for a in policy.data_axes if a in mesh.axis_names)
+    if batch_dim_size is not None:
+        kept = []
+        prod = 1
+        for a in axes:
+            if batch_dim_size % (prod * mesh.shape[a]) == 0:
+                kept.append(a)
+                prod *= mesh.shape[a]
+        axes = tuple(kept)
+    if not axes:
+        return NamedSharding(mesh, P(*([None] * ndim)))
+    return NamedSharding(mesh, P(axes, *([None] * (ndim - 1))))
+
+
+def cache_shardings(abstract_cache, cfg, mesh: Mesh, policy: ShardingPolicy):
+    """KV-cache / recurrent-state shardings for serving.
+
+    batch dim -> data axes.  Attention caches additionally shard kv_heads on
+    'model' when divisible, else the *sequence* dim on 'model' (sequence
+    parallelism for GQA kv < model axis — DESIGN.md §4).
+    """
+    dp = tuple(a for a in policy.data_axes if a in mesh.axis_names)
+    msize = mesh.shape.get("model", 1)
+
+    def one(x):
+        shape = x.shape
+        nd = len(shape)
+        lead_scan = cfg.scan_layers and cfg.n_superblocks > 0
+        spec = [None] * nd
+        b_idx = 1 if lead_scan else 0
+        if nd > b_idx and shape[b_idx] % max(
+                math.prod(mesh.shape[a] for a in dp), 1) == 0:
+            spec[b_idx] = dp
+        # attention kv cache: (..., B, S, KV, Dh) or absmax (..., B, S, KV)
+        if nd - b_idx in (3, 4) and "model" in mesh.axis_names:
+            kv_idx = nd - 2 if nd - b_idx == 4 else nd - 1
+            s_idx = kv_idx - 1
+            if shape[kv_idx] % msize == 0:
+                spec[kv_idx] = "model"
+            elif shape[s_idx] % msize == 0:
+                spec[s_idx] = "model"
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map(one, abstract_cache)

@@ -1,0 +1,127 @@
+"""Fault-tolerant checkpointing.
+
+Format: one directory per step, containing ``leaves.npz`` (every pytree leaf
+keyed by its tree path) + ``manifest.json`` (step, leaf index, dtypes).
+Writes are atomic (tmp dir + rename), ``keep_last`` old steps are pruned,
+and ``latest_step`` scans the directory so restart-after-crash needs no
+bookkeeping.
+
+Because leaves are stored as *full logical arrays* keyed by path (not by
+device shard), restore is **elastic**: the same checkpoint can be loaded
+onto any mesh shape / sharding — restore takes a template pytree (built with
+``jax.eval_shape``) and optional per-leaf shardings and device_puts
+accordingly.  8-bit optimizer states are stored as their uint8 codes +
+f32 absmax, so checkpoints are ~4x smaller than fp32-state checkpoints —
+the paper's memory saving carried through to the storage/restore path.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+Pytree = Any
+
+
+def _leaf_paths(tree) -> list[tuple[str, Any]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        key = jax.tree_util.keystr(path)
+        out.append((key, leaf))
+    return out
+
+
+def save(ckpt_dir: str, step: int, tree: Pytree, *, keep_last: int = 3) -> str:
+    """Atomically write checkpoint for ``step``. Returns the final path."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    final = os.path.join(ckpt_dir, f"step_{step:010d}")
+    tmp = tempfile.mkdtemp(dir=ckpt_dir, prefix=".tmp_")
+    try:
+        arrays, index = {}, []
+        for i, (key, leaf) in enumerate(_leaf_paths(tree)):
+            if leaf is None:
+                index.append({"key": key, "none": True})
+                continue
+            name = f"a{i}"
+            arrays[name] = np.asarray(jax.device_get(leaf))
+            index.append({"key": key, "name": name,
+                          "dtype": str(arrays[name].dtype),
+                          "shape": list(arrays[name].shape)})
+        np.savez(os.path.join(tmp, "leaves.npz"), **arrays)
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump({"step": step, "index": index}, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    _prune(ckpt_dir, keep_last)
+    return final
+
+
+def _prune(ckpt_dir: str, keep_last: int):
+    steps = sorted(all_steps(ckpt_dir))
+    for s in steps[:-keep_last] if keep_last > 0 else []:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:010d}"),
+                      ignore_errors=True)
+
+
+def all_steps(ckpt_dir: str) -> list[int]:
+    if not os.path.isdir(ckpt_dir):
+        return []
+    out = []
+    for d in os.listdir(ckpt_dir):
+        if d.startswith("step_"):
+            try:
+                out.append(int(d[5:]))
+            except ValueError:
+                pass
+    return sorted(out)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    steps = all_steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def restore(ckpt_dir: str, step: int, template: Pytree,
+            shardings: Optional[Pytree] = None) -> Pytree:
+    """Load ``step`` into the structure of ``template`` (values ignored; may
+    be ShapeDtypeStructs from jax.eval_shape).  ``shardings``: optional
+    matching tree of jax.sharding.Sharding for elastic placement."""
+    path = os.path.join(ckpt_dir, f"step_{step:010d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "leaves.npz"))
+    by_key = {}
+    for ent in manifest["index"]:
+        by_key[ent["key"]] = None if ent.get("none") else data[ent["name"]]
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+    shard_flat = (jax.tree_util.tree_leaves(shardings)
+                  if shardings is not None else [None] * len(flat))
+    leaves = []
+    for (p, tmpl), shd in zip(flat, shard_flat):
+        key = jax.tree_util.keystr(p)
+        if key not in by_key:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        arr = by_key[key]
+        if arr is None:
+            leaves.append(None)
+            continue
+        want = tuple(tmpl.shape) if hasattr(tmpl, "shape") else None
+        if want is not None and tuple(arr.shape) != want:
+            raise ValueError(f"{key}: checkpoint shape {arr.shape} != "
+                             f"template {want}")
+        if shd is not None:
+            leaves.append(jax.device_put(arr, shd))
+        else:
+            leaves.append(jax.device_put(arr))
+    return jax.tree_util.tree_unflatten(treedef, leaves)

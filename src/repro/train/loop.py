@@ -1,0 +1,171 @@
+"""Training step construction: loss, grad accumulation, clipping, optimizer.
+
+``make_train_step`` builds the jit-able function the launcher lowers for the
+multi-pod dry-run; ``train_loop`` is the host loop used by the examples and
+the end-to-end driver (checkpointing, preemption, straggler logging live in
+repro/launch/train.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+
+Pytree = Any
+
+
+class TrainState(NamedTuple):
+    """params are NOT stored: they are a cast view of the optimizer's
+    (sharded, flat-block) master copies, re-materialized inside each step —
+    ZeRO-3 style, no persistent model-shape duplicate."""
+    opt_state: Any            # optimizer-owned (master, 8-bit stats)
+    step: jax.Array           # int32
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainHyper:
+    grad_clip: float = 1.0
+    microbatches: int = 1
+    label_smoothing: float = 0.0
+    moe_aux_coef: float = 0.01
+    moe_z_coef: float = 1e-3
+    lr_schedule: Optional[Callable[[jax.Array], jax.Array]] = None
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  smoothing: float = 0.0) -> jax.Array:
+    """Mean token NLL in f32. logits (B, S, V), labels (B, S).
+
+    The gold logit is extracted with a vocab-local masked reduction (not
+    take_along_axis) so the loss works on *vocab-sharded* logits without an
+    all-gather — with V=100k+ and f32 logits that gather is a 100GB+
+    catastrophe the roofline caught (EXPERIMENTS.md §Perf)."""
+    from repro.models.constrain import constrain
+    logits = constrain(logits.astype(jnp.float32), "dp", None, "tp")
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                          logits.ndim - 1)
+    gold = jnp.sum(jnp.where(vocab_iota == labels[..., None], logits, 0.0),
+                   axis=-1)
+    nll = logz - gold
+    if smoothing > 0.0:
+        mean_lp = jnp.mean(logits - logz[..., None], axis=-1)
+        nll = (1 - smoothing) * nll - smoothing * mean_lp
+    return jnp.mean(nll)
+
+
+def global_norm(tree: Pytree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree_util.tree_leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(tree: Pytree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree_util.tree_map(lambda x: x * scale, tree), norm
+
+
+def make_loss_fn(cfg, hyper: TrainHyper):
+    def loss_fn(params, batch):
+        tokens = batch["tokens"]
+        inputs, labels = tokens[:, :-1], tokens[:, 1:]
+        embeds = batch.get("embeds")
+        logits, mx = M.forward(cfg, params, inputs, embeds=embeds)
+        if embeds is not None:
+            logits = logits[:, -labels.shape[1]:]   # loss on token positions
+        loss = cross_entropy(logits, labels, hyper.label_smoothing)
+        total = loss
+        if "moe_aux_loss" in mx:
+            total = total + hyper.moe_aux_coef * mx["moe_aux_loss"] \
+                          + hyper.moe_z_coef * mx["moe_z_loss"]
+        mx = dict(mx)
+        mx["ce_loss"] = loss
+        return total, mx
+    return loss_fn
+
+
+def make_train_step(cfg, optimizer, hyper: TrainHyper = TrainHyper(),
+                    param_shardings=None):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    grad accumulation: batch is split into ``hyper.microbatches`` equal
+    slices along the batch dim and grads averaged with a scan (bounds
+    activation + MoE dispatch memory — the per-(arch,shape) knob of §Perf).
+
+    ``param_shardings``: optional pytree of NamedSharding constraining the
+    params view reconstructed from the flat-block master — without it XLA
+    propagates the block-domain sharding through the reshape and lands on
+    the scan (layers) dim, triggering involuntary full rematerialization.
+    """
+    loss_fn = make_loss_fn(cfg, hyper)
+    param_dtype = jnp.dtype(cfg.param_dtype)
+
+    def compute_grads(params, batch):
+        if hyper.microbatches <= 1:
+            (loss, mx), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+            return loss, mx, grads
+
+        n = hyper.microbatches
+
+        def micro(carry, mb):
+            acc, loss_acc = carry
+            (loss, mx), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+            acc = jax.tree_util.tree_map(jnp.add, acc, g)
+            return (acc, loss_acc + loss), mx
+
+        def split(x):
+            b = x.shape[0]
+            return x.reshape(n, b // n, *x.shape[1:])
+
+        mbs = jax.tree_util.tree_map(split, batch)
+        # The accumulator MUST carry the param sharding: an unconstrained
+        # zeros tree lets SPMD replicate it, turning every microbatch's
+        # gradient into a full (unsharded) all-reduce — measured as ~90x
+        # param-bytes of all-reduce on kimi train_4k (§Perf A3).
+        zero = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        if param_shardings is not None:
+            zero = jax.tree_util.tree_map(
+                jax.lax.with_sharding_constraint, zero, param_shardings)
+        (gsum, loss_sum), mxs = jax.lax.scan(micro, (zero, 0.0), mbs)
+        grads = jax.tree_util.tree_map(lambda g: g / n, gsum)
+        mx = {k: jnp.mean(v) for k, v in mxs.items()}
+        return loss_sum / n, mx, grads
+
+    def train_step(state: TrainState, batch):
+        params = optimizer.params_view(state.opt_state, param_dtype)
+        if param_shardings is not None:
+            params = jax.tree_util.tree_map(
+                jax.lax.with_sharding_constraint, params, param_shardings)
+        loss, mx, grads = compute_grads(params, batch)
+        grads, gnorm = clip_by_global_norm(grads, hyper.grad_clip)
+        lr = hyper.lr_schedule(state.step) if hyper.lr_schedule else None
+        _, new_opt = optimizer.apply(grads, state.opt_state, lr=lr,
+                                     param_dtype=param_dtype)
+        metrics = {"loss": loss, "grad_norm": gnorm, **mx}
+        return TrainState(opt_state=new_opt, step=state.step + 1), metrics
+
+    return train_step
+
+
+def init_train_state(cfg, optimizer, key) -> tuple[TrainState, Pytree]:
+    """-> (state, logical param specs)."""
+    params, specs = M.init_model(cfg, key)
+    opt_state = optimizer.init(params)
+    return TrainState(opt_state=opt_state,
+                      step=jnp.zeros((), jnp.int32)), specs
+
+
+def warmup_cosine(lr: float, warmup: int, total: int, floor: float = 0.1):
+    def sched(step):
+        step = step.astype(jnp.float32)
+        warm = lr * jnp.minimum(1.0, (step + 1) / max(warmup, 1))
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup, warm, lr * cos)
+    return sched

@@ -1,0 +1,146 @@
+"""Block-wise quantization core: roundtrip, outlier isolation, hypothesis
+property tests on the system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import blockwise as bw
+from repro.core import qmap
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def test_roundtrip_relative_error_bound():
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (50_000,)) * 0.01
+    qt = bw.quantize(x)
+    xd = bw.dequantize(qt)
+    rel = jnp.abs(xd - x) / (jnp.abs(x) + 1e-12)
+    # dynamic map mean relative error is a few percent (paper App F, Table 6)
+    assert float(jnp.mean(rel)) < 0.05
+
+
+def test_positive_blockmax_exact():
+    """Paper §2.1: the (positive) max-magnitude value per block is
+    represented without error."""
+    key = jax.random.PRNGKey(1)
+    x = jnp.abs(jax.random.normal(key, (8192,))) + 0.1
+    qt = bw.quantize(x, signed=False, qmap_name="dynamic")
+    xd = bw.dequantize(qt)
+    blocks = bw.pad_to_blocks(x, 2048)
+    dblocks = bw.pad_to_blocks(xd, 2048)
+    idx = jnp.argmax(jnp.abs(blocks), axis=-1)
+    rows = jnp.arange(blocks.shape[0])
+    assert jnp.allclose(blocks[rows, idx], dblocks[rows, idx])
+
+
+def test_outlier_isolation():
+    """An outlier in one block must not degrade other blocks (§2.1)."""
+    rng = np.random.RandomState(0)
+    x = rng.randn(4096).astype(np.float32) * 0.01
+    x_out = x.copy()
+    x_out[100] = 100.0                      # huge outlier in block 0
+    e_clean = float(bw.quantization_error(jnp.asarray(x)[2048:],
+                                          bw.quantize(jnp.asarray(x[2048:]))))
+    e_block1_with_outlier = float(bw.quantization_error(
+        jnp.asarray(x_out)[2048:],
+        bw.QuantizedTensor(
+            codes=bw.quantize(jnp.asarray(x_out)).codes[1:],
+            absmax=bw.quantize(jnp.asarray(x_out)).absmax[1:],
+            shape=(2048,), qmap_name="dynamic", signed=True)))
+    assert e_block1_with_outlier == pytest.approx(e_clean, rel=1e-5)
+
+
+def test_tensorwise_outlier_hurts():
+    """Contrast (paper §2.1): with a tensor-wide absmax an outlier wastes
+    the quantization range of every other value; with block-wise absmax the
+    damage is confined to the outlier's block.  Measured on the outlier-free
+    second block, for both linear and dynamic codebooks."""
+    rng = np.random.RandomState(0)
+    x = jnp.asarray(rng.randn(4096).astype(np.float32) * 0.01)
+    x_out = x.at[0].set(100.0)
+    for name, min_ratio in [("linear", 50.0), ("dynamic", 5.0)]:
+        cb = jnp.asarray(qmap.get_qmap(name, True))
+        codes, absmax = bw.quantize_blocks(x_out.reshape(1, -1), cb)
+        xd = bw.dequantize_blocks(codes, absmax, cb).reshape(-1)
+        err_tensorwise = float(jnp.mean(jnp.abs(xd[2048:] - x_out[2048:])))
+        qt = bw.quantize(x_out, qmap_name=name, block_size=2048)
+        d = bw.dequantize(qt)
+        err_blockwise = float(jnp.mean(jnp.abs(d[2048:] - x_out[2048:])))
+        assert err_tensorwise > min_ratio * err_blockwise, (
+            name, err_tensorwise, err_blockwise)
+
+
+@settings(max_examples=30, deadline=None)
+@given(n=st.integers(1, 5000),
+       scale=st.floats(1e-6, 1e3),
+       seed=st.integers(0, 2**30))
+def test_property_roundtrip_bounded(n, scale, seed):
+    """For any input, block-wise dynamic quantization error is bounded by
+    the local absmax times the largest codebook gap."""
+    rng = np.random.RandomState(seed)
+    x = jnp.asarray(rng.randn(n).astype(np.float32) * scale)
+    qt = bw.quantize(x)
+    xd = bw.dequantize(qt)
+    blocks = bw.pad_to_blocks(x, qt.block_size)
+    absmax = jnp.max(jnp.abs(blocks), axis=-1)
+    cb = qmap.get_qmap("dynamic", True)
+    max_gap = float(np.max(np.diff(cb))) / 2 + 1e-7
+    bound = absmax[:, None] * max_gap
+    err = jnp.abs(bw.pad_to_blocks(xd, qt.block_size) - blocks)
+    assert bool(jnp.all(err <= bound + 1e-12))
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**30), block_size=st.sampled_from([256, 512, 2048]))
+def test_property_block_independence(seed, block_size):
+    """Changing one block's contents never changes other blocks' codes."""
+    rng = np.random.RandomState(seed)
+    x = rng.randn(4 * block_size).astype(np.float32)
+    y = x.copy()
+    y[:block_size] *= 1000.0
+    qx = bw.quantize(jnp.asarray(x), block_size=block_size)
+    qy = bw.quantize(jnp.asarray(y), block_size=block_size)
+    assert bool(jnp.all(qx.codes[1:] == qy.codes[1:]))
+    assert bool(jnp.all(qx.absmax[1:] == qy.absmax[1:]))
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**30))
+def test_property_sign_preserved(seed):
+    rng = np.random.RandomState(seed)
+    x = jnp.asarray(rng.randn(3000).astype(np.float32))
+    xd = bw.dequantize(bw.quantize(x))
+    assert bool(jnp.all(jnp.sign(xd) * jnp.sign(x) >= 0))
+
+
+def test_unsigned_nonnegative():
+    x = jnp.abs(jax.random.normal(jax.random.PRNGKey(0), (5000,)))
+    xd = bw.dequantize(bw.quantize(x, signed=False))
+    assert bool(jnp.all(xd >= 0))
+
+
+def test_stochastic_rounding_unbiased():
+    key = jax.random.PRNGKey(0)
+    x = jnp.full((2048,), 0.3)      # sits between two codes
+    cb = jnp.asarray(qmap.get_qmap("dynamic", True))
+    outs = []
+    for i in range(200):
+        c, a = bw.quantize_blocks(x.reshape(1, -1), cb,
+                                  stochastic_rounding=True,
+                                  key=jax.random.fold_in(key, i))
+        outs.append(float(bw.dequantize_blocks(c, a, cb).mean()))
+    est = np.mean(outs)
+    det_c, det_a = bw.quantize_blocks(x.reshape(1, -1), cb)
+    det = float(bw.dequantize_blocks(det_c, det_a, cb).mean())
+    # stochastic mean should be closer to the true value than deterministic
+    assert abs(est - 0.3) <= abs(det - 0.3) + 1e-4
+
+
+def test_zeros_like_quantized():
+    x = jnp.ones((3, 1000))
+    z = bw.zeros_like_quantized(x)
+    assert float(jnp.abs(bw.dequantize(z)).max()) == 0.0
+    assert bw.dequantize(z).shape == (3, 1000)

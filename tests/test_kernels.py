@@ -1,0 +1,107 @@
+"""Pallas kernel validation: interpret-mode execution vs the pure-jnp oracle
+(ref.py), swept over shapes and dtypes as required for every kernel."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import qmap
+from repro.kernels import ops, ref
+
+QS = jnp.asarray(qmap.get_qmap("dynamic", True))
+QU = jnp.asarray(qmap.get_qmap("dynamic", False))
+
+SHAPES = [(1, 128), (4, 256), (8, 512), (3, 2048), (16, 1024)]
+
+
+def _rand(nb, bsz, seed=0, scale=1.0):
+    k = jax.random.PRNGKey(seed)
+    return jax.random.normal(k, (nb, bsz), jnp.float32) * scale
+
+
+@pytest.mark.parametrize("nb,bsz", SHAPES)
+def test_quantize_kernel_matches_ref(nb, bsz):
+    x = _rand(nb, bsz, scale=0.01)
+    c_k, a_k = ops.quantize_blockwise(x, QS, impl="interpret")
+    c_r, a_r = ref.quantize_ref(x, QS)
+    np.testing.assert_array_equal(np.asarray(c_k), np.asarray(c_r))
+    np.testing.assert_allclose(np.asarray(a_k), np.asarray(a_r))
+
+
+@pytest.mark.parametrize("nb,bsz", SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_dequantize_kernel_matches_ref(nb, bsz, dtype):
+    x = _rand(nb, bsz, seed=1)
+    c, a = ref.quantize_ref(x, QS)
+    d_k = ops.dequantize_blockwise(c, a, QS, impl="interpret", dtype=dtype)
+    d_r = ref.dequantize_ref(c, a, QS, dtype)
+    np.testing.assert_allclose(np.asarray(d_k, np.float32),
+                               np.asarray(d_r, np.float32), atol=1e-6)
+
+
+@pytest.mark.parametrize("nb,bsz", [(2, 256), (5, 512), (8, 2048)])
+@pytest.mark.parametrize("gdtype", [jnp.float32, jnp.bfloat16])
+def test_fused_adam8_matches_ref(nb, bsz, gdtype):
+    p = _rand(nb, bsz, 2)
+    g = _rand(nb, bsz, 3, 0.1).astype(gdtype)
+    cm, am = ref.quantize_ref(_rand(nb, bsz, 4, 0.01), QS)
+    cr, ar = ref.quantize_ref(jnp.abs(_rand(nb, bsz, 5, 1e-4)), QU)
+    kw = dict(lr=1e-3, beta1=0.9, beta2=0.999, eps=1e-8,
+              weight_decay=0.01, step=7.0)
+    out_k = ops.adam8_update(p, g, cm, am, cr, ar, QS, QU,
+                             impl="interpret", **kw)
+    out_r = ops.adam8_update(p, g, cm, am, cr, ar, QS, QU, impl="jnp", **kw)
+    for k_, r_ in zip(out_k, out_r):
+        if k_.dtype == jnp.uint8:
+            # codes may differ only at exact boundary ties
+            mism = int((np.asarray(k_) != np.asarray(r_)).sum())
+            assert mism <= k_.size * 0.001
+        else:
+            np.testing.assert_allclose(np.asarray(k_, np.float32),
+                                       np.asarray(r_, np.float32),
+                                       atol=5e-6, rtol=1e-5)
+
+
+@pytest.mark.parametrize("nb,bsz", [(2, 256), (4, 1024)])
+def test_fused_momentum8_matches_ref(nb, bsz):
+    p = _rand(nb, bsz, 6)
+    g = _rand(nb, bsz, 7, 0.1)
+    cm, am = ref.quantize_ref(_rand(nb, bsz, 8, 0.05), QS)
+    kw = dict(lr=0.1, beta1=0.9, weight_decay=1e-4, step=3.0)
+    out_k = ops.momentum8_update(p, g, cm, am, QS, impl="interpret", **kw)
+    out_r = ops.momentum8_update(p, g, cm, am, QS, impl="jnp", **kw)
+    for k_, r_ in zip(out_k, out_r):
+        if k_.dtype == jnp.uint8:
+            assert int((np.asarray(k_) != np.asarray(r_)).sum()) <= k_.size * 0.001
+        else:
+            np.testing.assert_allclose(np.asarray(k_), np.asarray(r_),
+                                       atol=5e-6, rtol=1e-5)
+
+
+def test_kernel_row_padding():
+    """ops.* pads non-multiple-of-rows block counts transparently."""
+    x = _rand(5, 256)      # 5 rows, default rows=8 -> padded to 8
+    c_k, a_k = ops.quantize_blockwise(x, QS, impl="interpret", rows=8)
+    c_r, a_r = ref.quantize_ref(x, QS)
+    assert c_k.shape == (5, 256)
+    np.testing.assert_array_equal(np.asarray(c_k), np.asarray(c_r))
+
+
+def test_zero_block_safe():
+    """All-zero blocks (padding) must not produce NaN (absmax=0 guard)."""
+    x = jnp.zeros((4, 256))
+    c, a = ops.quantize_blockwise(x, QS, impl="interpret")
+    d = ops.dequantize_blockwise(c, a, QS, impl="interpret")
+    assert not bool(jnp.isnan(d).any())
+    assert float(jnp.abs(d).max()) == 0.0
+
+
+def test_quantize_other_codebooks():
+    """Kernel works for any sorted 256-codebook (linear, quantile...)."""
+    for name, signed in [("linear", True), ("quantile_normal", True),
+                         ("inverse_dynamic", False)]:
+        cb = jnp.asarray(qmap.get_qmap(name, signed))
+        x = _rand(4, 256, 9) if signed else jnp.abs(_rand(4, 256, 9))
+        c_k, a_k = ops.quantize_blockwise(x, cb, impl="interpret")
+        c_r, a_r = ref.quantize_ref(x, cb)
+        np.testing.assert_array_equal(np.asarray(c_k), np.asarray(c_r))

@@ -1,0 +1,139 @@
+"""Optimizer behaviour: 8-bit vs 32-bit parity, convergence, overrides,
+memory accounting, ablation modes."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.optim import (Block8bitOptimizer, Full32Leaf, OptimConfig,
+                              Quant8Leaf, make_optimizer)
+
+
+def _params(key=0):
+    k = jax.random.PRNGKey(key)
+    ks = jax.random.split(k, 3)
+    return {
+        "dense": {"w": jax.random.normal(ks[0], (64, 128))},
+        "embed": {"w": jax.random.normal(ks[1], (128, 64))},
+        "bias": jnp.zeros((10,)),
+    }
+
+
+def _loss(p, target):
+    return sum(jnp.sum((a - b) ** 2)
+               for a, b in zip(jax.tree_util.tree_leaves(p),
+                               jax.tree_util.tree_leaves(target)))
+
+
+def _run(name, steps=150, lr=3e-2, **kw):
+    params = _params()
+    target = jax.tree_util.tree_map(lambda p: jnp.ones_like(p) * 0.5, params)
+    opt = make_optimizer(name, lr=lr, min_8bit_size=1024, **kw)
+    st = opt.init(params)
+    grad = jax.jit(jax.grad(lambda p: _loss(p, target)))
+    p = params
+    for _ in range(steps):
+        p, st = opt.apply(grad(p), st)
+    return float(_loss(p, target)), opt, st
+
+
+def test_adam8_matches_adam32():
+    l32, _, _ = _run("adam32")
+    l8, _, _ = _run("adam8")
+    assert abs(l8 - l32) / max(l32, 1e-6) < 0.5
+
+
+def test_momentum_converges():
+    l8, _, _ = _run("momentum8", lr=1e-2)
+    assert l8 < 1e-3
+
+
+@pytest.mark.parametrize("name", ["lamb8", "adagrad8", "adafactor32",
+                                  "lars8", "adamw8"])
+def test_all_optimizers_decrease_loss(name):
+    params = _params()
+    target = jax.tree_util.tree_map(lambda p: jnp.ones_like(p) * 0.5, params)
+    l0 = float(_loss(params, target))
+    lend, _, _ = _run(name, steps=100, lr=1e-2)
+    assert lend < l0
+
+
+def test_stable_embedding_override_is_32bit():
+    """Paper §2.3: embedding leaves keep 32-bit optimizer state."""
+    opt = make_optimizer("adam8", lr=1e-3, min_8bit_size=1024)
+    st = opt.init(_params())
+    assert isinstance(st.leaves["embed"]["w"], Full32Leaf)
+    assert isinstance(st.leaves["dense"]["w"], Quant8Leaf)
+    assert isinstance(st.leaves["bias"], Full32Leaf)   # < min_8bit_size
+
+
+def test_memory_accounting():
+    opt8 = make_optimizer("adam8", lr=1e-3, min_8bit_size=1,
+                          override_32bit=lambda p: False)
+    opt32 = make_optimizer("adam32", lr=1e-3)
+    p = {"w": jnp.zeros((4096, 64))}           # 256k elements, 128 blocks
+    b8 = opt8.state_bytes(opt8.init(p))
+    b32 = opt32.state_bytes(opt32.init(p))
+    # 2 states: 8-bit = 2*(1 + 4/2048) bytes/param vs 8 bytes/param
+    assert b32["state_bytes"] == 8 * 4096 * 64
+    assert b8["state_bytes"] == pytest.approx(2 * 4096 * 64 * (1 + 4 / 2048),
+                                              rel=1e-6)
+    assert b8["state_bytes"] < b32["state_bytes"] / 3.9
+
+
+def test_bf16_master_mode():
+    l8, opt, st = _run("adam8", master_dtype="bfloat16")
+    assert st.leaves["dense"]["w"].master.dtype == jnp.bfloat16
+    assert np.isfinite(l8)
+
+
+def test_tensorwise_ablation_runs():
+    l, _, _ = _run("adam8", blockwise_norm=False)
+    assert np.isfinite(l)
+
+
+def test_linear_qmap_ablation_runs():
+    l, _, _ = _run("adam8", qmap_m="linear", qmap_r="linear")
+    assert np.isfinite(l)
+
+
+def test_stochastic_rounding_path():
+    params = _params()
+    target = jax.tree_util.tree_map(lambda p: jnp.ones_like(p) * 0.5, params)
+    opt = make_optimizer("adagrad8", lr=1e-2, min_8bit_size=1024,
+                         stochastic_rounding=True)
+    st = opt.init(params)
+    g = jax.grad(lambda p: _loss(p, target))(params)
+    p2, st2 = opt.apply(g, st, key=jax.random.PRNGKey(0))
+    assert all(np.isfinite(np.asarray(x)).all()
+               for x in jax.tree_util.tree_leaves(p2))
+
+
+def test_params_view_matches_apply_output():
+    params = _params()
+    opt = make_optimizer("adam8", lr=1e-3, min_8bit_size=1024)
+    st = opt.init(params)
+    view = opt.params_view(st)
+    for a, b in zip(jax.tree_util.tree_leaves(view),
+                    jax.tree_util.tree_leaves(params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-7)
+
+
+def test_shard_multiple_pads_blocks():
+    opt = make_optimizer("adam8", lr=1e-3, min_8bit_size=1,
+                         override_32bit=lambda p: False, shard_multiple=16)
+    st = opt.init({"w": jnp.zeros((5000,))})
+    leaf = st.leaves["w"]
+    assert leaf.codes_m.shape[0] % 16 == 0
+
+
+def test_bias_correction_first_step_magnitude():
+    """After one step from zero state, Adam update ~= lr * sign(g)."""
+    opt = make_optimizer("adam32", lr=0.1, weight_decay=0.0)
+    p = {"w": jnp.zeros((8,))}
+    st = opt.init(p)
+    g = {"w": jnp.ones((8,)) * 3.0}
+    p2, _ = opt.apply(g, st)
+    np.testing.assert_allclose(np.asarray(p2["w"]), -0.1, rtol=1e-3)

@@ -1,0 +1,89 @@
+"""Codebook (qmap) unit + property tests."""
+import numpy as np
+import pytest
+
+from repro.core import qmap
+
+
+@pytest.mark.parametrize("name", ["dynamic", "inverse_dynamic", "linear",
+                                  "quantile_normal"])
+@pytest.mark.parametrize("signed", [True, False])
+def test_qmap_basic_properties(name, signed):
+    m = qmap.get_qmap(name, signed)
+    assert m.shape == (256,)
+    assert m.dtype == np.float32
+    assert np.all(np.diff(m) >= 0), "codebook must be sorted"
+    assert m.max() == pytest.approx(1.0)
+    if signed:
+        assert m.min() < -0.5
+    else:
+        assert m.min() >= 0.0
+
+
+def test_dynamic_signed_matches_reference_construction():
+    """Structure of the bitsandbytes dynamic map: 7 exponent levels,
+    2^i fraction values per level per sign, plus {0, 1.0}."""
+    m = qmap.dynamic_map(signed=True)
+    pos = m[m > 0]
+    assert len(pos) == 128                       # 127 + the appended 1.0
+    assert np.isclose(pos.min(), 0.55e-6)        # 10^-6 * mid(0.1, 1.0)
+    assert pos.max() == 1.0
+    neg = m[m < 0]
+    assert len(neg) == 127
+    # max-magnitude negative code is NOT -1 (reference asymmetry)
+    assert np.isclose(neg.min(), -0.9929, atol=1e-3)
+    assert (m == 0).sum() == 1
+    # dynamic range ~7 orders of magnitude (paper §1.3)
+    assert pos.max() / pos.min() > 1e6
+
+
+def test_dynamic_unsigned_extra_fraction_bit():
+    """Unsigned map re-purposes the sign bit: twice the fraction resolution
+    per level (paper §2.2)."""
+    u = qmap.dynamic_map(signed=False)
+    s = qmap.dynamic_map(signed=True)
+    assert (u >= 0).all()
+    # unsigned has ~2x the codes in (0.1, 1.0) vs the signed positives
+    u_top = ((u >= 0.1) & (u < 1.0)).sum()
+    s_top = ((s >= 0.1) & (s < 1.0)).sum()
+    assert u_top == 2 * s_top
+
+
+def test_inverse_dynamic_precision_at_small_end():
+    """Inverse map gives more resolution to small magnitudes (App F.1)."""
+    inv = qmap.inverse_dynamic_map(signed=False)
+    dyn = qmap.dynamic_map(signed=False)
+    thr = 1e-4
+    assert (inv[(inv > 0) & (inv < thr)].size
+            > dyn[(dyn > 0) & (dyn < thr)].size)
+
+
+def test_quantile_map_equal_mass():
+    """Quantile map: standard-normal samples normalized by the map's own
+    normalizer hit all codes roughly uniformly (minimum-entropy encoding,
+    App F.2)."""
+    m = qmap.normal_quantile_map(signed=True)
+    k = 256
+    qs = qmap._norm_ppf(np.linspace(1.0 / (k + 1), k / (k + 1), k + 1))
+    norm_const = np.max(np.abs((qs[:-1] + qs[1:]) / 2.0))
+    rng = np.random.RandomState(0)
+    x = np.clip(rng.randn(200_000).astype(np.float32) / norm_const, -1, 1)
+    bounds = qmap.boundaries(m)
+    codes = np.searchsorted(bounds, x, side="right")
+    counts = np.bincount(codes, minlength=256)
+    mid = counts[8:-8]
+    assert mid.min() > 0.3 * x.size / 256
+    assert mid.max() < 3.0 * x.size / 256
+
+
+def test_boundaries_are_nearest_neighbour():
+    m = qmap.dynamic_map(signed=True)
+    b = qmap.boundaries(m)
+    rng = np.random.RandomState(1)
+    x = rng.uniform(-1, 1, 1000).astype(np.float32)
+    codes = np.searchsorted(b, x, side="right")
+    brute = np.argmin(np.abs(m[None, :] - x[:, None]), axis=1)
+    # ties can differ by one index with equal |error|
+    err_fast = np.abs(m[codes] - x)
+    err_brute = np.abs(m[brute] - x)
+    assert np.allclose(err_fast, err_brute, atol=1e-7)

@@ -1,0 +1,95 @@
+"""End-to-end training behaviour: loss decreases toward the entropy floor;
+8-bit Adam tracks 32-bit Adam (the paper's core claim at test scale);
+grad accumulation is batch-equivalent; ablations rank as in Table 3."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import base
+from repro.core.optim import make_optimizer
+from repro.data.pipeline import DataConfig, SyntheticLMPipeline
+from repro.train import loop as L
+
+
+def _setup(vocab=128, seq=32, batch=8, **cfg_kw):
+    cfg = base.reduced(base.get_config("paper-lm-209m"), d_model=64,
+                       n_layers=2, vocab_size=vocab, **cfg_kw)
+    pipe = SyntheticLMPipeline(DataConfig(vocab_size=vocab, seq_len=seq,
+                                          global_batch=batch))
+    return cfg, pipe
+
+
+def _train(cfg, pipe, opt_name, steps, hyper=None, **opt_kw):
+    opt = make_optimizer(opt_name, lr=5e-3, min_8bit_size=1024, **opt_kw)
+    state, _ = L.init_train_state(cfg, opt, jax.random.PRNGKey(0))
+    step = jax.jit(L.make_train_step(cfg, opt, hyper or L.TrainHyper()))
+    losses = []
+    for i in range(steps):
+        batch = {k: jnp.asarray(v) for k, v in pipe.batch_at(i).items()}
+        state, m = step(state, batch)
+        losses.append(float(m["loss"]))
+    return losses
+
+
+def test_loss_decreases_toward_floor():
+    cfg, pipe = _setup()
+    losses = _train(cfg, pipe, "adam32", 50)
+    assert losses[-1] < losses[0] * 0.7
+    assert losses[-1] > pipe.bigram_entropy() * 0.5   # can't beat the floor
+
+
+def test_8bit_tracks_32bit():
+    """Paper Table 1/3: 8-bit Adam matches 32-bit Adam."""
+    cfg, pipe = _setup()
+    l32 = _train(cfg, pipe, "adam32", 50)
+    l8 = _train(cfg, pipe, "adam8", 50)
+    assert abs(l8[-1] - l32[-1]) < 0.05 * l32[-1] + 0.05
+
+
+def test_grad_accumulation_equivalent():
+    cfg, pipe = _setup(batch=8)
+    l1 = _train(cfg, pipe, "adam32", 10, hyper=L.TrainHyper(microbatches=1))
+    l4 = _train(cfg, pipe, "adam32", 10, hyper=L.TrainHyper(microbatches=4))
+    np.testing.assert_allclose(l1, l4, rtol=2e-3, atol=2e-3)
+
+
+def test_linear_quantization_is_worse():
+    """Table 3 ordering: linear-quantized 8-bit Adam is worse/less stable
+    than dynamic-quantized 8-bit Adam."""
+    cfg, pipe = _setup()
+    l_dyn = _train(cfg, pipe, "adam8", 60)
+    l_lin = _train(cfg, pipe, "adam8", 60, qmap_m="linear", qmap_r="linear")
+    assert l_dyn[-1] <= l_lin[-1] + 0.02
+
+
+def test_lr_schedule_applied():
+    cfg, pipe = _setup()
+    sched = L.warmup_cosine(5e-3, warmup=5, total=20)
+    losses = _train(cfg, pipe, "adam32", 10,
+                    hyper=L.TrainHyper(lr_schedule=sched))
+    assert all(np.isfinite(losses))
+
+
+def test_grad_clip_engages():
+    cfg, pipe = _setup()
+    opt = make_optimizer("adam32", lr=5e-3)
+    state, _ = L.init_train_state(cfg, opt, jax.random.PRNGKey(0))
+    step = jax.jit(L.make_train_step(cfg, opt, L.TrainHyper(grad_clip=1e-6)))
+    batch = {k: jnp.asarray(v) for k, v in pipe.batch_at(0).items()}
+    _, m = step(state, batch)
+    assert float(m["grad_norm"]) > 1e-6    # reported norm is pre-clip
+
+
+def test_vlm_embeds_path_trains():
+    cfg, pipe = _setup()
+    import dataclasses
+    cfg = dataclasses.replace(cfg, frontend="vision", frontend_tokens=4)
+    opt = make_optimizer("adam8", lr=1e-3, min_8bit_size=1024)
+    # rebuild: frontend needs params
+    state, _ = L.init_train_state(cfg, opt, jax.random.PRNGKey(0))
+    step = jax.jit(L.make_train_step(cfg, opt))
+    b = {k: jnp.asarray(v) for k, v in pipe.batch_at(0).items()}
+    b["embeds"] = jnp.ones((8, 4, cfg.d_model)) * 0.1
+    _, m = step(state, b)
+    assert bool(jnp.isfinite(m["loss"]))
