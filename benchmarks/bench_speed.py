@@ -7,12 +7,19 @@ the kernel's TPU roofline position is derived analytically (bytes streamed /
 HBM bw — the kernel is bandwidth-bound; DESIGN.md §3)."""
 from __future__ import annotations
 
+import functools
+import json
+import os
+import time
+
 import jax
 import jax.numpy as jnp
 
 from benchmarks.common import emit, time_fn
 from repro.core import qmap
 from repro.kernels import ops, ref
+
+BENCH_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_speed.json")
 
 
 def bench_table5_update_speed(n_params: int = 1 << 20):
@@ -29,7 +36,8 @@ def bench_table5_update_speed(n_params: int = 1 << 20):
 
     @jax.jit
     def adam8_jnp(p, g, cm, am, cr, ar):
-        return ops.adam8_update(p, g, cm, am, cr, ar, qs, qu, impl="jnp", **kw)
+        return ops.fused_update("adam", p, g, cm, am, cr, ar, qs, qu,
+                                impl="jnp", **kw)
 
     @jax.jit
     def adam32(p, g, m, r):
@@ -51,7 +59,7 @@ def bench_table5_update_speed(n_params: int = 1 << 20):
     small = 1 << 16
     nb2 = small // 2048
     us8k, _ = time_fn(
-        lambda: ops.adam8_update(p[:nb2], g[:nb2], cm[:nb2], am[:nb2],
+        lambda: ops.fused_update("adam", p[:nb2], g[:nb2], cm[:nb2], am[:nb2],
                                  cr[:nb2], ar[:nb2], qs, qu,
                                  impl="interpret", **kw), iters=2, warmup=1)
     emit(f"table5/adam8_pallas_interpret_us_per_{small}p", us8k,
@@ -63,6 +71,86 @@ def bench_table5_update_speed(n_params: int = 1 << 20):
     t_1b = 1e9 * bytes_per_param / 819e9
     emit("table5/adam8_tpu_hbm_bound_ms_per_1B", 0.0,
          f"{t_1b * 1e3:.1f}ms (819GB/s v5e; paper reports 47ms on V100)")
+
+
+def _sweep_inputs(algo, nb, bsz):
+    qs = jnp.asarray(qmap.get_qmap("dynamic", True))
+    qu = jnp.asarray(qmap.get_qmap("dynamic", False))
+    kp, kg = jax.random.split(jax.random.PRNGKey(0))
+    p = jax.random.normal(kp, (nb, bsz))
+    g = jax.random.normal(kg, (nb, bsz)) * 0.01
+    two = algo in ("adam", "adamw", "lamb")
+    if algo == "adagrad":
+        cm, am = ref.quantize_ref(jnp.abs(p) * 1e-3, qu)
+        q1 = qu
+    else:
+        cm, am = ref.quantize_ref(p * 0.01, qs)
+        q1 = qs
+    cr, ar = ref.quantize_ref(jnp.abs(p) * 1e-4, qu) if two else (None, None)
+    return p, g, cm, am, cr, ar, q1, qu
+
+
+def bench_fused_update_sweep(smoke: bool = False):
+    """All six algorithms x {fused (Pallas interpret off-TPU), jnp} through
+    the one registry entry point; appends an entry to BENCH_speed.json so
+    the LAMB/LARS/AdaGrad fused speedup shows up in the perf trajectory.
+
+    On CPU the interpret path measures correctness-bearing overhead, not
+    TPU perf; the jnp column is the XLA fallback every algorithm used to
+    take for its non-fused passes."""
+    kw = dict(lr=1e-3, beta1=0.9, beta2=0.999, eps=1e-8, weight_decay=0.01,
+              step=3.0, trust_coeff=1e-3)
+    sizes = {"jnp": (64, 2048) if smoke else (512, 2048),
+             "interpret": (8, 256) if smoke else (8, 2048)}
+    iters = {"jnp": (3, 1) if smoke else (5, 2), "interpret": (2, 1)}
+
+    def jitted(algo, impl):
+        # arrays are traced; algo/impl/hypers close over (strings can't be
+        # jit args) — so the jnp column times XLA, not eager dispatch
+        @jax.jit
+        def run(*arrs):
+            return ops.fused_update(algo, *arrs, impl=impl, **kw)
+        return run
+
+    results: dict[str, dict[str, float]] = {}
+    for algo in ops.ALGOS:
+        results[algo] = {}
+        for impl in ("jnp", "interpret"):
+            nb, bsz = sizes[impl]
+            args = _sweep_inputs(algo, nb, bsz)
+            fn = jitted(algo, impl)
+            it, warm = iters[impl]
+            us, _ = time_fn(functools.partial(fn, *args), iters=it,
+                            warmup=warm)
+            n = nb * bsz
+            results[algo][impl] = us
+            emit(f"table5/fused_sweep/{algo}/{impl}_us_per_{n}p", us,
+                 f"{us * 1e9 / n / 1000:.2f}ms/1Bparam" if impl == "jnp"
+                 else "validation-path")
+    _append_bench_json({
+        "bench": "fused_update_sweep",
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "smoke": smoke,
+        "backend": jax.default_backend(),
+        "sizes": {k: list(v) for k, v in sizes.items()},
+        "us_per_call": results,
+    })
+    return results
+
+
+def _append_bench_json(entry: dict) -> None:
+    path = os.path.abspath(BENCH_JSON)
+    data = {"entries": []}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                data = json.load(f)
+        except (json.JSONDecodeError, OSError):
+            data = {"entries": []}
+    data.setdefault("entries", []).append(entry)
+    with open(path, "w") as f:
+        json.dump(data, f, indent=2)
+    emit("table5/fused_sweep/json", 0.0, path)
 
 
 def bench_quantize_throughput():
@@ -79,9 +167,11 @@ def bench_quantize_throughput():
          f"{n / us:.0f} elem/us")
 
 
-def main():
-    bench_table5_update_speed()
-    bench_quantize_throughput()
+def main(smoke: bool = False):
+    if not smoke:
+        bench_table5_update_speed()
+        bench_quantize_throughput()
+    bench_fused_update_sweep(smoke=smoke)
 
 
 if __name__ == "__main__":

@@ -4,10 +4,14 @@ Prints ``name,us_per_call,derived`` CSV.
 
   PYTHONPATH=src python -m benchmarks.run            # full suite
   PYTHONPATH=src python -m benchmarks.run --only table3,roofline
+  PYTHONPATH=src python -m benchmarks.run --smoke    # CI: tiny speed sweep
+                                                     # incl. the fused-update
+                                                     # interpret path
 """
 from __future__ import annotations
 
 import argparse
+import inspect
 import sys
 
 SUITES = {
@@ -19,23 +23,39 @@ SUITES = {
     "roofline": ("benchmarks.bench_roofline", "Dry-run roofline table"),
 }
 
+# Suites a --smoke run exercises (fast enough for CI, covers the kernels).
+SMOKE_SUITES = ("speed",)
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", type=str, default=None,
                     help="comma-separated suite names")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced CI sweep (speed suite at tiny sizes, "
+                         "fused kernels on the Pallas interpret path)")
     args = ap.parse_args()
-    names = list(SUITES) if not args.only else args.only.split(",")
+    if args.only:
+        names = args.only.split(",")
+    elif args.smoke:
+        names = list(SMOKE_SUITES)
+    else:
+        names = list(SUITES)
     print("name,us_per_call,derived")
     for n in names:
         mod_name, desc = SUITES[n]
         print(f"# === {n}: {desc} ===")
         mod = __import__(mod_name, fromlist=["main"])
+        kwargs = {}
+        if args.smoke and "smoke" in inspect.signature(mod.main).parameters:
+            kwargs["smoke"] = True
         try:
-            mod.main()
+            mod.main(**kwargs)
         except Exception as e:  # keep the harness running
             print(f"{n}/ERROR,0,{e!r}", file=sys.stderr)
             print(f"{n}/ERROR,0,{e!r}")
+            if args.smoke:
+                raise SystemExit(1)  # CI must fail loudly
 
 
 if __name__ == "__main__":

@@ -1,0 +1,12 @@
+#!/usr/bin/env bash
+# CI entry point: install, tier-1 tests, then a smoke run of the benchmark
+# harness so the fused optimizer-update path (Pallas interpret mode) is
+# exercised off-TPU on every PR.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+python -m pip install -e '.[test]'
+
+PYTHONPATH=src python -m pytest -x -q
+
+PYTHONPATH=src python -m benchmarks.run --smoke

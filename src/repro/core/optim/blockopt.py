@@ -7,8 +7,13 @@ full 32-bit (``Full32Leaf`` — used for the 32-bit baselines, for leaves below
 paper §2.3).
 
 The update is the paper's §2 procedure: dequantize -> 32-bit math ->
-requantize, executed by the fused Pallas kernel on TPU (``impl='pallas'``) or
-by the identical jnp math elsewhere.
+requantize, executed through the ``(algo, impl)`` registry behind
+``repro.kernels.ops.fused_update``: one fused Pallas pass per state tensor
+on TPU (``impl='pallas'``), the same kernels interpreted on CPU
+(``impl='interpret'``), or the parameterized jnp oracle (``impl='jnp'``).
+Every algorithm and every ablation mode (stochastic rounding, tensor-wise
+quantization) takes this one path — there is no separate multi-pass
+fallback anymore (DESIGN.md §3).
 
 State signedness per algorithm (paper §2.2: the strictly-positive second
 moment uses the unsigned dynamic map with the sign bit re-purposed as an
@@ -17,6 +22,13 @@ extra fraction bit):
   adam/adamw/lamb : m -> signed dynamic, r -> unsigned dynamic
   momentum/lars   : m -> signed dynamic
   adagrad         : accumulator -> unsigned dynamic (stored in the m slot)
+
+Optional percentile clipping (``cfg.percentile_clipping < 100``) maintains a
+per-optimizer history of squared global gradient norms in
+``OptState.gnorm_vec`` (bitsandbytes-style; DESIGN.md §7) and scales
+gradients by a scalar inside the fused kernel — no extra pass over the
+states.  The history is ordinary optimizer state: it is checkpointed and
+restored like every other leaf.
 """
 from __future__ import annotations
 
@@ -32,6 +44,7 @@ from repro.core.optim.base import (Full32Leaf, OptimConfig, Quant8Leaf,
                                    blocks_to_param, flatten_to_blocks,
                                    path_str)
 from repro.models.constrain import constrain as _constrain
+from repro.kernels import fused_update as kfu
 from repro.kernels import ops as kops
 
 Pytree = Any
@@ -40,6 +53,9 @@ Pytree = Any
 class OptState(NamedTuple):
     step: jax.Array           # int32 scalar, number of updates applied
     leaves: Pytree            # tree of Quant8Leaf / Full32Leaf
+    # (pclip_history,) f32 squared-gnorm history, or None when percentile
+    # clipping is off (cfg.percentile_clipping == 100).
+    gnorm_vec: Optional[jax.Array] = None
 
 
 def _state1_signed(algo: str) -> bool:
@@ -99,44 +115,53 @@ class Block8bitOptimizer:
                 r=jnp.zeros_like(master) if cfg.has_second_moment else None)
 
         leaves = jax.tree_util.tree_map_with_path(init_leaf, params)
-        return OptState(step=jnp.zeros((), jnp.int32), leaves=leaves)
+        gnorm_vec = (jnp.zeros((cfg.pclip_history,), jnp.float32)
+                     if cfg.percentile_clipping < 100 else None)
+        return OptState(step=jnp.zeros((), jnp.int32), leaves=leaves,
+                        gnorm_vec=gnorm_vec)
 
     # ------------------------------------------------------------- algorithms
     def _math32(self, g, p, m, r, lr, step_f):
-        """Shared 32-bit update math; returns (m', r', p')."""
+        """32-bit update math for Full32 leaves — the same parameterized
+        update the fused kernels run (kernels/fused_update.update_math),
+        with per-tensor norms computed inline.  Returns (m', r', p')."""
         cfg = self.cfg
-        algo = cfg.algo
-        if algo in ("adam", "adamw", "lamb"):
-            m2 = cfg.beta1 * m + (1.0 - cfg.beta1) * g
-            r2 = cfg.beta2 * r + (1.0 - cfg.beta2) * g * g
-            c1 = 1.0 - cfg.beta1 ** step_f
-            c2 = 1.0 - cfg.beta2 ** step_f
-            upd = (m2 / c1) / (jnp.sqrt(r2 / c2) + cfg.eps) + cfg.weight_decay * p
-            if algo == "lamb":
-                pn = jnp.sqrt(jnp.sum(p * p))
-                un = jnp.sqrt(jnp.sum(upd * upd))
-                trust = jnp.where((pn > 0) & (un > 0), pn / jnp.where(un > 0, un, 1.0), 1.0)
-                upd = trust * upd
-            return m2, r2, p - lr * upd
-        if algo == "momentum":
-            m2 = cfg.beta1 * m + (g + cfg.weight_decay * p)
-            return m2, None, p - lr * m2
-        if algo == "lars":
-            pn = jnp.sqrt(jnp.sum(p * p))
-            gn = jnp.sqrt(jnp.sum(g * g))
-            denom = gn + cfg.weight_decay * pn + 1e-12
-            local = jnp.where(pn > 0, cfg.trust_coeff * pn / denom, 1.0)
-            m2 = cfg.beta1 * m + local * (g + cfg.weight_decay * p)
-            return m2, None, p - lr * m2
-        if algo == "adagrad":
-            # accumulator lives in the m slot (unsigned map)
-            m2 = m + g * g
-            upd = g / (jnp.sqrt(m2) + cfg.eps) + cfg.weight_decay * p
-            return m2, None, p - lr * upd
-        raise ValueError(self.cfg.algo)
+        spec = kfu.ALGO_SPECS[cfg.algo]
+        s = dict(lr=lr, beta1=cfg.beta1, beta2=cfg.beta2, eps=cfg.eps,
+                 weight_decay=cfg.weight_decay, step=step_f,
+                 tensor_scale=jnp.float32(1.0))
+        s["tensor_scale"] = kfu.tensor_scale_for(spec, g, p, m, r, s,
+                                                 cfg.trust_coeff)
+        return kfu.update_math(spec, g, p, m, r, s)
+
+    # -------------------------------------------------------------- clipping
+    def percentile_clip(self, grads: Pytree, state: OptState):
+        """Percentile-clipping scale for this step (DESIGN.md §7).
+
+        Returns ``(gnorm_scale, new_gnorm_vec)``: the scalar every gradient
+        is multiplied by inside the fused kernel, and the updated squared-
+        gnorm history.  No-op (scale 1, vec unchanged) when disabled.  The
+        history (including the current step's norm) must fill before
+        clipping engages, so the first ``pclip_history - 1`` steps are
+        never clipped; a spike on the step that fills it can be."""
+        cfg = self.cfg
+        if cfg.percentile_clipping >= 100 or state.gnorm_vec is None:
+            return jnp.float32(1.0), state.gnorm_vec
+        gn2 = jnp.zeros((), jnp.float32)
+        for leaf in jax.tree_util.tree_leaves(grads):
+            gn2 = gn2 + jnp.sum(jnp.square(leaf.astype(jnp.float32)))
+        hist = state.gnorm_vec
+        new_vec = hist.at[jnp.mod(state.step, hist.shape[0])].set(gn2)
+        clip2 = jnp.percentile(new_vec, cfg.percentile_clipping)
+        warm = (state.step + 1) >= hist.shape[0]
+        scale = jnp.where(
+            warm & (gn2 > clip2),
+            jnp.sqrt(jnp.maximum(clip2, 0.0) / jnp.maximum(gn2, 1e-30)), 1.0)
+        return scale.astype(jnp.float32), new_vec
 
     # ---------------------------------------------------------------- update
-    def _apply_quant8(self, leaf: Quant8Leaf, g: jax.Array, lr, step_f, key):
+    def _apply_quant8(self, leaf: Quant8Leaf, g: jax.Array, lr, step_f,
+                      seed, gnorm_scale):
         cfg = self.cfg
         gb = flatten_to_blocks(g, cfg.block_size, cfg.shard_multiple)
         # Tell SPMD the reshard target up front: the flat block domain is
@@ -147,60 +172,27 @@ class Block8bitOptimizer:
         mb = flatten_to_blocks(leaf.master, cfg.block_size, cfg.shard_multiple)
         mb = _constrain(mb, "all", None)
 
-        def back(p2_flat):
-            return blocks_to_param(p2_flat, leaf.shape, leaf.n, mdt)
-
-        use_kernel = (self._impl != "jnp" and cfg.algo in ("adam", "adamw", "momentum")
-                      and cfg.blockwise_norm and not cfg.stochastic_rounding)
-        if use_kernel and cfg.algo in ("adam", "adamw"):
-            p2, cm, am, cr, ar = kops.adam8_update(
-                mb, gb, leaf.codes_m, leaf.absmax_m, leaf.codes_r,
-                leaf.absmax_r, self._qmap1, self._qmap2, lr=lr, beta1=cfg.beta1,
-                beta2=cfg.beta2, eps=cfg.eps, weight_decay=cfg.weight_decay,
-                step=step_f, impl=self._impl)
-            return dataclasses.replace(leaf, master=back(p2), codes_m=cm,
-                                       absmax_m=am, codes_r=cr, absmax_r=ar)
-        if use_kernel and cfg.algo == "momentum":
-            p2, cm, am = kops.momentum8_update(
-                mb, gb, leaf.codes_m, leaf.absmax_m,
-                self._qmap1, lr=lr, beta1=cfg.beta1,
-                weight_decay=cfg.weight_decay, step=step_f, impl=self._impl)
-            return dataclasses.replace(leaf, master=back(p2), codes_m=cm,
-                                       absmax_m=am)
-
-        # jnp path (also used for lamb/lars/adagrad and all ablation modes)
-        from repro.core import blockwise as bw
-        m = bw.dequantize_blocks(leaf.codes_m, leaf.absmax_m, self._qmap1)
-        r = (bw.dequantize_blocks(leaf.codes_r, leaf.absmax_r, self._qmap2)
-             if leaf.codes_r is not None else None)
-        m2, r2, p2 = self._math32(gb, mb.astype(jnp.float32), m, r,
-                                  lr, step_f)
-        p2 = back(p2)
-
-        def requant(x, cb, key):
-            if cfg.blockwise_norm:
-                return bw.quantize_blocks(
-                    x, cb, stochastic_rounding=cfg.stochastic_rounding, key=key)
-            # tensor-wise ablation: single absmax for the whole tensor
-            gmax = jnp.max(jnp.abs(x))
-            scale = jnp.where(gmax > 0, gmax, 1.0)
-            bounds = (cb[1:] + cb[:-1]) * 0.5
-            codes = jnp.searchsorted(bounds, x / scale, side="right").astype(jnp.uint8)
-            absmax = jnp.full((x.shape[0],), gmax, jnp.float32)
-            return codes, absmax
-
-        k1 = k2 = None
-        if cfg.stochastic_rounding and key is not None:
-            k1, k2 = jax.random.split(key)
-        cm, am = requant(m2, self._qmap1, k1)
-        new = dataclasses.replace(leaf, master=p2, codes_m=cm, absmax_m=am)
-        if r2 is not None:
-            cr, ar = requant(r2, self._qmap2, k2)
-            new = dataclasses.replace(new, codes_r=cr, absmax_r=ar)
+        # One registry entry point for every algorithm and ablation mode;
+        # tensor-wise quantization is dispatched to the jnp entry inside.
+        res = kops.fused_update(
+            cfg.algo, mb, gb, leaf.codes_m, leaf.absmax_m,
+            leaf.codes_r, leaf.absmax_r, self._qmap1, self._qmap2,
+            lr=lr, beta1=cfg.beta1, beta2=cfg.beta2, eps=cfg.eps,
+            weight_decay=cfg.weight_decay, step=step_f,
+            trust_coeff=cfg.trust_coeff, gnorm_scale=gnorm_scale,
+            blockwise=cfg.blockwise_norm,
+            stochastic=cfg.stochastic_rounding, seed=seed, impl=self._impl)
+        new = dataclasses.replace(
+            leaf, master=blocks_to_param(res.p, leaf.shape, leaf.n, mdt),
+            codes_m=res.codes_m, absmax_m=res.absmax_m)
+        if res.codes_r is not None:
+            new = dataclasses.replace(new, codes_r=res.codes_r,
+                                      absmax_r=res.absmax_r)
         return new
 
-    def _apply_full32(self, leaf: Full32Leaf, g: jax.Array, lr, step_f):
-        g = g.astype(jnp.float32)
+    def _apply_full32(self, leaf: Full32Leaf, g: jax.Array, lr, step_f,
+                      gnorm_scale):
+        g = g.astype(jnp.float32) * gnorm_scale
         r = leaf.r if leaf.r is not None else None
         m2, r2, p2 = self._math32(g, leaf.master, leaf.m, r, lr, step_f)
         return Full32Leaf(master=p2, m=m2, r=r2)
@@ -213,19 +205,32 @@ class Block8bitOptimizer:
 
         ``lr`` overrides cfg.lr (schedules); ``param_dtype`` is the dtype of
         the returned model params (the f32 master stays in the state).
+        ``key`` optionally seeds stochastic rounding; when omitted the seed
+        is derived from ``state.step``, so restarts from a checkpoint replay
+        the same rounding decisions bit-exactly.
         """
-        lr = jnp.asarray(self.cfg.lr if lr is None else lr, jnp.float32)
+        cfg = self.cfg
+        lr = jnp.asarray(cfg.lr if lr is None else lr, jnp.float32)
         step_f = (state.step + 1).astype(jnp.float32)
+        gnorm_scale, new_vec = self.percentile_clip(grads, state)
+
+        if cfg.stochastic_rounding and key is not None:
+            base_seed = jax.random.randint(key, (), 0, 2**31 - 1,
+                                           dtype=jnp.int32)
+        else:
+            # int32 wraparound is fine: the seed only feeds a hash.
+            base_seed = state.step.astype(jnp.int32) * jnp.int32(1000003)
 
         leaf_idx = [0]
 
         def upd(leaf, g):
             i = leaf_idx[0]
             leaf_idx[0] += 1
-            k = jax.random.fold_in(key, i) if key is not None else None
+            seed = base_seed + jnp.int32(i * 7919)
             if isinstance(leaf, Quant8Leaf):
-                return self._apply_quant8(leaf, g, lr, step_f, k)
-            return self._apply_full32(leaf, g, lr, step_f)
+                return self._apply_quant8(leaf, g, lr, step_f, seed,
+                                          gnorm_scale)
+            return self._apply_full32(leaf, g, lr, step_f, gnorm_scale)
 
         new_leaves = jax.tree_util.tree_map(
             upd, state.leaves, grads,
@@ -237,7 +242,8 @@ class Block8bitOptimizer:
         new_params = jax.tree_util.tree_map(
             to_param, new_leaves,
             is_leaf=lambda x: isinstance(x, (Quant8Leaf, Full32Leaf)))
-        return new_params, OptState(step=state.step + 1, leaves=new_leaves)
+        return new_params, OptState(step=state.step + 1, leaves=new_leaves,
+                                    gnorm_vec=new_vec)
 
     def params_view(self, state: OptState, param_dtype=jnp.float32) -> Pytree:
         """Model-shape params reconstructed from the (sharded, flat-block)

@@ -1,3 +1,8 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+#
+# Layout (DESIGN.md §3): common.py (in-kernel helpers, DEFAULT_ROWS, PRNG),
+# blockwise_quant/dequant.py (standalone quant kernels), fused_update.py
+# (the algorithm-parameterized fused optimizer-update kernel family),
+# ref.py (jnp oracles), ops.py (public wrappers + (algo, impl) registry).

@@ -14,7 +14,7 @@ from jax.experimental import pallas as pl
 
 from repro.kernels import common
 
-DEFAULT_ROWS = 8
+DEFAULT_ROWS = common.DEFAULT_ROWS
 
 
 def _dequant_kernel(codes_ref, absmax_ref, qmap_ref, out_ref):

@@ -17,7 +17,7 @@ from jax.experimental import pallas as pl
 
 from repro.kernels import common
 
-DEFAULT_ROWS = 8  # quantization blocks per grid step
+DEFAULT_ROWS = common.DEFAULT_ROWS  # quantization blocks per grid step
 
 
 def _quant_kernel(x_ref, bounds_ref, codes_ref, absmax_ref):

@@ -23,6 +23,13 @@ CODEBOOK_SIZE = 256
 # Codebook-axis chunk: bounds the (tile_elems, CHUNK) compare/one-hot
 # materialization in VMEM.
 CHUNK = 64
+# Quantization blocks per grid step, shared by every kernel in this package
+# (DESIGN.md §3: one value so the fused-update and quant/dequant kernels tile
+# the flat block domain identically).
+DEFAULT_ROWS = 8
+# Seed offsets decorrelating the two state tensors' stochastic rounding.
+STATE1_SEED_SALT = 0
+STATE2_SEED_SALT = 0x9E3779B9
 
 
 def padded_bounds(codebook) -> jax.Array:
@@ -71,10 +78,67 @@ def decode(codes: jax.Array, qmap_row: jax.Array) -> jax.Array:
     return acc.reshape(codes.shape)
 
 
-def block_requantize(x: jax.Array, bounds_row: jax.Array) -> tuple[jax.Array, jax.Array]:
+def hash_uniform(idx: jax.Array, seed: jax.Array) -> jax.Array:
+    """Counter-based uniform [0, 1) floats from element index + seed.
+
+    A finalizer-style integer hash on the VPU (uint32 wraparound arithmetic):
+    no gathers, no host PRNG round trip, bit-identical between the Pallas
+    kernel and the jnp reference — which is what makes the stochastic-rounding
+    parity tests exact (DESIGN.md §3).  ``pltpu.prng_random_bits`` would also
+    work on TPU but has no interpret-mode lowering on CPU.
+    """
+    x = idx.astype(jnp.uint32) + seed.astype(jnp.uint32) * jnp.uint32(2654435761)
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(0x21F0AAAD)
+    x = x ^ (x >> 15)
+    x = x * jnp.uint32(0x735A2D97)
+    x = x ^ (x >> 15)
+    # Top-of-24-bits mantissa -> exactly representable uniform in [0, 1).
+    return (x >> 8).astype(jnp.float32) * jnp.float32(1.0 / (1 << 24))
+
+
+def element_indices(n_rows: int, n_cols: int, row_offset) -> jax.Array:
+    """Global flat element index for a (n_rows, n_cols) tile whose first row
+    is ``row_offset`` in the full block domain. uint32, wraps harmlessly."""
+    r = jax.lax.broadcasted_iota(jnp.uint32, (n_rows, n_cols), 0)
+    c = jax.lax.broadcasted_iota(jnp.uint32, (n_rows, n_cols), 1)
+    off = jnp.asarray(row_offset).astype(jnp.uint32)
+    return (off + r) * jnp.uint32(n_cols) + c
+
+
+def stochastic_codes(x_norm: jax.Array, codes: jax.Array, q_near: jax.Array,
+                     q_other: jax.Array, other: jax.Array,
+                     u: jax.Array) -> jax.Array:
+    """Pick the far neighbour with probability proportional to proximity.
+
+    Shared verbatim by the Pallas kernels and the jnp reference so both
+    produce identical codes for identical uniforms."""
+    span = jnp.abs(q_other - q_near)
+    p_other = jnp.where(span > 0,
+                        jnp.abs(x_norm - q_near) / jnp.where(span > 0, span, 1.0),
+                        0.0)
+    return jnp.where(u < p_other, other, codes)
+
+
+def block_requantize(x: jax.Array, bounds_row: jax.Array,
+                     qmap_row: jax.Array | None = None,
+                     random_u: jax.Array | None = None
+                     ) -> tuple[jax.Array, jax.Array]:
     """Per-row absmax normalize + encode. x: (R, B) f32 ->
-    (codes int32 (R, B), absmax f32 (R, 1))."""
+    (codes int32 (R, B), absmax f32 (R, 1)).
+
+    With ``random_u`` (uniforms in [0, 1), same shape as x) the encode is
+    stochastic: round to the nearer/farther neighbouring code with
+    probability proportional to proximity (paper App H). ``qmap_row`` is
+    required in that case for the neighbour lookups."""
     absmax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
     scale = jnp.where(absmax > 0, absmax, 1.0)
-    codes = encode(x / scale, bounds_row)
+    x_norm = x / scale
+    codes = encode(x_norm, bounds_row)
+    if random_u is not None:
+        q_near = decode(codes, qmap_row)
+        direction = jnp.where(x_norm > q_near, 1, -1)
+        other = jnp.clip(codes + direction, 0, CODEBOOK_SIZE - 1)
+        q_other = decode(other, qmap_row)
+        codes = stochastic_codes(x_norm, codes, q_near, q_other, other, random_u)
     return codes, absmax

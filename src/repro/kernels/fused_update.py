@@ -1,0 +1,380 @@
+"""Pallas TPU kernel family: fused 8-bit optimizer update, all algorithms.
+
+One generic kernel builder, parameterized by a static :class:`AlgoSpec`
+(update math, one-vs-two states, signedness, per-tensor norm needs), covers
+adam / adamw / momentum / lamb / lars / adagrad.  Each grid step streams one
+tile of the flat block domain HBM -> VMEM, dequantizes the 8-bit state,
+runs the 32-bit update math in registers, and requantizes with per-block
+absmax — the paper's §2 procedure in a single HBM pass per state tensor
+(DESIGN.md §3).
+
+Extras fused into the same pass:
+
+  * **stochastic rounding** — counter-based PRNG evaluated on the VPU
+    (``common.hash_uniform``); no extra dequant/requant round trip and no
+    host randomness, so restarts are bit-exact.
+  * **gradient scaling** — the percentile-clipping ``gnorm_scale`` is a
+    scalar multiplied into g in-kernel (bitsandbytes-style, DESIGN.md §7).
+
+LAMB/LARS need per-tensor norms, which are global reductions and cannot be
+fused into one block-local pass.  They get a *norm prologue*: a first grid
+pass emits per-grid-row partial sums of ||p||^2 / ||g||^2 / ||u||^2, the
+XLA side finalizes them into the scalar trust ratio, and the main kernel
+consumes it via the scalar vector (so LAMB/LARS cost two passes instead of
+the jnp fallback's 3-4).
+
+``repro.kernels.ops`` registers these builders under ``(algo, "pallas")``
+and ``(algo, "interpret")``; the matching jnp oracle lives in ``ref.py``
+under ``(algo, "jnp")`` and shares :func:`update_math` /
+:func:`tensor_scale_from_norms` with the kernels, so parity holds by
+construction.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import common
+
+# scalar vector layout:
+# [lr, beta1, beta2, eps, weight_decay, step, gnorm_scale, tensor_scale]
+# Slot 7 holds trust_coeff on entry to fused_update_pallas and is rewritten
+# to the finalized tensor_scale (trust ratio / local lr) before the main
+# kernel runs; it is 1.0 for block-local algorithms.
+N_SCALARS = 8
+
+
+@dataclasses.dataclass(frozen=True)
+class AlgoSpec:
+    """Static description of one optimizer algorithm for the kernel builder.
+
+    name          : algorithm key ("adam", ...)
+    n_states      : 1 (momentum/lars/adagrad) or 2 (adam/adamw/lamb)
+    state1_signed : first state uses the signed codebook (False: adagrad's
+                    strictly-positive accumulator uses the unsigned map)
+    norm_kind     : "" (block-local), "lamb" (needs ||p||, ||update||) or
+                    "lars" (needs ||p||, ||g||) — selects the norm prologue
+    """
+    name: str
+    n_states: int
+    state1_signed: bool
+    norm_kind: str = ""
+
+    @property
+    def needs_norms(self) -> bool:
+        return self.norm_kind != ""
+
+
+ALGO_SPECS: dict[str, AlgoSpec] = {
+    "adam":     AlgoSpec("adam", 2, True),
+    "adamw":    AlgoSpec("adamw", 2, True),
+    "lamb":     AlgoSpec("lamb", 2, True, norm_kind="lamb"),
+    "momentum": AlgoSpec("momentum", 1, True),
+    "lars":     AlgoSpec("lars", 1, True, norm_kind="lars"),
+    "adagrad":  AlgoSpec("adagrad", 1, False),
+}
+
+
+class FusedUpdateResult(NamedTuple):
+    """Output of one fused update in the flat block domain."""
+    p: jax.Array
+    codes_m: jax.Array
+    absmax_m: jax.Array
+    codes_r: Optional[jax.Array]
+    absmax_r: Optional[jax.Array]
+
+
+# --------------------------------------------------------------- update math
+def adam_moments(g, m, r, s):
+    """Shared first/second moment EMA for the adam family (incl. lamb)."""
+    m2 = s["beta1"] * m + (1.0 - s["beta1"]) * g
+    r2 = s["beta2"] * r + (1.0 - s["beta2"]) * g * g
+    return m2, r2
+
+
+def adam_base_update(g, p, m, r, s):
+    """Bias-corrected adam step direction incl. decoupled weight decay —
+    the pre-trust-ratio 'u' of LAMB. Returns (m2, r2, u)."""
+    m2, r2 = adam_moments(g, m, r, s)
+    c1 = 1.0 - jnp.power(s["beta1"], s["step"])
+    c2 = 1.0 - jnp.power(s["beta2"], s["step"])
+    u = (m2 / c1) / (jnp.sqrt(r2 / c2) + s["eps"]) + s["weight_decay"] * p
+    return m2, r2, u
+
+
+def update_math(spec: AlgoSpec, g, p, m, r, s):
+    """One 32-bit optimizer update on (already gnorm-scaled) g.
+
+    ``s`` is a dict of scalars: lr, beta1, beta2, eps, weight_decay, step,
+    tensor_scale (the finalized LAMB trust ratio / LARS local lr; 1.0 for
+    block-local algorithms).  Returns (m2, r2, p2) with r2 = None for
+    one-state algorithms.  Pure jnp: runs inside the Pallas kernel and in
+    the jnp reference unchanged — parity by construction.
+    """
+    algo = spec.name
+    if algo in ("adam", "adamw"):
+        m2, r2, u = adam_base_update(g, p, m, r, s)
+        return m2, r2, p - s["lr"] * u
+    if algo == "lamb":
+        m2, r2, u = adam_base_update(g, p, m, r, s)
+        return m2, r2, p - s["lr"] * s["tensor_scale"] * u
+    if algo == "momentum":
+        m2 = s["beta1"] * m + (g + s["weight_decay"] * p)
+        return m2, None, p - s["lr"] * m2
+    if algo == "lars":
+        m2 = s["beta1"] * m + s["tensor_scale"] * (g + s["weight_decay"] * p)
+        return m2, None, p - s["lr"] * m2
+    if algo == "adagrad":
+        m2 = m + g * g
+        u = g / (jnp.sqrt(m2) + s["eps"]) + s["weight_decay"] * p
+        return m2, None, p - s["lr"] * u
+    raise ValueError(algo)
+
+
+def tensor_scale_from_norms(spec: AlgoSpec, pn2, gn2, un2, *,
+                            weight_decay, trust_coeff):
+    """Finalize the norm-prologue partials into the main kernel's scalar.
+
+    lamb: trust ratio ||p|| / ||u||; lars: local lr
+    trust_coeff*||p|| / (||g|| + wd*||p||).  Identical guards to the
+    long-standing 32-bit engine math."""
+    pn = jnp.sqrt(pn2)
+    if spec.norm_kind == "lamb":
+        un = jnp.sqrt(un2)
+        return jnp.where((pn > 0) & (un > 0),
+                         pn / jnp.where(un > 0, un, 1.0), 1.0)
+    if spec.norm_kind == "lars":
+        gn = jnp.sqrt(gn2)
+        denom = gn + weight_decay * pn + 1e-12
+        return jnp.where(pn > 0, trust_coeff * pn / denom, 1.0)
+    return jnp.float32(1.0)
+
+
+def tensor_scale_for(spec: AlgoSpec, g, p, m, r, s, trust_coeff):
+    """Whole-tensor norm prologue + finalization for single-tensor callers
+    (the jnp oracle and the Full32 engine path).  The Pallas path computes
+    the same sums as per-grid-row partials instead."""
+    if not spec.needs_norms:
+        return jnp.float32(1.0)
+    pn2 = jnp.sum(p * p)
+    gn2 = jnp.sum(g * g)
+    un2 = jnp.zeros((), jnp.float32)
+    if spec.norm_kind == "lamb":
+        _, _, u = adam_base_update(g, p, m, r, s)
+        un2 = jnp.sum(u * u)
+    return tensor_scale_from_norms(spec, pn2, gn2, un2,
+                                   weight_decay=s["weight_decay"],
+                                   trust_coeff=trust_coeff)
+
+
+def _scalars_dict(scal_row):
+    return dict(lr=scal_row[0, 0], beta1=scal_row[0, 1], beta2=scal_row[0, 2],
+                eps=scal_row[0, 3], weight_decay=scal_row[0, 4],
+                step=scal_row[0, 5], gnorm_scale=scal_row[0, 6],
+                tensor_scale=scal_row[0, 7])
+
+
+# ------------------------------------------------------------ kernel builder
+def _make_update_kernel(spec: AlgoSpec, rows: int, bsz: int, stochastic: bool):
+    """Build the main fused-update kernel for one (algo, tile, mode)."""
+    two = spec.n_states == 2
+
+    def kernel(*refs):
+        it = iter(refs)
+        scal_ref = next(it)
+        seed_ref = next(it) if stochastic else None
+        qm1_ref, b1_ref = next(it), next(it)
+        qm2_ref, b2_ref = (next(it), next(it)) if two else (None, None)
+        p_ref, g_ref, c1_ref, a1_ref = next(it), next(it), next(it), next(it)
+        c2_ref, a2_ref = (next(it), next(it)) if two else (None, None)
+        p_out, c1_out, a1_out = next(it), next(it), next(it)
+        c2_out, a2_out = (next(it), next(it)) if two else (None, None)
+
+        s = _scalars_dict(scal_ref[...])
+        g = g_ref[...].astype(jnp.float32) * s["gnorm_scale"]
+        p = p_ref[...].astype(jnp.float32)
+
+        # ---- dequantize (one-hot contraction on MXU) ----
+        m = common.decode(c1_ref[...].astype(jnp.int32), qm1_ref[...]) * a1_ref[...]
+        r = (common.decode(c2_ref[...].astype(jnp.int32), qm2_ref[...]) * a2_ref[...]
+             if two else None)
+
+        # ---- 32-bit update math in registers ----
+        m2, r2, p2 = update_math(spec, g, p, m, r, s)
+        p_out[...] = p2.astype(p_out.dtype)
+
+        # ---- requantize (per-block absmax is a row reduction in VMEM) ----
+        u1 = u2 = None
+        if stochastic:
+            seed = seed_ref[0, 0].astype(jnp.uint32)
+            idx = common.element_indices(rows, bsz, pl.program_id(0) * rows)
+            u1 = common.hash_uniform(idx, seed + jnp.uint32(common.STATE1_SEED_SALT))
+            if two:
+                u2 = common.hash_uniform(idx, seed + jnp.uint32(common.STATE2_SEED_SALT))
+        c1n, a1n = common.block_requantize(m2, b1_ref[...], qm1_ref[...],
+                                           random_u=u1)
+        c1_out[...] = c1n.astype(jnp.uint8)
+        a1_out[...] = a1n
+        if two:
+            c2n, a2n = common.block_requantize(r2, b2_ref[...], qm2_ref[...],
+                                               random_u=u2)
+            c2_out[...] = c2n.astype(jnp.uint8)
+            a2_out[...] = a2n
+
+    return kernel
+
+
+def _make_norm_kernel(spec: AlgoSpec, rows: int, bsz: int):
+    """Norm prologue: per-grid-row partial squared norms, shape (1, 8) row
+    [||p||^2, ||g||^2, ||u||^2, 0...].  lars only needs p and g; lamb
+    re-derives the pre-trust update u from the dequantized states."""
+
+    def kernel(*refs):
+        it = iter(refs)
+        scal_ref = next(it)
+        if spec.norm_kind == "lamb":
+            qm1_ref, qm2_ref = next(it), next(it)
+            p_ref, g_ref = next(it), next(it)
+            c1_ref, a1_ref, c2_ref, a2_ref = (next(it), next(it),
+                                              next(it), next(it))
+        else:
+            p_ref, g_ref = next(it), next(it)
+        out_ref = next(it)
+
+        s = _scalars_dict(scal_ref[...])
+        g = g_ref[...].astype(jnp.float32) * s["gnorm_scale"]
+        p = p_ref[...].astype(jnp.float32)
+        pn2 = jnp.sum(p * p)
+        gn2 = jnp.sum(g * g)
+        un2 = jnp.zeros((), jnp.float32)
+        if spec.norm_kind == "lamb":
+            m = common.decode(c1_ref[...].astype(jnp.int32), qm1_ref[...]) * a1_ref[...]
+            r = common.decode(c2_ref[...].astype(jnp.int32), qm2_ref[...]) * a2_ref[...]
+            _, _, u = adam_base_update(g, p, m, r, s)
+            un2 = jnp.sum(u * u)
+        zero = jnp.zeros((), jnp.float32)
+        out_ref[...] = jnp.stack(
+            [pn2, gn2, un2, zero, zero, zero, zero, zero]).reshape(1, N_SCALARS)
+
+    return kernel
+
+
+# ------------------------------------------------------------- public entry
+@functools.partial(jax.jit, static_argnames=("algo", "rows", "stochastic",
+                                             "interpret"))
+def fused_update_pallas(
+    p: jax.Array,                  # (n_blocks, B) f32 master params
+    g: jax.Array,                  # (n_blocks, B) f32/bf16 grads
+    codes_m: jax.Array,            # (n_blocks, B) uint8
+    absmax_m: jax.Array,           # (n_blocks,)  f32
+    codes_r: Optional[jax.Array],  # 2-state algos only
+    absmax_r: Optional[jax.Array],
+    qmap_m: jax.Array,             # (256,) state-1 codebook
+    qmap_r: Optional[jax.Array],   # (256,) state-2 codebook
+    scalars: jax.Array,            # (N_SCALARS,) f32 (tensor_scale slot unused)
+    seed: jax.Array,               # () int32 stochastic-rounding seed
+    *,
+    algo: str,
+    rows: int = common.DEFAULT_ROWS,
+    stochastic: bool = False,
+    interpret: bool = True,
+) -> FusedUpdateResult:
+    """One fused 8-bit update for ``algo`` in the flat block domain.
+
+    ``n_blocks`` must be a multiple of ``rows`` (ops.fused_update pads).
+    ``scalars`` layout: [lr, beta1, beta2, eps, weight_decay, step,
+    gnorm_scale, trust_coeff]; the last slot is rewritten with the
+    tensor_scale finalized from the norm prologue (lamb/lars) or 1.0.
+    """
+    spec = ALGO_SPECS[algo]
+    two = spec.n_states == 2
+    n_blocks, bsz = p.shape
+    assert n_blocks % rows == 0, (n_blocks, rows)
+    grid = (n_blocks // rows,)
+
+    row_spec = pl.BlockSpec((rows, bsz), lambda i: (i, 0))
+    one_spec = pl.BlockSpec((rows, 1), lambda i: (i, 0))
+    const_spec = pl.BlockSpec((1, common.CODEBOOK_SIZE), lambda i: (0, 0))
+    scal_spec = pl.BlockSpec((1, N_SCALARS), lambda i: (0, 0))
+
+    qm1, b1 = common.padded_qmap(qmap_m), common.padded_bounds(qmap_m)
+    if two:
+        qm2, b2 = common.padded_qmap(qmap_r), common.padded_bounds(qmap_r)
+
+    scalars = scalars.astype(jnp.float32)
+    if spec.needs_norms:
+        norm_kernel = _make_norm_kernel(spec, rows, bsz)
+        in_specs = [scal_spec]
+        args = [scalars.reshape(1, N_SCALARS)]
+        if spec.norm_kind == "lamb":
+            in_specs += [const_spec, const_spec]
+            args += [qm1, qm2]
+        in_specs += [row_spec, row_spec]
+        args += [p, g]
+        if spec.norm_kind == "lamb":
+            in_specs += [row_spec, one_spec, row_spec, one_spec]
+            args += [codes_m, absmax_m[:, None], codes_r, absmax_r[:, None]]
+        partials = pl.pallas_call(
+            norm_kernel,
+            grid=grid,
+            in_specs=in_specs,
+            out_specs=pl.BlockSpec((1, N_SCALARS), lambda i: (i, 0)),
+            out_shape=jax.ShapeDtypeStruct((grid[0], N_SCALARS), jnp.float32),
+            interpret=interpret,
+        )(*args)
+        sums = jnp.sum(partials, axis=0)
+        tscale = tensor_scale_from_norms(
+            spec, sums[0], sums[1], sums[2],
+            weight_decay=scalars[4], trust_coeff=scalars[7])
+        scalars = scalars.at[7].set(tscale)
+    else:
+        scalars = scalars.at[7].set(1.0)
+
+    kernel = _make_update_kernel(spec, rows, bsz, stochastic)
+    in_specs = [scal_spec]
+    args = [scalars.reshape(1, N_SCALARS)]
+    if stochastic:
+        in_specs += [pl.BlockSpec((1, N_SCALARS), lambda i: (0, 0))]
+        args += [jnp.full((1, N_SCALARS), seed, jnp.int32)]
+    in_specs += [const_spec, const_spec]
+    args += [qm1, b1]
+    if two:
+        in_specs += [const_spec, const_spec]
+        args += [qm2, b2]
+    in_specs += [row_spec, row_spec, row_spec, one_spec]
+    args += [p, g, codes_m, absmax_m[:, None]]
+    if two:
+        in_specs += [row_spec, one_spec]
+        args += [codes_r, absmax_r[:, None]]
+
+    out_specs = [row_spec, row_spec, one_spec]
+    out_shape = [
+        jax.ShapeDtypeStruct((n_blocks, bsz), jnp.float32),
+        jax.ShapeDtypeStruct((n_blocks, bsz), jnp.uint8),
+        jax.ShapeDtypeStruct((n_blocks, 1), jnp.float32),
+    ]
+    if two:
+        out_specs += [row_spec, one_spec]
+        out_shape += [
+            jax.ShapeDtypeStruct((n_blocks, bsz), jnp.uint8),
+            jax.ShapeDtypeStruct((n_blocks, 1), jnp.float32),
+        ]
+
+    outs = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(*args)
+    if two:
+        p2, c1, a1, c2, a2 = outs
+        return FusedUpdateResult(p2, c1, a1[:, 0], c2, a2[:, 0])
+    p2, c1, a1 = outs
+    return FusedUpdateResult(p2, c1, a1[:, 0], None, None)

@@ -1,4 +1,5 @@
-"""Public jit'd wrappers around the Pallas kernels.
+"""Public jit'd wrappers around the Pallas kernels, plus the fused-update
+registry.
 
 ``impl`` selects the execution path:
   * "pallas"   — pl.pallas_call, compiled for TPU (interpret=False).
@@ -8,17 +9,31 @@
                  to lower the interpreter graph — see DESIGN.md §3).
 
 ``default_impl()`` picks "pallas" on TPU and "jnp" elsewhere.
+
+The fused optimizer update is a **registry** keyed by ``(algo, impl)`` with
+one public entry point, :func:`fused_update` — the analogue of bitsandbytes'
+single ``optimizer_update_8bit_blockwise`` routing every optimizer through
+one kernel family.  All six algorithms (adam/adamw/momentum/lamb/lars/
+adagrad) and all ablation modes (stochastic rounding, tensor-wise
+quantization) go through it; the old per-algorithm wrappers and the
+multi-pass jnp fallback are gone.  Register new backends (e.g. 4-bit
+states) with :func:`register`.
 """
 from __future__ import annotations
+
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import ref
+from repro.kernels import common, ref
+from repro.kernels import fused_update as _fu
 from repro.kernels.blockwise_dequant import dequantize_blockwise as _dequant_pallas
 from repro.kernels.blockwise_quant import quantize_blockwise as _quant_pallas
-from repro.kernels.fused_adam8 import adam8_update as _adam8_pallas
-from repro.kernels.fused_momentum8 import momentum8_update as _momentum8_pallas
+
+DEFAULT_ROWS = common.DEFAULT_ROWS
+ALGOS = tuple(_fu.ALGO_SPECS)
+IMPLS = ("pallas", "interpret", "jnp")
 
 
 def default_impl() -> str:
@@ -38,7 +53,8 @@ def _pad_rows(arrs, n_blocks: int, rows: int):
     return out, target
 
 
-def quantize_blockwise(x, codebook, *, impl: str | None = None, rows: int = 8):
+def quantize_blockwise(x, codebook, *, impl: str | None = None,
+                       rows: int = DEFAULT_ROWS):
     impl = impl or default_impl()
     if impl == "jnp":
         return ref.quantize_ref(x, codebook)
@@ -50,7 +66,7 @@ def quantize_blockwise(x, codebook, *, impl: str | None = None, rows: int = 8):
 
 
 def dequantize_blockwise(codes, absmax, codebook, *, impl: str | None = None,
-                         rows: int = 8, dtype=jnp.float32):
+                         rows: int = DEFAULT_ROWS, dtype=jnp.float32):
     impl = impl or default_impl()
     if impl == "jnp":
         return ref.dequantize_ref(codes, absmax, codebook, dtype)
@@ -61,45 +77,99 @@ def dequantize_blockwise(codes, absmax, codebook, *, impl: str | None = None,
     return out[:nb]
 
 
-def adam8_update(p, g, codes_m, absmax_m, codes_r, absmax_r, qmap_m, qmap_r,
-                 *, lr, beta1, beta2, eps, weight_decay, step,
-                 impl: str | None = None, rows: int = 4):
-    """Fused 8-bit Adam step in the flat block domain. Returns
-    (p_new, codes_m', absmax_m', codes_r', absmax_r')."""
-    impl = impl or default_impl()
-    if impl == "jnp":
-        return ref.adam8_ref(p, g, codes_m, absmax_m, codes_r, absmax_r,
-                             qmap_m, qmap_r, lr=lr, beta1=beta1, beta2=beta2,
-                             eps=eps, weight_decay=weight_decay, step=step)
-    scalars = jnp.stack([
-        jnp.asarray(lr, jnp.float32), jnp.asarray(beta1, jnp.float32),
-        jnp.asarray(beta2, jnp.float32), jnp.asarray(eps, jnp.float32),
-        jnp.asarray(weight_decay, jnp.float32), jnp.asarray(step, jnp.float32),
-        jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)])
-    nb = p.shape[0]
-    (p, g, codes_m, absmax_m, codes_r, absmax_r), _ = _pad_rows(
-        [p, g, codes_m, absmax_m, codes_r, absmax_r], nb, rows)
-    p2, cm, am, cr, ar = _adam8_pallas(
-        p, g, codes_m, absmax_m, codes_r, absmax_r, qmap_m, qmap_r, scalars,
-        rows=rows, interpret=(impl == "interpret"))
-    return p2[:nb], cm[:nb], am[:nb], cr[:nb], ar[:nb]
+# ----------------------------------------------------- fused-update registry
+_REGISTRY: dict[tuple[str, str], Callable] = {}
 
 
-def momentum8_update(p, g, codes_m, absmax_m, qmap_m,
-                     *, lr, beta1, weight_decay, step,
-                     impl: str | None = None, rows: int = 4):
+def register(algo: str, impl: str, fn: Callable) -> None:
+    """Register a fused-update backend under ``(algo, impl)``.  ``fn`` takes
+    (p, g, codes_m, absmax_m, codes_r, absmax_r, qmap_m, qmap_r, **hyper)
+    and returns a :class:`~repro.kernels.fused_update.FusedUpdateResult`."""
+    _REGISTRY[(algo, impl)] = fn
+
+
+def registered(algo: str | None = None) -> list[tuple[str, str]]:
+    """Registry keys, optionally filtered by algorithm."""
+    return sorted(k for k in _REGISTRY if algo is None or k[0] == algo)
+
+
+def _pallas_entry(algo: str, interpret: bool) -> Callable:
+    def run(p, g, cm, am, cr, ar, qmap_m, qmap_r, *,
+            lr, beta1, beta2, eps, weight_decay, step, trust_coeff,
+            gnorm_scale, stochastic, seed, rows):
+        scalars = jnp.stack([
+            jnp.asarray(lr, jnp.float32), jnp.asarray(beta1, jnp.float32),
+            jnp.asarray(beta2, jnp.float32), jnp.asarray(eps, jnp.float32),
+            jnp.asarray(weight_decay, jnp.float32),
+            jnp.asarray(step, jnp.float32),
+            jnp.asarray(gnorm_scale, jnp.float32),
+            jnp.asarray(trust_coeff, jnp.float32)])
+        two = _fu.ALGO_SPECS[algo].n_states == 2
+        nb = p.shape[0]
+        arrs = [p, g, cm, am] + ([cr, ar] if two else [])
+        arrs, _ = _pad_rows(arrs, nb, rows)
+        p, g, cm, am = arrs[:4]
+        cr, ar = (arrs[4], arrs[5]) if two else (None, None)
+        res = _fu.fused_update_pallas(
+            p, g, cm, am, cr, ar, qmap_m, qmap_r if two else None, scalars,
+            jnp.asarray(seed, jnp.int32), algo=algo, rows=rows,
+            stochastic=stochastic, interpret=interpret)
+        return _fu.FusedUpdateResult(
+            res.p[:nb], res.codes_m[:nb], res.absmax_m[:nb],
+            res.codes_r[:nb] if two else None,
+            res.absmax_r[:nb] if two else None)
+    return run
+
+
+def _jnp_entry(algo: str) -> Callable:
+    def run(p, g, cm, am, cr, ar, qmap_m, qmap_r, *,
+            blockwise=True, rows=DEFAULT_ROWS, **hyper):
+        del rows  # no tiling on the XLA path
+        return ref.fused_update_ref(p, g, cm, am, cr, ar, qmap_m, qmap_r,
+                                    algo=algo, blockwise=blockwise, **hyper)
+    return run
+
+
+for _algo in ALGOS:
+    register(_algo, "pallas", _pallas_entry(_algo, interpret=False))
+    register(_algo, "interpret", _pallas_entry(_algo, interpret=True))
+    register(_algo, "jnp", _jnp_entry(_algo))
+
+
+def fused_update(
+    algo: str,
+    p, g, codes_m, absmax_m, codes_r=None, absmax_r=None,
+    qmap_m=None, qmap_r=None,
+    *,
+    lr, beta1=0.9, beta2=0.999, eps=1e-8, weight_decay=0.0, step=1.0,
+    trust_coeff=0.001, gnorm_scale=1.0,
+    blockwise: bool = True,
+    stochastic: bool = False,
+    seed=0,
+    impl: Optional[str] = None,
+    rows: int = DEFAULT_ROWS,
+) -> _fu.FusedUpdateResult:
+    """One fused 8-bit optimizer step in the flat block domain.
+
+    Single entry point for every algorithm and ablation mode; dispatches on
+    the ``(algo, impl)`` registry.  Tensor-wise quantization
+    (``blockwise=False``) is an accuracy ablation, not a perf path, and is
+    served by the "jnp" entry regardless of ``impl``.  Returns a
+    :class:`~repro.kernels.fused_update.FusedUpdateResult` whose
+    codes_r/absmax_r are None for one-state algorithms.
+    """
     impl = impl or default_impl()
+    if not blockwise:
+        impl = "jnp"
+    fn = _REGISTRY.get((algo, impl))
+    if fn is None:
+        raise KeyError(f"no fused_update backend for (algo={algo!r}, "
+                       f"impl={impl!r}); registered: {registered()}")
+    hyper = dict(lr=lr, beta1=beta1, beta2=beta2, eps=eps,
+                 weight_decay=weight_decay, step=step,
+                 trust_coeff=trust_coeff, gnorm_scale=gnorm_scale,
+                 stochastic=stochastic, seed=seed, rows=rows)
     if impl == "jnp":
-        return ref.momentum8_ref(p, g, codes_m, absmax_m, qmap_m, lr=lr,
-                                 beta1=beta1, weight_decay=weight_decay,
-                                 step=step)
-    scalars = jnp.stack([
-        jnp.asarray(lr, jnp.float32), jnp.asarray(beta1, jnp.float32),
-        jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32),
-        jnp.asarray(weight_decay, jnp.float32), jnp.asarray(step, jnp.float32),
-        jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)])
-    nb = p.shape[0]
-    (p, g, codes_m, absmax_m), _ = _pad_rows([p, g, codes_m, absmax_m], nb, rows)
-    p2, cm, am = _momentum8_pallas(p, g, codes_m, absmax_m, qmap_m, scalars,
-                                   rows=rows, interpret=(impl == "interpret"))
-    return p2[:nb], cm[:nb], am[:nb]
+        hyper["blockwise"] = blockwise
+    return fn(p, g, codes_m, absmax_m, codes_r, absmax_r, qmap_m, qmap_r,
+              **hyper)

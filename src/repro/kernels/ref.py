@@ -4,11 +4,25 @@ These are the numerical source of truth the kernels are tested against
 (tests/test_kernels.py sweeps shapes/dtypes and asserts allclose).
 All functions operate in the flat block domain: state tensors are
 ``(n_blocks, B)``, absmax is ``(n_blocks,)``.
+
+``fused_update_ref`` is the single parameterized reference for the fused
+optimizer update: it shares the 32-bit update math and norm finalization
+with ``fused_update.py`` (parity by construction) but keeps independent
+quantization mechanics (searchsorted + gather instead of the kernels'
+compare-sum + one-hot contraction).  It also implements the ablation modes
+the Pallas path does not serve: tensor-wise (single absmax) quantization.
+It is registered in ``ops.py`` as the ``impl="jnp"`` entry for every
+algorithm — the only surviving form of the old multi-pass jnp fallback.
 """
 from __future__ import annotations
 
+from typing import Optional
+
 import jax
 import jax.numpy as jnp
+
+from repro.kernels import common
+from repro.kernels import fused_update as fu
 
 
 def _bounds(codebook: jax.Array) -> jax.Array:
@@ -30,66 +44,76 @@ def dequantize_ref(codes: jax.Array, absmax: jax.Array, codebook: jax.Array,
     return (codebook[codes.astype(jnp.int32)] * absmax[:, None]).astype(dtype)
 
 
-def adam8_ref(
-    p: jax.Array,            # (n_blocks, B) f32 master params (flat domain)
-    g: jax.Array,            # (n_blocks, B) grads
-    codes_m: jax.Array,      # (n_blocks, B) uint8
-    absmax_m: jax.Array,     # (n_blocks,)   f32
-    codes_r: jax.Array,      # (n_blocks, B) uint8
-    absmax_r: jax.Array,     # (n_blocks,)   f32
-    qmap_m: jax.Array,       # (256,) signed dynamic map
-    qmap_r: jax.Array,       # (256,) unsigned dynamic map
+def _requantize(x: jax.Array, codebook: jax.Array, *, blockwise: bool,
+                random_u: Optional[jax.Array]) -> tuple[jax.Array, jax.Array]:
+    """Requantize one state tensor: block-wise or tensor-wise absmax,
+    optionally with stochastic rounding (same uniforms as the kernel)."""
+    if blockwise:
+        absmax = jnp.max(jnp.abs(x), axis=-1)
+    else:
+        # tensor-wise ablation: a single absmax for the whole tensor
+        absmax = jnp.full((x.shape[0],), jnp.max(jnp.abs(x)), jnp.float32)
+    scale = jnp.where(absmax > 0, absmax, 1.0)
+    xn = x / scale[:, None]
+    codes = jnp.searchsorted(_bounds(codebook), xn, side="right").astype(jnp.int32)
+    if random_u is not None:
+        q_near = codebook[codes]
+        direction = jnp.where(xn > q_near, 1, -1)
+        other = jnp.clip(codes + direction, 0, common.CODEBOOK_SIZE - 1)
+        q_other = codebook[other]
+        codes = common.stochastic_codes(xn, codes, q_near, q_other, other,
+                                        random_u)
+    return codes.astype(jnp.uint8), absmax
+
+
+def fused_update_ref(
+    p: jax.Array,                  # (n_blocks, B) f32 master params
+    g: jax.Array,                  # (n_blocks, B) grads
+    codes_m: jax.Array,            # (n_blocks, B) uint8
+    absmax_m: jax.Array,           # (n_blocks,)   f32
+    codes_r: Optional[jax.Array],  # 2-state algos only
+    absmax_r: Optional[jax.Array],
+    qmap_m: jax.Array,             # (256,) state-1 codebook
+    qmap_r: Optional[jax.Array],   # (256,) state-2 codebook
     *,
-    lr: jax.Array,
-    beta1: jax.Array,
-    beta2: jax.Array,
-    eps: jax.Array,
-    weight_decay: jax.Array,
-    step: jax.Array,         # 1-based update index, for bias correction
-):
-    """One fused 8-bit Adam/AdamW update (paper §2 procedure):
-    dequantize -> 32-bit update -> requantize.  Returns
-    (p_new, codes_m', absmax_m', codes_r', absmax_r')."""
-    g = g.astype(jnp.float32)
+    algo: str,
+    lr, beta1=0.9, beta2=0.999, eps=1e-8, weight_decay=0.0, step=1.0,
+    trust_coeff=0.001, gnorm_scale=1.0,
+    blockwise: bool = True,
+    stochastic: bool = False,
+    seed=0,
+) -> fu.FusedUpdateResult:
+    """The paper's §2 procedure (dequantize -> 32-bit update -> requantize)
+    for any of the six algorithms, as straight-line XLA ops."""
+    spec = fu.ALGO_SPECS[algo]
+    two = spec.n_states == 2
     p = p.astype(jnp.float32)
+    g = g.astype(jnp.float32) * jnp.asarray(gnorm_scale, jnp.float32)
+    s = dict(lr=jnp.asarray(lr, jnp.float32),
+             beta1=jnp.asarray(beta1, jnp.float32),
+             beta2=jnp.asarray(beta2, jnp.float32),
+             eps=jnp.asarray(eps, jnp.float32),
+             weight_decay=jnp.asarray(weight_decay, jnp.float32),
+             step=jnp.asarray(step, jnp.float32),
+             tensor_scale=jnp.float32(1.0))
+
     m = dequantize_ref(codes_m, absmax_m, qmap_m)
-    r = dequantize_ref(codes_r, absmax_r, qmap_r)
+    r = dequantize_ref(codes_r, absmax_r, qmap_r) if two else None
 
-    m = beta1 * m + (1.0 - beta1) * g
-    r = beta2 * r + (1.0 - beta2) * g * g
+    s["tensor_scale"] = fu.tensor_scale_for(
+        spec, g, p, m, r, s, jnp.asarray(trust_coeff, jnp.float32))
 
-    c1 = 1.0 - beta1 ** step
-    c2 = 1.0 - beta2 ** step
-    m_hat = m / c1
-    r_hat = r / c2
-    update = m_hat / (jnp.sqrt(r_hat) + eps) + weight_decay * p
-    p_new = p - lr * update
+    m2, r2, p2 = fu.update_math(spec, g, p, m, r, s)
 
-    cm, am = quantize_ref(m, qmap_m)
-    cr, ar = quantize_ref(r, qmap_r)
-    return p_new, cm, am, cr, ar
-
-
-def momentum8_ref(
-    p: jax.Array,
-    g: jax.Array,
-    codes_m: jax.Array,
-    absmax_m: jax.Array,
-    qmap_m: jax.Array,
-    *,
-    lr: jax.Array,
-    beta1: jax.Array,
-    weight_decay: jax.Array,
-    step: jax.Array,
-):
-    """Fused 8-bit SGD-with-momentum update (paper Eq. 1: m = b1*m + g).
-
-    Matches the reference implementation: the *first* update uses m_0 = g_0
-    (no history), which we express as m = b1*m + g with zero-initialized m.
-    """
-    g = g.astype(jnp.float32) + weight_decay * p.astype(jnp.float32)
-    m = dequantize_ref(codes_m, absmax_m, qmap_m)
-    m = beta1 * m + g
-    p_new = p.astype(jnp.float32) - lr * m
-    cm, am = quantize_ref(m, qmap_m)
-    return p_new, cm, am
+    u1 = u2 = None
+    if stochastic:
+        seed = jnp.asarray(seed, jnp.int32).astype(jnp.uint32)
+        idx = common.element_indices(*codes_m.shape, 0)
+        u1 = common.hash_uniform(idx, seed + jnp.uint32(common.STATE1_SEED_SALT))
+        if two:
+            u2 = common.hash_uniform(idx, seed + jnp.uint32(common.STATE2_SEED_SALT))
+    cm, am = _requantize(m2, qmap_m, blockwise=blockwise, random_u=u1)
+    if two:
+        cr, ar = _requantize(r2, qmap_r, blockwise=blockwise, random_u=u2)
+        return fu.FusedUpdateResult(p2, cm, am, cr, ar)
+    return fu.FusedUpdateResult(p2, cm, am, None, None)

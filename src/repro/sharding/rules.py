@@ -161,7 +161,11 @@ def opt_state_shardings(abstract_opt_state, param_shard_tree, mesh: Mesh,
     is_state_leaf = lambda x: isinstance(x, (Quant8Leaf, Full32Leaf, AdafactorLeaf))
     leaves = jax.tree_util.tree_map(leaf, abstract_opt_state.leaves,
                                     param_shard_tree, is_leaf=is_state_leaf)
-    return type(abstract_opt_state)(step=rep, leaves=leaves)
+    extra = {}
+    if getattr(abstract_opt_state, "gnorm_vec", None) is not None:
+        # percentile-clipping gnorm history: tiny, replicated everywhere
+        extra["gnorm_vec"] = rep
+    return type(abstract_opt_state)(step=rep, leaves=leaves, **extra)
 
 
 def batch_sharding(mesh: Mesh, policy: ShardingPolicy, ndim: int = 2,

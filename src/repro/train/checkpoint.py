@@ -13,6 +13,13 @@ onto any mesh shape / sharding — restore takes a template pytree (built with
 accordingly.  8-bit optimizer states are stored as their uint8 codes +
 f32 absmax, so checkpoints are ~4x smaller than fp32-state checkpoints —
 the paper's memory saving carried through to the storage/restore path.
+
+Auxiliary optimizer state rides along unchanged: the percentile-clipping
+gnorm history (``OptState.gnorm_vec``) is an ordinary f32 leaf, so a
+restored run resumes with the exact clipping statistics it left with
+(tests/test_checkpoint.py round-trips it).  ``None`` leaves (e.g. the
+history when clipping is off) are recorded in the manifest and restored
+as ``None``.
 """
 from __future__ import annotations
 

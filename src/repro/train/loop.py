@@ -21,8 +21,14 @@ Pytree = Any
 class TrainState(NamedTuple):
     """params are NOT stored: they are a cast view of the optimizer's
     (sharded, flat-block) master copies, re-materialized inside each step —
-    ZeRO-3 style, no persistent model-shape duplicate."""
-    opt_state: Any            # optimizer-owned (master, 8-bit stats)
+    ZeRO-3 style, no persistent model-shape duplicate.
+
+    ``opt_state`` also carries the optimizer's auxiliary state: the
+    percentile-clipping gnorm history (``OptState.gnorm_vec``) rides here
+    and therefore checkpoints/restores with everything else; stochastic-
+    rounding seeds are derived from ``opt_state.step`` inside the optimizer,
+    so a restore replays identical rounding — no RNG state to persist."""
+    opt_state: Any            # optimizer-owned (master, 8-bit stats, gnorms)
     step: jax.Array           # int32
 
 
@@ -148,6 +154,12 @@ def make_train_step(cfg, optimizer, hyper: TrainHyper = TrainHyper(),
         _, new_opt = optimizer.apply(grads, state.opt_state, lr=lr,
                                      param_dtype=param_dtype)
         metrics = {"loss": loss, "grad_norm": gnorm, **mx}
+        if getattr(optimizer, "cfg", None) is not None and \
+                getattr(optimizer.cfg, "percentile_clipping", 100) < 100:
+            # Same subgraph apply() evaluates internally -> CSE'd by XLA;
+            # surfaces how hard percentile clipping bit this step.
+            scale, _ = optimizer.percentile_clip(grads, state.opt_state)
+            metrics["pclip_scale"] = scale
         return TrainState(opt_state=new_opt, step=state.step + 1), metrics
 
     return train_step

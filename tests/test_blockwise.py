@@ -4,6 +4,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+# Property tests need the `test` extra (pip install -e '.[test]'); without
+# it, skip this module instead of failing collection.
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import blockwise as bw

@@ -39,43 +39,136 @@ def test_dequantize_kernel_matches_ref(nb, bsz, dtype):
                                np.asarray(d_r, np.float32), atol=1e-6)
 
 
-@pytest.mark.parametrize("nb,bsz", [(2, 256), (5, 512), (8, 2048)])
-@pytest.mark.parametrize("gdtype", [jnp.float32, jnp.bfloat16])
-def test_fused_adam8_matches_ref(nb, bsz, gdtype):
+ALGOS = list(ops.ALGOS)
+HYPER = dict(lr=1e-3, beta1=0.9, beta2=0.999, eps=1e-8,
+             weight_decay=0.01, step=7.0, trust_coeff=1e-3)
+
+
+def _fused_inputs(algo, nb, bsz, gdtype=jnp.float32):
+    """(p, g, codes_m, absmax_m, codes_r, absmax_r, qmap_m, qmap_r)."""
+    spec_two = algo in ("adam", "adamw", "lamb")
     p = _rand(nb, bsz, 2)
     g = _rand(nb, bsz, 3, 0.1).astype(gdtype)
-    cm, am = ref.quantize_ref(_rand(nb, bsz, 4, 0.01), QS)
-    cr, ar = ref.quantize_ref(jnp.abs(_rand(nb, bsz, 5, 1e-4)), QU)
-    kw = dict(lr=1e-3, beta1=0.9, beta2=0.999, eps=1e-8,
-              weight_decay=0.01, step=7.0)
-    out_k = ops.adam8_update(p, g, cm, am, cr, ar, QS, QU,
-                             impl="interpret", **kw)
-    out_r = ops.adam8_update(p, g, cm, am, cr, ar, QS, QU, impl="jnp", **kw)
-    for k_, r_ in zip(out_k, out_r):
-        if k_.dtype == jnp.uint8:
+    if algo == "adagrad":
+        cm, am = ref.quantize_ref(jnp.abs(_rand(nb, bsz, 4, 1e-3)), QU)
+        q1 = QU
+    else:
+        cm, am = ref.quantize_ref(_rand(nb, bsz, 4, 0.01), QS)
+        q1 = QS
+    cr = ar = None
+    if spec_two:
+        cr, ar = ref.quantize_ref(jnp.abs(_rand(nb, bsz, 5, 1e-4)), QU)
+    return p, g, cm, am, cr, ar, q1, QU
+
+
+def _assert_results_close(out_k, out_r, tol_codes=0.001):
+    for name, k_, r_ in zip(out_k._fields, out_k, out_r):
+        if k_ is None:
+            assert r_ is None, name
+        elif k_.dtype == jnp.uint8:
             # codes may differ only at exact boundary ties
             mism = int((np.asarray(k_) != np.asarray(r_)).sum())
-            assert mism <= k_.size * 0.001
+            assert mism <= k_.size * tol_codes, (name, mism)
         else:
             np.testing.assert_allclose(np.asarray(k_, np.float32),
                                        np.asarray(r_, np.float32),
-                                       atol=5e-6, rtol=1e-5)
+                                       atol=5e-6, rtol=1e-5, err_msg=name)
 
 
-@pytest.mark.parametrize("nb,bsz", [(2, 256), (4, 1024)])
-def test_fused_momentum8_matches_ref(nb, bsz):
-    p = _rand(nb, bsz, 6)
-    g = _rand(nb, bsz, 7, 0.1)
-    cm, am = ref.quantize_ref(_rand(nb, bsz, 8, 0.05), QS)
-    kw = dict(lr=0.1, beta1=0.9, weight_decay=1e-4, step=3.0)
-    out_k = ops.momentum8_update(p, g, cm, am, QS, impl="interpret", **kw)
-    out_r = ops.momentum8_update(p, g, cm, am, QS, impl="jnp", **kw)
-    for k_, r_ in zip(out_k, out_r):
-        if k_.dtype == jnp.uint8:
-            assert int((np.asarray(k_) != np.asarray(r_)).sum()) <= k_.size * 0.001
-        else:
-            np.testing.assert_allclose(np.asarray(k_), np.asarray(r_),
-                                       atol=5e-6, rtol=1e-5)
+@pytest.mark.parametrize("algo", ALGOS)
+@pytest.mark.parametrize("nb,bsz", [(2, 256), (4, 512)])
+def test_fused_update_matches_ref(algo, nb, bsz):
+    """The unified kernel path (interpret) vs the jnp registry entry, for
+    all six algorithms — including the LAMB/LARS norm prologue."""
+    args = _fused_inputs(algo, nb, bsz)
+    out_k = ops.fused_update(algo, *args, impl="interpret", **HYPER)
+    out_r = ops.fused_update(algo, *args, impl="jnp", **HYPER)
+    _assert_results_close(out_k, out_r)
+
+
+@pytest.mark.parametrize("gdtype", [jnp.float32, jnp.bfloat16])
+def test_fused_update_grad_dtypes(gdtype):
+    args = _fused_inputs("adam", 8, 2048, gdtype)
+    out_k = ops.fused_update("adam", *args, impl="interpret", **HYPER)
+    out_r = ops.fused_update("adam", *args, impl="jnp", **HYPER)
+    _assert_results_close(out_k, out_r)
+
+
+@pytest.mark.parametrize("algo", ["adam", "lars"])
+def test_fused_update_stochastic_parity(algo):
+    """In-kernel stochastic rounding uses the same counter-based PRNG as
+    the jnp reference, so codes agree bit-for-bit given the same seed."""
+    args = _fused_inputs(algo, 2, 256)
+    out_k = ops.fused_update(algo, *args, impl="interpret",
+                             stochastic=True, seed=123, **HYPER)
+    out_r = ops.fused_update(algo, *args, impl="jnp",
+                             stochastic=True, seed=123, **HYPER)
+    _assert_results_close(out_k, out_r)
+    # ...and a different seed actually changes the rounding
+    out_s = ops.fused_update(algo, *args, impl="jnp",
+                             stochastic=True, seed=124, **HYPER)
+    assert int((np.asarray(out_r.codes_m) != np.asarray(out_s.codes_m)).sum()) > 0
+
+
+def test_fused_update_stochastic_mean_preserving():
+    """Averaged over seeds, stochastic requantization of the new state is
+    closer to the exact 32-bit state than deterministic rounding (the whole
+    point of the ablation, paper App H)."""
+    nb, bsz = 1, 2048
+    qs = QS
+    p = jnp.zeros((nb, bsz))
+    # With zero-initialized momentum, m2 == g exactly. One 1.0 element pins
+    # the block absmax, the 0.3 bulk sits between dynamic-map codes.
+    g = jnp.full((nb, bsz), 0.3).at[0, 0].set(1.0)
+    cm, am = ref.quantize_ref(jnp.zeros((nb, bsz)), qs)
+    kw = dict(HYPER, lr=0.0, weight_decay=0.0)
+    exact = float(g.mean())
+    det = ops.fused_update("momentum", p, g, cm, am, None, None, qs, QU,
+                           impl="jnp", **kw)
+    det_mean = float(ref.dequantize_ref(det.codes_m, det.absmax_m, qs).mean())
+    assert abs(det_mean - exact) > 1e-6   # deterministic rounding is biased
+    means = []
+    for seed in range(30):
+        st = ops.fused_update("momentum", p, g, cm, am, None, None, qs, QU,
+                              impl="jnp", stochastic=True, seed=seed, **kw)
+        means.append(float(ref.dequantize_ref(st.codes_m, st.absmax_m, qs).mean()))
+    assert abs(np.mean(means) - exact) < abs(det_mean - exact)
+
+
+def test_fused_update_gnorm_scale_scales_grad():
+    """gnorm_scale=0.5 inside the fused path must equal feeding g/2."""
+    args = _fused_inputs("adam", 2, 256)
+    p, g, cm, am, cr, ar, q1, q2 = args
+    a = ops.fused_update("adam", p, g, cm, am, cr, ar, q1, q2,
+                         impl="interpret", gnorm_scale=0.5, **HYPER)
+    b = ops.fused_update("adam", p, g * 0.5, cm, am, cr, ar, q1, q2,
+                         impl="interpret", **HYPER)
+    _assert_results_close(a, b)
+
+
+def test_fused_update_tensorwise_ablation():
+    """blockwise=False (tensor-wise absmax) routes to the jnp entry and
+    produces a single shared absmax per state tensor."""
+    args = _fused_inputs("adam", 4, 256)
+    out = ops.fused_update("adam", *args, impl="interpret",
+                           blockwise=False, **HYPER)
+    am = np.asarray(out.absmax_m)
+    assert np.all(am == am[0])
+
+
+def test_fused_update_unknown_combo_raises():
+    args = _fused_inputs("adam", 2, 256)
+    with pytest.raises(KeyError):
+        ops.fused_update("adam", *args, impl="cuda", **HYPER)
+
+
+def test_fused_update_row_padding():
+    """n_blocks not a multiple of DEFAULT_ROWS is padded transparently."""
+    args = _fused_inputs("adam", 5, 256)
+    out_k = ops.fused_update("adam", *args, impl="interpret", **HYPER)
+    out_r = ops.fused_update("adam", *args, impl="jnp", **HYPER)
+    assert out_k.p.shape == (5, 256)
+    _assert_results_close(out_k, out_r)
 
 
 def test_kernel_row_padding():
@@ -85,6 +178,14 @@ def test_kernel_row_padding():
     c_r, a_r = ref.quantize_ref(x, QS)
     assert c_k.shape == (5, 256)
     np.testing.assert_array_equal(np.asarray(c_k), np.asarray(c_r))
+
+
+def test_default_rows_consistent():
+    """One DEFAULT_ROWS across the kernel package (hoisted into common)."""
+    from repro.kernels import blockwise_dequant, blockwise_quant, common
+    assert ops.DEFAULT_ROWS == common.DEFAULT_ROWS
+    assert blockwise_quant.DEFAULT_ROWS == common.DEFAULT_ROWS
+    assert blockwise_dequant.DEFAULT_ROWS == common.DEFAULT_ROWS
 
 
 def test_zero_block_safe():

@@ -129,6 +129,84 @@ def test_shard_multiple_pads_blocks():
     assert leaf.codes_m.shape[0] % 16 == 0
 
 
+def test_stochastic_rounding_needs_no_key():
+    """Seeds derive from the step counter when no key is given, so the
+    train loop can run stochastic rounding without threading RNG state."""
+    params = _params()
+    target = jax.tree_util.tree_map(lambda p: jnp.ones_like(p) * 0.5, params)
+    opt = make_optimizer("adam8", lr=1e-2, min_8bit_size=1024,
+                         stochastic_rounding=True)
+    st = opt.init(params)
+    g = jax.grad(lambda p: _loss(p, target))(params)
+    p1, st1 = opt.apply(g, st)
+    p1b, st1b = opt.apply(g, st)          # same step -> same seed -> same codes
+    np.testing.assert_array_equal(
+        np.asarray(st1.leaves["dense"]["w"].codes_m),
+        np.asarray(st1b.leaves["dense"]["w"].codes_m))
+    _, st2 = opt.apply(g, st1)            # next step -> different rounding
+    assert not np.array_equal(
+        np.asarray(st1.leaves["dense"]["w"].codes_m),
+        np.asarray(st2.leaves["dense"]["w"].codes_m))
+
+
+def test_percentile_clipping_state_and_scale():
+    """gnorm history fills with squared global grad norms; once full, a
+    spike step is scaled down to the percentile of the history."""
+    opt = make_optimizer("adam8", lr=1e-3, min_8bit_size=1024,
+                         percentile_clipping=50, pclip_history=4)
+    params = _params()
+    st = opt.init(params)
+    assert st.gnorm_vec is not None and st.gnorm_vec.shape == (4,)
+    g = jax.tree_util.tree_map(jnp.ones_like, params)
+    gn2 = sum(x.size for x in jax.tree_util.tree_leaves(params))
+    for _ in range(4):                      # fill the history
+        scale, _ = opt.percentile_clip(g, st)
+        assert float(scale) == 1.0          # warmup / steady norms: no clip
+        _, st = opt.apply(g, st)
+    np.testing.assert_allclose(np.asarray(st.gnorm_vec), gn2, rtol=1e-6)
+    g_spike = jax.tree_util.tree_map(lambda x: 10.0 * jnp.ones_like(x), params)
+    scale, _ = opt.percentile_clip(g_spike, st)
+    # clip to the 50th percentile of [gn2*4 (one slot now 100*gn2)]
+    assert 0.0 < float(scale) < 1.0
+    g_small = jax.tree_util.tree_map(lambda x: 0.1 * jnp.ones_like(x), params)
+    scale_small, _ = opt.percentile_clip(g_small, st)
+    assert float(scale_small) == 1.0        # below percentile: untouched
+
+
+def test_percentile_clipping_warmup_never_clips():
+    opt = make_optimizer("adam8", lr=1e-3, min_8bit_size=1024,
+                         percentile_clipping=5, pclip_history=8)
+    params = _params()
+    st = opt.init(params)
+    g = jax.tree_util.tree_map(jnp.ones_like, params)
+    scale, _ = opt.percentile_clip(g, st)
+    assert float(scale) == 1.0              # history not full yet
+
+
+def test_percentile_clipping_training_converges():
+    l, _, st = _run("adam8", steps=60, percentile_clipping=95,
+                    pclip_history=8)
+    assert np.isfinite(l)
+    assert st.gnorm_vec is not None
+    assert float(jnp.min(st.gnorm_vec)) > 0.0   # history populated
+
+
+def test_percentile_clipping_off_allocates_no_state():
+    opt = make_optimizer("adam8", lr=1e-3, min_8bit_size=1024)
+    st = opt.init(_params())
+    assert st.gnorm_vec is None
+
+
+def test_adagrad_single_state():
+    """AdaGrad is a one-state optimizer (accumulator in the m slot) — no
+    second-moment arrays are allocated."""
+    opt = make_optimizer("adagrad8", lr=1e-2, min_8bit_size=1024,
+                         override_32bit=lambda p: False)
+    st = opt.init(_params())
+    leaf = st.leaves["dense"]["w"]
+    assert leaf.codes_r is None and leaf.absmax_r is None
+
+
 def test_bias_correction_first_step_magnitude():
     """After one step from zero state, Adam update ~= lr * sign(g)."""
     opt = make_optimizer("adam32", lr=0.1, weight_decay=0.0)
