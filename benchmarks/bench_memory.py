@@ -44,6 +44,32 @@ def bench_table1_measured():
          f"{res['adam32'] / res['adam8']:.2f}x")
 
 
+def bench_kbit_state_bytes():
+    """k-bit code-format sweep (DESIGN.md §9): measured packed state bytes
+    per bitwidth on the reduced config.  The 4-bit/8-bit ratio is the
+    headline — packed 4-bit states must be ≤ 0.55x the 8-bit bytes."""
+    cfg, _ = small_lm()
+    from repro.train import loop as L
+    res = {}
+    for bits in (4, 5, 6, 8):
+        # Per-slot: k-bit first moment, 8-bit second (Li et al. 2023) and
+        # the pure-k point.  Fully quantized state (no embedding override)
+        # so the ratio measures the code format, not the fp32 leaves.
+        pairs = [(f"m{bits}_r8", (bits, 8))]
+        if bits != 8:
+            pairs.append((f"m{bits}_r{bits}", bits))
+        for tag, sb in pairs:
+            opt = make_optimizer("adam8", lr=1e-3, min_8bit_size=1024,
+                                 override_32bit=lambda p: False,
+                                 state_bits=sb)
+            state, _ = L.init_train_state(cfg, opt, jax.random.PRNGKey(0))
+            res[tag] = opt.state_bytes(state.opt_state)["state_bytes"]
+            emit(f"kbit/measured_state_bytes/{tag}", 0.0, str(res[tag]))
+    ratio = res["m4_r4"] / res["m8_r8"]
+    emit("kbit/ratio_4bit_over_8bit", 0.0, f"{ratio:.3f}x")
+    assert ratio <= 0.55, ratio
+
+
 def bench_table2_largest_finetunable():
     """Paper Table 2: largest model trainable at batch 1 for a given memory
     budget, 32-bit vs 8-bit Adam.  Accounting: bf16 weights+grads (4B/param)
@@ -68,6 +94,7 @@ def bench_table2_largest_finetunable():
 def main():
     bench_table1_memory()
     bench_table1_measured()
+    bench_kbit_state_bytes()
     bench_table2_largest_finetunable()
 
 

@@ -1,14 +1,22 @@
 """Paper App F Table 6 + App D (Fig 4) analogue: quantization error by data
-type, and the Adam-update error analysis."""
+type, and the Adam-update error analysis.  The k-bit sweep (DESIGN.md §9)
+extends Table 6 down the bitwidth axis and persists a per-bitwidth table to
+BENCH_qerror.json so the error/memory trade-off is tracked over PRs."""
 from __future__ import annotations
+
+import os
+import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import append_bench_json, emit
 from repro.core import blockwise as bw
 from repro.core import qmap
+
+BENCH_JSON = os.path.join(os.path.dirname(__file__), "..",
+                          "BENCH_qerror.json")
 
 
 def _adam_states(n=200_000, seed=0):
@@ -76,10 +84,39 @@ def bench_appD_error_by_code():
              f"{np.concatenate([by_code[:8], by_code[-8:]]).mean():.2e}")
 
 
+def bench_kbit_error_table():
+    """Per-bitwidth quantization/Adam-update error (block-wise, B=2048),
+    emitted as CSV rows *and* appended to BENCH_qerror.json."""
+    m, r = _adam_states()
+    eps = 1e-8
+    u32 = m / (jnp.sqrt(r) + eps)
+    table = {}
+    for bits in (4, 5, 6, 8):
+        cb_s = jnp.asarray(qmap.get_qmap("dynamic", True, bits=bits))
+        blocks = bw.pad_to_blocks(m, 2048)
+        cm, am = bw.quantize_blocks(blocks, cb_s)
+        md = bw.dequantize_blocks(cm, am, cb_s).reshape(-1)[:m.shape[0]]
+        u_k = md / (jnp.sqrt(r) + eps)
+        rel = float(jnp.mean(jnp.abs(u_k - u32) / (jnp.abs(u32) + 1e-12)))
+        abs_q = float(jnp.mean(jnp.abs(md - m)))
+        table[str(bits)] = {"rel_adam_error": rel, "abs_quant_error": abs_q,
+                            "levels": 1 << bits}
+        emit(f"kbit/rel_adam_error/{bits}bit", 0.0, f"{rel * 100:.1f}%")
+        emit(f"kbit/abs_quant_error/{bits}bit", 0.0, f"{abs_q:.3e}")
+    path = append_bench_json(BENCH_JSON, {
+        "bench": "kbit_error_table",
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "qmap": "dynamic", "block_size": 2048,
+        "per_bitwidth": table,
+    })
+    emit("kbit/error_table_json", 0.0, path)
+
+
 def main():
     bench_table6_dtype_error()
     bench_blockwise_vs_tensorwise()
     bench_appD_error_by_code()
+    bench_kbit_error_table()
 
 
 if __name__ == "__main__":

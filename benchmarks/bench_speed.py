@@ -8,15 +8,15 @@ HBM bw — the kernel is bandwidth-bound; DESIGN.md §3)."""
 from __future__ import annotations
 
 import functools
-import json
 import os
 import time
 
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit, time_fn
+from benchmarks.common import append_bench_json, emit, time_fn
 from repro.core import qmap
+from repro.core.lowbit import PackedCodes
 from repro.kernels import ops, ref
 
 BENCH_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_speed.json")
@@ -138,19 +138,52 @@ def bench_fused_update_sweep(smoke: bool = False):
     return results
 
 
-def _append_bench_json(entry: dict) -> None:
-    path = os.path.abspath(BENCH_JSON)
-    data = {"entries": []}
-    if os.path.exists(path):
-        try:
-            with open(path) as f:
-                data = json.load(f)
-        except (json.JSONDecodeError, OSError):
-            data = {"entries": []}
-    data.setdefault("entries", []).append(entry)
-    with open(path, "w") as f:
-        json.dump(data, f, indent=2)
-    emit("table5/fused_sweep/json", 0.0, path)
+def _append_bench_json(entry: dict, label: str = "table5/fused_sweep/json") -> None:
+    path = append_bench_json(BENCH_JSON, entry)
+    emit(label, 0.0, path)
+
+
+def bench_kbit_fused(bits: int, smoke: bool = False):
+    """Packed k-bit fused Adam through the registry (DESIGN.md §9): times
+    the jnp entry and exercises the Pallas-interpret in-kernel
+    unpack→dequant→update→requant→pack path; appends to BENCH_speed.json.
+    This is the CI `--bits` smoke leg."""
+    qs = jnp.asarray(qmap.get_qmap("dynamic", True, bits=bits))
+    qu = jnp.asarray(qmap.get_qmap("dynamic", False, bits=bits))
+    kw = dict(lr=1e-3, beta1=0.9, beta2=0.999, eps=1e-8, weight_decay=0.0,
+              step=3.0)
+    results = {}
+    sizes = {"jnp": (64, 2048) if smoke else (512, 2048),
+             "interpret": (8, 256) if smoke else (8, 2048)}
+    for impl, (nb, bsz) in sizes.items():
+        k = jax.random.PRNGKey(0)
+        p = jax.random.normal(k, (nb, bsz))
+        g = jax.random.normal(k, (nb, bsz)) * 0.01
+        cm8, am = ref.quantize_ref(p * 0.01, qs)
+        cr8, ar = ref.quantize_ref(jnp.abs(p) * 1e-4, qu)
+        cm = PackedCodes.from_codes(cm8, bits)
+        cr = PackedCodes.from_codes(cr8, bits)
+
+        @jax.jit
+        def run(p, g, pk_m, am, pk_r, ar):
+            return ops.fused_update(
+                "adam", p, g, PackedCodes(pk_m, bits, bsz), am,
+                PackedCodes(pk_r, bits, bsz), ar, qs, qu, impl=impl, **kw)
+
+        us, out = time_fn(run, p, g, cm.packed, am, cr.packed, ar,
+                          iters=2 if impl == "interpret" else 3, warmup=1)
+        assert out.codes_m.packed.shape == (nb, bsz * bits // 8)
+        results[impl] = us
+        n = nb * bsz
+        emit(f"kbit/fused_adam_{bits}bit/{impl}_us_per_{n}p", us,
+             f"packed {bits}-bit" if impl == "jnp" else "validation-path")
+    _append_bench_json({
+        "bench": "kbit_fused", "bits": bits,
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "smoke": smoke, "backend": jax.default_backend(),
+        "us_per_call": results,
+    }, label=f"kbit/fused_{bits}bit/json")
+    return results
 
 
 def bench_quantize_throughput():
@@ -167,11 +200,13 @@ def bench_quantize_throughput():
          f"{n / us:.0f} elem/us")
 
 
-def main(smoke: bool = False):
+def main(smoke: bool = False, bits: int | None = None):
     if not smoke:
         bench_table5_update_speed()
         bench_quantize_throughput()
     bench_fused_update_sweep(smoke=smoke)
+    if bits is not None:
+        bench_kbit_fused(bits, smoke=smoke)
 
 
 if __name__ == "__main__":

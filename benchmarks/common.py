@@ -1,6 +1,8 @@
 """Shared helpers for the benchmark harness (one module per paper table)."""
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import jax
@@ -17,6 +19,23 @@ ROWS: list[tuple[str, float, str]] = []
 def emit(name: str, us_per_call: float, derived: str = ""):
     ROWS.append((name, us_per_call, derived))
     print(f"{name},{us_per_call:.3f},{derived}")
+
+
+def append_bench_json(path: str, entry: dict) -> str:
+    """Append one entry to a BENCH_*.json trajectory file (tolerates a
+    missing or corrupt file) and return the absolute path."""
+    path = os.path.abspath(path)
+    data = {"entries": []}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                data = json.load(f)
+        except (json.JSONDecodeError, OSError):
+            data = {"entries": []}
+    data.setdefault("entries", []).append(entry)
+    with open(path, "w") as f:
+        json.dump(data, f, indent=2)
+    return path
 
 
 def time_fn(fn, *args, iters=5, warmup=2):

@@ -34,6 +34,9 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="reduced CI sweep (speed suite at tiny sizes, "
                          "fused kernels on the Pallas interpret path)")
+    ap.add_argument("--bits", type=int, default=None,
+                    help="also run the packed k-bit legs (4/5/6/8) of any "
+                         "suite that supports a bitwidth sweep")
     args = ap.parse_args()
     if args.only:
         names = args.only.split(",")
@@ -47,8 +50,11 @@ def main() -> None:
         print(f"# === {n}: {desc} ===")
         mod = __import__(mod_name, fromlist=["main"])
         kwargs = {}
-        if args.smoke and "smoke" in inspect.signature(mod.main).parameters:
+        params = inspect.signature(mod.main).parameters
+        if args.smoke and "smoke" in params:
             kwargs["smoke"] = True
+        if args.bits is not None and "bits" in params:
+            kwargs["bits"] = args.bits
         try:
             mod.main(**kwargs)
         except Exception as e:  # keep the harness running

@@ -1,11 +1,16 @@
 """Quickstart: the paper's "two-line code change".
 
-Train the same tiny LM twice — once with 32-bit Adam, once with 8-bit Adam
-(block-wise dynamic quantization + stable embedding).  Same hyperparameters,
-same data, same final loss, ~4x less optimizer-state memory.
+Train the same tiny LM twice — once with 32-bit Adam, once with quantized
+Adam (block-wise dynamic quantization + stable embedding).  Same
+hyperparameters, same data, same final loss, ~4x less optimizer-state
+memory (more with sub-byte states).
 
     PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py --bits 4   # packed 4-bit
+                                                 # first moment, 8-bit second
 """
+import argparse
+
 import jax
 import jax.numpy as jnp
 
@@ -15,12 +20,12 @@ from repro.data.pipeline import DataConfig, SyntheticLMPipeline
 from repro.train import loop as L
 
 
-def run(opt_name: str, steps: int = 80):
+def run(opt_name: str, steps: int = 80, **opt_kw):
     cfg = base.reduced(base.get_config("paper-lm-209m"),
                        d_model=128, n_layers=2, vocab_size=256)
     pipe = SyntheticLMPipeline(DataConfig(vocab_size=256, seq_len=64,
                                           global_batch=8))
-    opt = make_optimizer(opt_name, lr=5e-3)      # <- line 1 (the swap)
+    opt = make_optimizer(opt_name, lr=5e-3, **opt_kw)  # <- line 1 (the swap)
     state, _ = L.init_train_state(cfg, opt, jax.random.PRNGKey(0))
     step = jax.jit(L.make_train_step(cfg, opt))  # <- line 2 (unchanged API)
     for i in range(steps):
@@ -33,6 +38,12 @@ def run(opt_name: str, steps: int = 80):
 
 
 if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--bits", type=int, default=8, choices=[4, 5, 6, 8],
+                    help="first-moment storage bitwidth for the quantized "
+                         "run (second moment stays 8-bit; DESIGN.md §9)")
+    args = ap.parse_args()
+    opt_kw = {} if args.bits == 8 else {"state_bits": (args.bits, 8)}
     l32, b32 = run("adam32")
-    l8, b8 = run("adam8")
+    l8, b8 = run("adam8", **opt_kw)
     print(f"\nloss diff: {abs(l8 - l32):.4f}   state memory: {b32 / b8:.1f}x smaller")

@@ -9,4 +9,7 @@ python -m pip install -e '.[test]'
 
 PYTHONPATH=src python -m pytest -x -q
 
-PYTHONPATH=src python -m benchmarks.run --smoke
+# Smoke sweep plus the packed 4-bit leg: k-bit qmaps + PackedCodes through
+# the fused registry (jnp + Pallas-interpret in-kernel unpack/pack),
+# DESIGN.md §9.  `--bits 4` is a superset of the plain --smoke run.
+PYTHONPATH=src python -m benchmarks.run --smoke --bits 4

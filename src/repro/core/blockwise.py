@@ -65,10 +65,11 @@ def quantize_blocks(
     if stochastic_rounding:
         if key is None:
             raise ValueError("stochastic_rounding requires a PRNG key")
-        # Neighbouring code on the far side of x.
+        # Neighbouring code on the far side of x (k-bit maps have
+        # codebook.shape[0] = 2^bits levels).
         q_near = codebook[codes]
         direction = jnp.where(x > q_near, 1, -1)
-        other = jnp.clip(codes + direction, 0, 255)
+        other = jnp.clip(codes + direction, 0, codebook.shape[0] - 1)
         q_other = codebook[other]
         span = jnp.abs(q_other - q_near)
         p_other = jnp.where(span > 0, jnp.abs(x - q_near) / jnp.where(span > 0, span, 1.0), 0.0)

@@ -1,0 +1,63 @@
+"""Per-state-slot code format: bitwidth + signedness + codebook family.
+
+One :class:`CodeFormat` describes how a single optimizer state slot (first
+moment, second moment, ...) is stored: a 2^bits-entry codebook from
+``repro.core.qmap`` and, for sub-byte widths, bit-packed storage via
+:class:`~repro.core.lowbit.packing.PackedCodes`.  The optimizer engine
+builds one format per slot from ``OptimConfig.state_bits`` (per-slot
+bitwidths, e.g. 4-bit first / 8-bit second moment as Li et al. 2023
+recommend) and everything below — kernels, checkpoint, sharding — follows
+the container type.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import qmap as qmap_lib
+from repro.core.lowbit.packing import SUPPORTED_BITS, PackedCodes
+
+
+@dataclasses.dataclass(frozen=True)
+class CodeFormat:
+    """Static description of one quantized state slot's storage format."""
+
+    bits: int = 8
+    signed: bool = True
+    qmap_name: str = "dynamic"
+
+    def __post_init__(self):
+        assert self.bits in SUPPORTED_BITS, self.bits
+
+    @property
+    def n_levels(self) -> int:
+        return 1 << self.bits
+
+    @property
+    def max_code(self) -> int:
+        return self.n_levels - 1
+
+    def codebook(self) -> np.ndarray:
+        """The sorted 2^bits-entry codebook for this slot."""
+        return qmap_lib.get_qmap(self.qmap_name, self.signed, bits=self.bits)
+
+    def zero_code(self) -> int:
+        """Code index whose level is (closest to) 0.0 — the init fill."""
+        return int(np.argmin(np.abs(self.codebook())))
+
+    def init_codes(self, n_blocks: int, block_size: int):
+        """Zero-state codes container: PackedCodes below 8 bits, else a
+        plain uint8 array (the legacy 8-bit layout, bitwise-unchanged)."""
+        zc = self.zero_code()
+        if self.bits == 8:
+            return jnp.full((n_blocks, block_size), zc, jnp.uint8)
+        row = PackedCodes.from_codes(
+            jnp.full((1, block_size), zc, jnp.int32), self.bits)
+        return PackedCodes(jnp.tile(row.packed, (n_blocks, 1)),
+                           self.bits, block_size)
+
+    def bytes_per_param(self, block_size: int) -> float:
+        """Analytic storage cost: packed codes + amortized f32 absmax."""
+        return self.bits / 8.0 + 4.0 / block_size

@@ -1,0 +1,104 @@
+"""Bit-packing of sub-byte optimizer-state codes into uint8 words.
+
+Layout: codes are written MSB-first into a big-endian bitstream per row —
+code i occupies stream bits ``[i*b, (i+1)*b)`` and byte j holds stream bits
+``[8j, 8j+8)`` with stream bit 8j at the byte's bit 7.  For b = 4 this is
+the familiar two-codes-per-byte nibble layout; for b = 5/6 codes straddle
+byte boundaries, which the bitstream formulation handles uniformly.  A row
+of N codes therefore packs to exactly ``N*b/8`` bytes (N must be a multiple
+of 8/gcd(b,8); every supported quantization block size is a multiple of 8).
+
+``pack_codes`` / ``unpack_codes`` are pure jnp — broadcast shifts, masks and
+static reshapes only (no gathers, no host round trips) — so the *same
+functions* run inside the Pallas fused-update kernel (unpack → dequant →
+update → requant → pack in VMEM) and on the XLA reference path.  Packed
+codes parity between ``impl="interpret"`` and ``impl="jnp"`` therefore
+holds by construction, the same contract the 8-bit kernels already follow
+(DESIGN.md §3, §9).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+SUPPORTED_BITS = (4, 5, 6, 8)
+
+
+def packed_width(n_codes: int, bits: int) -> int:
+    """Bytes per row of ``n_codes`` b-bit codes (exact, no slack)."""
+    assert bits in SUPPORTED_BITS, bits
+    assert (n_codes * bits) % 8 == 0, (n_codes, bits)
+    return (n_codes * bits) // 8
+
+
+def pack_codes(codes: jax.Array, bits: int) -> jax.Array:
+    """(..., N) integer codes in [0, 2^bits) -> (..., N*bits/8) uint8."""
+    if bits == 8:
+        return codes.astype(jnp.uint8)
+    *lead, n = codes.shape
+    w = packed_width(n, bits)
+    c = codes.astype(jnp.int32)
+    # codes -> per-code bit planes, MSB first: (..., N, bits)
+    tsel = jax.lax.broadcasted_iota(jnp.int32, (*lead, n, bits), len(lead) + 1)
+    stream = (c[..., None] >> (bits - 1 - tsel)) & 1
+    # bitstream -> bytes, MSB first: (..., W, 8) -> (..., W)
+    stream = stream.reshape(*lead, w, 8)
+    ksel = jax.lax.broadcasted_iota(jnp.int32, (*lead, w, 8), len(lead) + 1)
+    return jnp.sum(stream << (7 - ksel), axis=-1).astype(jnp.uint8)
+
+
+def unpack_codes(packed: jax.Array, bits: int) -> jax.Array:
+    """(..., W) uint8 words -> (..., W*8/bits) int32 codes in [0, 2^bits)."""
+    if bits == 8:
+        return packed.astype(jnp.int32)
+    assert bits in SUPPORTED_BITS, bits
+    *lead, w = packed.shape
+    n = (w * 8) // bits
+    b = packed.astype(jnp.int32)
+    ksel = jax.lax.broadcasted_iota(jnp.int32, (*lead, w, 8), len(lead) + 1)
+    stream = ((b[..., None] >> (7 - ksel)) & 1).reshape(*lead, n, bits)
+    tsel = jax.lax.broadcasted_iota(jnp.int32, (*lead, n, bits), len(lead) + 1)
+    return jnp.sum(stream << (bits - 1 - tsel), axis=-1)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PackedCodes:
+    """Bit-packed codes for one state tensor in the flat block domain.
+
+    packed : (n_blocks, n_codes*bits/8) uint8 — the only array child, so
+             sharding/checkpoint trees see exactly one leaf per container
+             and shard its *block-count* axis (dim 0), never the byte axis.
+    bits   : static bitwidth of each code (4/5/6; 8-bit states stay plain
+             uint8 arrays and never enter this container).
+    n_codes: static logical codes per row (= the quantization block size).
+    """
+
+    packed: jax.Array
+    bits: int
+    n_codes: int
+
+    def tree_flatten(self):
+        return (self.packed,), (self.bits, self.n_codes)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], *aux)
+
+    @classmethod
+    def from_codes(cls, codes: jax.Array, bits: int) -> "PackedCodes":
+        return cls(pack_codes(codes, bits), bits, int(codes.shape[-1]))
+
+    def unpack(self) -> jax.Array:
+        """-> (n_blocks, n_codes) int32 codes."""
+        return unpack_codes(self.packed, self.bits)
+
+    @property
+    def shape(self) -> tuple:
+        """Logical (unpacked) code-array shape."""
+        return (*self.packed.shape[:-1], self.n_codes)
+
+    def nbytes(self) -> int:
+        return int(self.packed.size)

@@ -33,7 +33,11 @@ def make_optimizer(name: str,
 
     ``override_32bit``: path predicate forcing 32-bit state for matching
     leaves (defaults to the paper's stable-embedding rule when the name ends
-    in '8'; pass ``lambda p: False`` to disable)."""
+    in '8'; pass ``lambda p: False`` to disable).
+
+    Sub-byte state storage (DESIGN.md §9) is a kwarg on the quantized
+    names: ``make_optimizer("adam8", state_bits=(4, 8))`` stores a packed
+    4-bit first moment and an 8-bit second moment."""
     if name == "adafactor32":
         import dataclasses
         fields = {f.name for f in dataclasses.fields(AdafactorConfig)}

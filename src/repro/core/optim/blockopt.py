@@ -23,6 +23,12 @@ extra fraction bit):
   momentum/lars   : m -> signed dynamic
   adagrad         : accumulator -> unsigned dynamic (stored in the m slot)
 
+Storage bitwidth is per state slot (``cfg.state_bits``; DESIGN.md §9): each
+slot gets a :class:`~repro.core.lowbit.CodeFormat` whose 2^bits-entry
+codebook and (for sub-byte widths) bit-packed ``PackedCodes`` container
+flow through the same fused kernels — e.g. ``state_bits=(4, 8)`` stores a
+4-bit first moment next to an 8-bit second moment (Li et al. 2023).
+
 Optional percentile clipping (``cfg.percentile_clipping < 100``) maintains a
 per-optimizer history of squared global gradient norms in
 ``OptState.gnorm_vec`` (bitsandbytes-style; DESIGN.md §7) and scales
@@ -38,7 +44,7 @@ from typing import Any, Callable, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import qmap as qmap_lib
+from repro.core.lowbit import CodeFormat, PackedCodes
 from repro.core.optim import base
 from repro.core.optim.base import (Full32Leaf, OptimConfig, Quant8Leaf,
                                    blocks_to_param, flatten_to_blocks,
@@ -70,16 +76,21 @@ class Block8bitOptimizer:
         self.cfg = config
         self.override_32bit = override_32bit or (lambda path: False)
         signed1 = _state1_signed(config.algo)
-        self._qmap1 = jnp.asarray(
-            qmap_lib.get_qmap(config.qmap_m if signed1 else config.qmap_r, signed1))
-        self._qmap2 = jnp.asarray(qmap_lib.get_qmap(config.qmap_r, False))
+        bits1, bits2 = config.state_bits_pair
+        self._fmt1 = CodeFormat(
+            bits=bits1, signed=signed1,
+            qmap_name=config.qmap_m if signed1 else config.qmap_r)
+        self._fmt2 = CodeFormat(bits=bits2, signed=False,
+                                qmap_name=config.qmap_r)
+        self._qmap1 = jnp.asarray(self._fmt1.codebook())
+        self._qmap2 = jnp.asarray(self._fmt2.codebook())
         self._impl = config.impl or kops.default_impl()
 
     # ------------------------------------------------------------------ init
-    def _leaf_is_8bit(self, path: str, param: jax.Array) -> bool:
+    def _leaf_is_quantized(self, path: str, param: jax.Array) -> bool:
         if self.cfg.bits == 32:
             return False
-        if param.size < self.cfg.min_8bit_size:
+        if param.size < self.cfg.min_quant_size:
             return False
         return not self.override_32bit(path)
 
@@ -88,24 +99,22 @@ class Block8bitOptimizer:
 
         def init_leaf(path, p):
             path = path_str(path)
-            if self._leaf_is_8bit(path, p):
+            if self._leaf_is_quantized(path, p):
                 # master stays in PARAM SHAPE (sharded like the param) so the
                 # fwd/bwd sees per-layer gathers inside the scan; only the
-                # 8-bit statistics live in the flat block domain.  (The
+                # quantized statistics live in the flat block domain.  (The
                 # flat-master variant all-gathered the whole tensor per step:
                 # EXPERIMENTS.md §Perf iteration A2.)
                 master = p.astype(jnp.dtype(cfg.master_dtype))
                 nb = base.n_blocks_for(p.shape, cfg.block_size,
                                        cfg.shard_multiple)
                 bs = cfg.block_size
-                zc1 = jnp.asarray(jnp.argmin(jnp.abs(self._qmap1)), jnp.uint8)
-                zc2 = jnp.asarray(jnp.argmin(jnp.abs(self._qmap2)), jnp.uint8)
                 second = cfg.has_second_moment
                 return Quant8Leaf(
                     master=master,
-                    codes_m=jnp.full((nb, bs), zc1, jnp.uint8),
+                    codes_m=self._fmt1.init_codes(nb, bs),
                     absmax_m=jnp.zeros((nb,), jnp.float32),
-                    codes_r=jnp.full((nb, bs), zc2, jnp.uint8) if second else None,
+                    codes_r=self._fmt2.init_codes(nb, bs) if second else None,
                     absmax_r=jnp.zeros((nb,), jnp.float32) if second else None,
                     shape=tuple(p.shape), n=int(p.size))
             master = p.astype(jnp.float32)
@@ -257,17 +266,28 @@ class Block8bitOptimizer:
 
     # ------------------------------------------------------------- utilities
     def state_bytes(self, state: OptState) -> dict:
-        """Measured memory of optimizer statistics vs 32-bit equivalent."""
-        stats = master = 0
+        """Measured memory of optimizer statistics vs 32-bit equivalent.
+
+        Only static shapes are read, so this also works on abstract/traced
+        states (the train loop surfaces ``state_bytes_per_param`` as a
+        metric from inside the jitted step)."""
+
+        def codes_bytes(c):
+            return c.nbytes() if isinstance(c, PackedCodes) else c.size
+
+        stats = master = n_params = 0
         for leaf in jax.tree_util.tree_leaves(
                 state.leaves,
                 is_leaf=lambda x: isinstance(x, (Quant8Leaf, Full32Leaf))):
             if isinstance(leaf, Quant8Leaf):
-                stats += leaf.codes_m.size + leaf.absmax_m.size * 4
+                stats += codes_bytes(leaf.codes_m) + leaf.absmax_m.size * 4
                 if leaf.codes_r is not None:
-                    stats += leaf.codes_r.size + leaf.absmax_r.size * 4
+                    stats += codes_bytes(leaf.codes_r) + leaf.absmax_r.size * 4
                 master += leaf.master.size * leaf.master.dtype.itemsize
+                n_params += leaf.n
             else:
                 stats += leaf.m.size * 4 + (leaf.r.size * 4 if leaf.r is not None else 0)
                 master += leaf.master.size * 4
-        return {"state_bytes": int(stats), "master_bytes": int(master)}
+                n_params += leaf.master.size
+        return {"state_bytes": int(stats), "master_bytes": int(master),
+                "n_params": int(n_params)}

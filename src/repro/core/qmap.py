@@ -1,10 +1,10 @@
-"""Quantization codebooks ("qmaps") for 8-bit optimizer states.
+"""Quantization codebooks ("qmaps") for k-bit optimizer states.
 
-All maps are 256-entry sorted float32 arrays over [-1, 1] (signed) or [0, 1]
-(unsigned).  The dynamic (tree) maps follow the construction of the released
-bitsandbytes implementation (`create_dynamic_map`), which is the reference for
-the paper "8-bit Optimizers via Block-wise Quantization" (Dettmers et al.,
-ICLR 2022):
+All maps are 2^bits-entry sorted float32 arrays over [-1, 1] (signed) or
+[0, 1] (unsigned); the paper's 8-bit maps are the ``bits=8`` point.  The
+dynamic (tree) maps follow the construction of the released bitsandbytes
+implementation (`create_dynamic_map`), which is the reference for the paper
+"8-bit Optimizers via Block-wise Quantization" (Dettmers et al., ICLR 2022):
 
   * 1 sign bit (signed maps only),
   * the number of leading zero bits selects a decimal exponent 10^(i - E + 1)
@@ -13,6 +13,12 @@ ICLR 2022):
 
 The unsigned "dynamic quantization" variant (paper §2.2) re-purposes the sign
 bit as one extra fraction bit for the strictly-positive second Adam state.
+
+Sub-byte bitwidths (4/5/6) use the same tree construction with fewer total
+bits — the format Li et al. 2023 ("Memory Efficient Optimizers with 4-bit
+States") show is viable for the first Adam moment.  The k-bit code-format
+subsystem (`repro.core.lowbit`, DESIGN.md §9) owns bit-packing; this module
+only generates level values.
 """
 from __future__ import annotations
 
@@ -20,18 +26,19 @@ import functools
 
 import numpy as np
 
-# Number of dynamic-exponent levels used by the reference implementation.
-_MAX_EXP_BITS = 7
-_TOTAL_BITS = 8
+# Bit layout used by the reference implementation: for b total bits, b - 1
+# dynamic-exponent levels (7 for the 8-bit maps).
 
 
-def _dynamic_levels(signed: bool, inverse: bool = False) -> list[float]:
+def _dynamic_levels(signed: bool, inverse: bool = False,
+                    bits: int = 8) -> list[float]:
     """Positive values of the dynamic (tree) map, before sign mirroring."""
     data: list[float] = []
-    non_sign_bits = _TOTAL_BITS - 1
-    for i in range(_MAX_EXP_BITS):
+    max_exp_bits = bits - 1
+    non_sign_bits = bits - 1
+    for i in range(max_exp_bits):
         # Fraction slots double per level; unsigned maps get one extra bit.
-        n_frac = 2 ** (i + non_sign_bits - _MAX_EXP_BITS) * (1 if signed else 2)
+        n_frac = 2 ** (i + non_sign_bits - max_exp_bits) * (1 if signed else 2)
         if n_frac < 1:
             continue
         boundaries = np.linspace(0.1, 1.0, n_frac + 1)
@@ -41,57 +48,54 @@ def _dynamic_levels(signed: bool, inverse: bool = False) -> list[float]:
             # order so the *small*-magnitude end gets the most fraction bits.
             exponent = 10.0 ** (-i)
         else:
-            exponent = 10.0 ** (-(_MAX_EXP_BITS - 1) + i)
+            exponent = 10.0 ** (-(max_exp_bits - 1) + i)
         data += (exponent * means).tolist()
     return data
 
 
-def _finalize(values: list[float], signed: bool) -> np.ndarray:
+def _finalize(values: list[float], bits: int) -> np.ndarray:
     values = list(values)
     values.append(0.0)
     values.append(1.0)
-    if signed:
-        target = 256
-    else:
-        target = 256
-    assert len(values) <= target, len(values)
+    target = 2 ** bits
+    assert len(values) <= target, (len(values), bits)
     # Pad (never needed for the standard configs, kept for safety/parity with
     # the reference implementation which pads with zeros).
     values += [0.0] * (target - len(values))
     out = np.sort(np.asarray(values, dtype=np.float32))
-    assert out.shape == (256,)
+    assert out.shape == (target,)
     return out
 
 
 @functools.lru_cache(maxsize=None)
-def dynamic_map(signed: bool = True) -> np.ndarray:
+def dynamic_map(signed: bool = True, bits: int = 8) -> np.ndarray:
     """Dynamic (tree) quantization map. Signed: Adam m / momentum. Unsigned:
     Adam r (second moment), with the sign bit re-used as a fraction bit."""
-    pos = _dynamic_levels(signed=signed)
+    pos = _dynamic_levels(signed=signed, bits=bits)
     if signed:
         vals = pos + [-v for v in pos]
     else:
         vals = pos
-    return _finalize(vals, signed)
+    return _finalize(vals, bits)
 
 
 @functools.lru_cache(maxsize=None)
-def inverse_dynamic_map(signed: bool = True) -> np.ndarray:
+def inverse_dynamic_map(signed: bool = True, bits: int = 8) -> np.ndarray:
     """Inverse dynamic quantization (paper Appendix F.1)."""
-    pos = _dynamic_levels(signed=signed, inverse=True)
+    pos = _dynamic_levels(signed=signed, inverse=True, bits=bits)
     if signed:
         vals = pos + [-v for v in pos]
     else:
         vals = pos
-    return _finalize(vals, signed)
+    return _finalize(vals, bits)
 
 
 @functools.lru_cache(maxsize=None)
-def linear_map(signed: bool = True) -> np.ndarray:
+def linear_map(signed: bool = True, bits: int = 8) -> np.ndarray:
     """Linear quantization baseline (ablation rows of paper Table 3)."""
     if signed:
-        return np.linspace(-1.0, 1.0, 256).astype(np.float32)
-    return np.linspace(0.0, 1.0, 256).astype(np.float32)
+        return np.linspace(-1.0, 1.0, 2 ** bits).astype(np.float32)
+    return np.linspace(0.0, 1.0, 2 ** bits).astype(np.float32)
 
 
 def _norm_ppf(p: np.ndarray) -> np.ndarray:
@@ -131,9 +135,9 @@ def _norm_ppf(p: np.ndarray) -> np.ndarray:
 
 
 @functools.lru_cache(maxsize=None)
-def normal_quantile_map(signed: bool = True) -> np.ndarray:
+def normal_quantile_map(signed: bool = True, bits: int = 8) -> np.ndarray:
     """Quantile map per paper Eq. 5 with X = N(0,1) (or |N(0,1)| unsigned)."""
-    k = 256
+    k = 2 ** bits
     if signed:
         # Eq. 5: midpoints of 2^k + 1 equally spaced quantiles.
         qs = _norm_ppf(np.linspace(1.0 / (k + 1), k / (k + 1), k + 1))
@@ -155,10 +159,10 @@ QMAPS = {
 }
 
 
-def get_qmap(name: str, signed: bool) -> np.ndarray:
-    """Return the 256-entry sorted codebook for `name`."""
+def get_qmap(name: str, signed: bool, bits: int = 8) -> np.ndarray:
+    """Return the 2^bits-entry sorted codebook for `name` (default 256)."""
     try:
-        return QMAPS[name](signed=signed)
+        return QMAPS[name](signed=signed, bits=bits)
     except KeyError:
         raise ValueError(f"unknown qmap '{name}'; have {sorted(QMAPS)}") from None
 

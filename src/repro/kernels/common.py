@@ -33,27 +33,47 @@ STATE2_SEED_SALT = 0x9E3779B9
 
 
 def padded_bounds(codebook) -> jax.Array:
-    """255 midpoint boundaries padded with +inf to 256 lanes, shape (1, 256)."""
+    """Midpoint decision boundaries padded with +inf to 256 lanes, (1, 256).
+
+    For an L-entry codebook (L = 2^bits ≤ 256) the L-1 real boundaries are
+    followed by +inf padding, so ``encode`` can only emit codes < L — the
+    k-bit maps cap their code range for free."""
     cb = jnp.asarray(codebook, dtype=jnp.float32)
     b = (cb[1:] + cb[:-1]) * 0.5
-    b = jnp.concatenate([b, jnp.full((1,), jnp.inf, jnp.float32)])
+    pad = CODEBOOK_SIZE - b.shape[0]
+    b = jnp.concatenate([b, jnp.full((pad,), jnp.inf, jnp.float32)])
     return b.reshape(1, CODEBOOK_SIZE)
 
 
 def padded_qmap(codebook) -> jax.Array:
-    """Codebook as (1, 256) f32."""
-    return jnp.asarray(codebook, dtype=jnp.float32).reshape(1, CODEBOOK_SIZE)
+    """Codebook zero-padded to 256 lanes, (1, 256) f32.  Padding entries are
+    unreachable: codes from ``encode``/``block_requantize`` stay below the
+    real level count."""
+    cb = jnp.asarray(codebook, dtype=jnp.float32)
+    pad = CODEBOOK_SIZE - cb.shape[0]
+    if pad:
+        cb = jnp.concatenate([cb, jnp.zeros((pad,), jnp.float32)])
+    return cb.reshape(1, CODEBOOK_SIZE)
 
 
-def encode(x_norm: jax.Array, bounds_row: jax.Array) -> jax.Array:
+def _n_chunks(n_levels: int) -> int:
+    """Codebook chunks that can contain live lanes for an n_levels map."""
+    return -(-min(n_levels, CODEBOOK_SIZE) // CHUNK)
+
+
+def encode(x_norm: jax.Array, bounds_row: jax.Array,
+           n_levels: int = CODEBOOK_SIZE) -> jax.Array:
     """Nearest-code indices for normalized values in [-1, 1].
 
-    x_norm: (..., N) f32; bounds_row: (1, 256) f32 (last = +inf).
-    Returns int32 codes. ``sum_j [x >= b_j]`` == searchsorted(side='right').
+    x_norm: (..., N) f32; bounds_row: (1, 256) f32 (+inf beyond the real
+    boundaries).  Returns int32 codes. ``sum_j [x >= b_j]`` ==
+    searchsorted(side='right').  ``n_levels`` (2^bits for k-bit maps)
+    bounds the chunk sweep: lanes past it are +inf and contribute nothing,
+    so sub-byte codebooks skip ~3/4 of the compare work.
     """
     flat = x_norm.reshape(-1)
     acc = jnp.zeros(flat.shape, dtype=jnp.int32)
-    for c in range(0, CODEBOOK_SIZE, CHUNK):
+    for c in range(0, _n_chunks(n_levels) * CHUNK, CHUNK):
         chunk = jax.lax.dynamic_slice(bounds_row, (0, c), (1, CHUNK))  # (1, CHUNK)
         acc = acc + jnp.sum(
             (flat[:, None] >= chunk).astype(jnp.int32), axis=-1
@@ -61,14 +81,16 @@ def encode(x_norm: jax.Array, bounds_row: jax.Array) -> jax.Array:
     return acc.reshape(x_norm.shape)
 
 
-def decode(codes: jax.Array, qmap_row: jax.Array) -> jax.Array:
+def decode(codes: jax.Array, qmap_row: jax.Array,
+           n_levels: int = CODEBOOK_SIZE) -> jax.Array:
     """Codebook lookup via chunked one-hot contraction (MXU-friendly).
 
-    codes: (..., N) int32 in [0, 255]; qmap_row: (1, 256) f32.
+    codes: (..., N) int32 in [0, n_levels); qmap_row: (1, 256) f32.
+    ``n_levels`` bounds the chunk sweep (codes never reach padded lanes).
     """
     flat = codes.reshape(-1)
     acc = jnp.zeros(flat.shape, dtype=jnp.float32)
-    for c in range(0, CODEBOOK_SIZE, CHUNK):
+    for c in range(0, _n_chunks(n_levels) * CHUNK, CHUNK):
         chunk = jax.lax.dynamic_slice(qmap_row, (0, c), (1, CHUNK))[0]  # (CHUNK,)
         onehot = (flat[:, None] == (c + jax.lax.iota(jnp.int32, CHUNK))[None, :])
         acc = acc + jax.lax.dot(
@@ -122,7 +144,8 @@ def stochastic_codes(x_norm: jax.Array, codes: jax.Array, q_near: jax.Array,
 
 def block_requantize(x: jax.Array, bounds_row: jax.Array,
                      qmap_row: jax.Array | None = None,
-                     random_u: jax.Array | None = None
+                     random_u: jax.Array | None = None,
+                     max_code: int = CODEBOOK_SIZE - 1
                      ) -> tuple[jax.Array, jax.Array]:
     """Per-row absmax normalize + encode. x: (R, B) f32 ->
     (codes int32 (R, B), absmax f32 (R, 1)).
@@ -130,15 +153,18 @@ def block_requantize(x: jax.Array, bounds_row: jax.Array,
     With ``random_u`` (uniforms in [0, 1), same shape as x) the encode is
     stochastic: round to the nearer/farther neighbouring code with
     probability proportional to proximity (paper App H). ``qmap_row`` is
-    required in that case for the neighbour lookups."""
+    required in that case for the neighbour lookups.  ``max_code`` is the
+    highest valid code (2^bits - 1 for k-bit codebooks); deterministic
+    encode respects it by construction via the +inf boundary padding."""
+    n_levels = max_code + 1
     absmax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
     scale = jnp.where(absmax > 0, absmax, 1.0)
     x_norm = x / scale
-    codes = encode(x_norm, bounds_row)
+    codes = encode(x_norm, bounds_row, n_levels)
     if random_u is not None:
-        q_near = decode(codes, qmap_row)
+        q_near = decode(codes, qmap_row, n_levels)
         direction = jnp.where(x_norm > q_near, 1, -1)
-        other = jnp.clip(codes + direction, 0, CODEBOOK_SIZE - 1)
-        q_other = decode(other, qmap_row)
+        other = jnp.clip(codes + direction, 0, max_code)
+        q_other = decode(other, qmap_row, n_levels)
         codes = stochastic_codes(x_norm, codes, q_near, q_other, other, random_u)
     return codes, absmax

@@ -1,12 +1,20 @@
-"""Pallas TPU kernel family: fused 8-bit optimizer update, all algorithms.
+"""Pallas TPU kernel family: fused k-bit optimizer update, all algorithms.
 
 One generic kernel builder, parameterized by a static :class:`AlgoSpec`
 (update math, one-vs-two states, signedness, per-tensor norm needs), covers
 adam / adamw / momentum / lamb / lars / adagrad.  Each grid step streams one
-tile of the flat block domain HBM -> VMEM, dequantizes the 8-bit state,
+tile of the flat block domain HBM -> VMEM, dequantizes the quantized state,
 runs the 32-bit update math in registers, and requantizes with per-block
 absmax — the paper's §2 procedure in a single HBM pass per state tensor
 (DESIGN.md §3).
+
+State bitwidth is a per-slot static parameter (``bits_m`` / ``bits_r`` ∈
+{4, 5, 6, 8}; DESIGN.md §9): sub-byte codes arrive bit-packed as
+``(n_blocks, B*bits/8)`` uint8 words and are unpacked *inside* the kernel
+(``repro.core.lowbit.unpack_codes`` — broadcast shifts, no gathers), so the
+fused path streams only packed bytes through HBM and never materializes an
+unpacked code tensor.  Requantized codes are re-packed in VMEM before the
+store.  8-bit slots skip both steps and keep the legacy layout bit-exactly.
 
 Extras fused into the same pass:
 
@@ -39,6 +47,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.lowbit import pack_codes, packed_width, unpack_codes
 from repro.kernels import common
 
 # scalar vector layout:
@@ -180,8 +189,9 @@ def _scalars_dict(scal_row):
 
 
 # ------------------------------------------------------------ kernel builder
-def _make_update_kernel(spec: AlgoSpec, rows: int, bsz: int, stochastic: bool):
-    """Build the main fused-update kernel for one (algo, tile, mode)."""
+def _make_update_kernel(spec: AlgoSpec, rows: int, bsz: int, stochastic: bool,
+                        bits_m: int, bits_r: int):
+    """Build the main fused-update kernel for one (algo, tile, mode, bits)."""
     two = spec.n_states == 2
 
     def kernel(*refs):
@@ -199,9 +209,11 @@ def _make_update_kernel(spec: AlgoSpec, rows: int, bsz: int, stochastic: bool):
         g = g_ref[...].astype(jnp.float32) * s["gnorm_scale"]
         p = p_ref[...].astype(jnp.float32)
 
-        # ---- dequantize (one-hot contraction on MXU) ----
-        m = common.decode(c1_ref[...].astype(jnp.int32), qm1_ref[...]) * a1_ref[...]
-        r = (common.decode(c2_ref[...].astype(jnp.int32), qm2_ref[...]) * a2_ref[...]
+        # ---- unpack sub-byte codes + dequantize (one-hot on MXU) ----
+        m = common.decode(unpack_codes(c1_ref[...], bits_m),
+                          qm1_ref[...], 1 << bits_m) * a1_ref[...]
+        r = (common.decode(unpack_codes(c2_ref[...], bits_r),
+                           qm2_ref[...], 1 << bits_r) * a2_ref[...]
              if two else None)
 
         # ---- 32-bit update math in registers ----
@@ -217,19 +229,22 @@ def _make_update_kernel(spec: AlgoSpec, rows: int, bsz: int, stochastic: bool):
             if two:
                 u2 = common.hash_uniform(idx, seed + jnp.uint32(common.STATE2_SEED_SALT))
         c1n, a1n = common.block_requantize(m2, b1_ref[...], qm1_ref[...],
-                                           random_u=u1)
-        c1_out[...] = c1n.astype(jnp.uint8)
+                                           random_u=u1,
+                                           max_code=(1 << bits_m) - 1)
+        c1_out[...] = pack_codes(c1n, bits_m)
         a1_out[...] = a1n
         if two:
             c2n, a2n = common.block_requantize(r2, b2_ref[...], qm2_ref[...],
-                                               random_u=u2)
-            c2_out[...] = c2n.astype(jnp.uint8)
+                                               random_u=u2,
+                                               max_code=(1 << bits_r) - 1)
+            c2_out[...] = pack_codes(c2n, bits_r)
             a2_out[...] = a2n
 
     return kernel
 
 
-def _make_norm_kernel(spec: AlgoSpec, rows: int, bsz: int):
+def _make_norm_kernel(spec: AlgoSpec, rows: int, bsz: int,
+                      bits_m: int, bits_r: int):
     """Norm prologue: per-grid-row partial squared norms, shape (1, 8) row
     [||p||^2, ||g||^2, ||u||^2, 0...].  lars only needs p and g; lamb
     re-derives the pre-trust update u from the dequantized states."""
@@ -253,8 +268,10 @@ def _make_norm_kernel(spec: AlgoSpec, rows: int, bsz: int):
         gn2 = jnp.sum(g * g)
         un2 = jnp.zeros((), jnp.float32)
         if spec.norm_kind == "lamb":
-            m = common.decode(c1_ref[...].astype(jnp.int32), qm1_ref[...]) * a1_ref[...]
-            r = common.decode(c2_ref[...].astype(jnp.int32), qm2_ref[...]) * a2_ref[...]
+            m = common.decode(unpack_codes(c1_ref[...], bits_m),
+                              qm1_ref[...], 1 << bits_m) * a1_ref[...]
+            r = common.decode(unpack_codes(c2_ref[...], bits_r),
+                              qm2_ref[...], 1 << bits_r) * a2_ref[...]
             _, _, u = adam_base_update(g, p, m, r, s)
             un2 = jnp.sum(u * u)
         zero = jnp.zeros((), jnp.float32)
@@ -266,16 +283,16 @@ def _make_norm_kernel(spec: AlgoSpec, rows: int, bsz: int):
 
 # ------------------------------------------------------------- public entry
 @functools.partial(jax.jit, static_argnames=("algo", "rows", "stochastic",
-                                             "interpret"))
+                                             "interpret", "bits_m", "bits_r"))
 def fused_update_pallas(
     p: jax.Array,                  # (n_blocks, B) f32 master params
     g: jax.Array,                  # (n_blocks, B) f32/bf16 grads
-    codes_m: jax.Array,            # (n_blocks, B) uint8
+    codes_m: jax.Array,            # (n_blocks, B*bits_m/8) uint8 (packed)
     absmax_m: jax.Array,           # (n_blocks,)  f32
     codes_r: Optional[jax.Array],  # 2-state algos only
     absmax_r: Optional[jax.Array],
-    qmap_m: jax.Array,             # (256,) state-1 codebook
-    qmap_r: Optional[jax.Array],   # (256,) state-2 codebook
+    qmap_m: jax.Array,             # (2^bits_m,) state-1 codebook
+    qmap_r: Optional[jax.Array],   # (2^bits_r,) state-2 codebook
     scalars: jax.Array,            # (N_SCALARS,) f32 (tensor_scale slot unused)
     seed: jax.Array,               # () int32 stochastic-rounding seed
     *,
@@ -283,21 +300,32 @@ def fused_update_pallas(
     rows: int = common.DEFAULT_ROWS,
     stochastic: bool = False,
     interpret: bool = True,
+    bits_m: int = 8,
+    bits_r: int = 8,
 ) -> FusedUpdateResult:
-    """One fused 8-bit update for ``algo`` in the flat block domain.
+    """One fused k-bit update for ``algo`` in the flat block domain.
 
     ``n_blocks`` must be a multiple of ``rows`` (ops.fused_update pads).
     ``scalars`` layout: [lr, beta1, beta2, eps, weight_decay, step,
     gnorm_scale, trust_coeff]; the last slot is rewritten with the
     tensor_scale finalized from the norm prologue (lamb/lars) or 1.0.
+    Sub-byte state slots (``bits_m``/``bits_r`` < 8) stream bit-packed
+    uint8 words and unpack/re-pack inside the kernel (DESIGN.md §9).
     """
     spec = ALGO_SPECS[algo]
     two = spec.n_states == 2
     n_blocks, bsz = p.shape
     assert n_blocks % rows == 0, (n_blocks, rows)
+    w1 = packed_width(bsz, bits_m)
+    assert codes_m.shape == (n_blocks, w1), (codes_m.shape, n_blocks, w1)
+    if two:
+        w2 = packed_width(bsz, bits_r)
+        assert codes_r.shape == (n_blocks, w2), (codes_r.shape, n_blocks, w2)
     grid = (n_blocks // rows,)
 
     row_spec = pl.BlockSpec((rows, bsz), lambda i: (i, 0))
+    code1_spec = pl.BlockSpec((rows, w1), lambda i: (i, 0))
+    code2_spec = pl.BlockSpec((rows, w2), lambda i: (i, 0)) if two else None
     one_spec = pl.BlockSpec((rows, 1), lambda i: (i, 0))
     const_spec = pl.BlockSpec((1, common.CODEBOOK_SIZE), lambda i: (0, 0))
     scal_spec = pl.BlockSpec((1, N_SCALARS), lambda i: (0, 0))
@@ -308,7 +336,7 @@ def fused_update_pallas(
 
     scalars = scalars.astype(jnp.float32)
     if spec.needs_norms:
-        norm_kernel = _make_norm_kernel(spec, rows, bsz)
+        norm_kernel = _make_norm_kernel(spec, rows, bsz, bits_m, bits_r)
         in_specs = [scal_spec]
         args = [scalars.reshape(1, N_SCALARS)]
         if spec.norm_kind == "lamb":
@@ -317,7 +345,7 @@ def fused_update_pallas(
         in_specs += [row_spec, row_spec]
         args += [p, g]
         if spec.norm_kind == "lamb":
-            in_specs += [row_spec, one_spec, row_spec, one_spec]
+            in_specs += [code1_spec, one_spec, code2_spec, one_spec]
             args += [codes_m, absmax_m[:, None], codes_r, absmax_r[:, None]]
         partials = pl.pallas_call(
             norm_kernel,
@@ -335,7 +363,7 @@ def fused_update_pallas(
     else:
         scalars = scalars.at[7].set(1.0)
 
-    kernel = _make_update_kernel(spec, rows, bsz, stochastic)
+    kernel = _make_update_kernel(spec, rows, bsz, stochastic, bits_m, bits_r)
     in_specs = [scal_spec]
     args = [scalars.reshape(1, N_SCALARS)]
     if stochastic:
@@ -346,22 +374,22 @@ def fused_update_pallas(
     if two:
         in_specs += [const_spec, const_spec]
         args += [qm2, b2]
-    in_specs += [row_spec, row_spec, row_spec, one_spec]
+    in_specs += [row_spec, row_spec, code1_spec, one_spec]
     args += [p, g, codes_m, absmax_m[:, None]]
     if two:
-        in_specs += [row_spec, one_spec]
+        in_specs += [code2_spec, one_spec]
         args += [codes_r, absmax_r[:, None]]
 
-    out_specs = [row_spec, row_spec, one_spec]
+    out_specs = [row_spec, code1_spec, one_spec]
     out_shape = [
         jax.ShapeDtypeStruct((n_blocks, bsz), jnp.float32),
-        jax.ShapeDtypeStruct((n_blocks, bsz), jnp.uint8),
+        jax.ShapeDtypeStruct((n_blocks, w1), jnp.uint8),
         jax.ShapeDtypeStruct((n_blocks, 1), jnp.float32),
     ]
     if two:
-        out_specs += [row_spec, one_spec]
+        out_specs += [code2_spec, one_spec]
         out_shape += [
-            jax.ShapeDtypeStruct((n_blocks, bsz), jnp.uint8),
+            jax.ShapeDtypeStruct((n_blocks, w2), jnp.uint8),
             jax.ShapeDtypeStruct((n_blocks, 1), jnp.float32),
         ]
 

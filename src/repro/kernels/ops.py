@@ -16,8 +16,15 @@ single ``optimizer_update_8bit_blockwise`` routing every optimizer through
 one kernel family.  All six algorithms (adam/adamw/momentum/lamb/lars/
 adagrad) and all ablation modes (stochastic rounding, tensor-wise
 quantization) go through it; the old per-algorithm wrappers and the
-multi-pass jnp fallback are gone.  Register new backends (e.g. 4-bit
-states) with :func:`register`.
+multi-pass jnp fallback are gone.  Register new backends with
+:func:`register`.
+
+Sub-byte state bitwidths (4/5/6-bit, DESIGN.md §9) ride through the same
+entry point: callers pass :class:`~repro.core.lowbit.PackedCodes`
+containers instead of plain uint8 code arrays.  ``fused_update`` unwraps
+them, threads the static per-slot bitwidths to the backend (the Pallas
+kernels unpack/re-pack in VMEM; the jnp oracle unpacks at the XLA level),
+and re-wraps the results, so the optimizer engine is bitwidth-agnostic.
 """
 from __future__ import annotations
 
@@ -26,6 +33,7 @@ from typing import Callable, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core.lowbit import PackedCodes, pack_codes, unpack_codes
 from repro.kernels import common, ref
 from repro.kernels import fused_update as _fu
 from repro.kernels.blockwise_dequant import dequantize_blockwise as _dequant_pallas
@@ -96,7 +104,7 @@ def registered(algo: str | None = None) -> list[tuple[str, str]]:
 def _pallas_entry(algo: str, interpret: bool) -> Callable:
     def run(p, g, cm, am, cr, ar, qmap_m, qmap_r, *,
             lr, beta1, beta2, eps, weight_decay, step, trust_coeff,
-            gnorm_scale, stochastic, seed, rows):
+            gnorm_scale, stochastic, seed, rows, bits_m=8, bits_r=8):
         scalars = jnp.stack([
             jnp.asarray(lr, jnp.float32), jnp.asarray(beta1, jnp.float32),
             jnp.asarray(beta2, jnp.float32), jnp.asarray(eps, jnp.float32),
@@ -113,7 +121,8 @@ def _pallas_entry(algo: str, interpret: bool) -> Callable:
         res = _fu.fused_update_pallas(
             p, g, cm, am, cr, ar, qmap_m, qmap_r if two else None, scalars,
             jnp.asarray(seed, jnp.int32), algo=algo, rows=rows,
-            stochastic=stochastic, interpret=interpret)
+            stochastic=stochastic, interpret=interpret,
+            bits_m=bits_m, bits_r=bits_r)
         return _fu.FusedUpdateResult(
             res.p[:nb], res.codes_m[:nb], res.absmax_m[:nb],
             res.codes_r[:nb] if two else None,
@@ -123,10 +132,19 @@ def _pallas_entry(algo: str, interpret: bool) -> Callable:
 
 def _jnp_entry(algo: str) -> Callable:
     def run(p, g, cm, am, cr, ar, qmap_m, qmap_r, *,
-            blockwise=True, rows=DEFAULT_ROWS, **hyper):
+            blockwise=True, rows=DEFAULT_ROWS, bits_m=8, bits_r=8, **hyper):
         del rows  # no tiling on the XLA path
-        return ref.fused_update_ref(p, g, cm, am, cr, ar, qmap_m, qmap_r,
-                                    algo=algo, blockwise=blockwise, **hyper)
+        # Sub-byte codes arrive packed; the oracle works on unpacked codes
+        # and re-packs at the boundary (XLA fuses the shifts either way).
+        cm = unpack_codes(cm, bits_m).astype(jnp.uint8)
+        if cr is not None:
+            cr = unpack_codes(cr, bits_r).astype(jnp.uint8)
+        res = ref.fused_update_ref(p, g, cm, am, cr, ar, qmap_m, qmap_r,
+                                   algo=algo, blockwise=blockwise, **hyper)
+        return _fu.FusedUpdateResult(
+            res.p, pack_codes(res.codes_m, bits_m), res.absmax_m,
+            None if res.codes_r is None else pack_codes(res.codes_r, bits_r),
+            res.absmax_r)
     return run
 
 
@@ -149,12 +167,15 @@ def fused_update(
     impl: Optional[str] = None,
     rows: int = DEFAULT_ROWS,
 ) -> _fu.FusedUpdateResult:
-    """One fused 8-bit optimizer step in the flat block domain.
+    """One fused k-bit optimizer step in the flat block domain.
 
     Single entry point for every algorithm and ablation mode; dispatches on
     the ``(algo, impl)`` registry.  Tensor-wise quantization
     (``blockwise=False``) is an accuracy ablation, not a perf path, and is
-    served by the "jnp" entry regardless of ``impl``.  Returns a
+    served by the "jnp" entry regardless of ``impl``.  ``codes_m`` /
+    ``codes_r`` may be plain uint8 arrays (8-bit states) or
+    :class:`~repro.core.lowbit.PackedCodes` (sub-byte states); results come
+    back in the same container type.  Returns a
     :class:`~repro.kernels.fused_update.FusedUpdateResult` whose
     codes_r/absmax_r are None for one-state algorithms.
     """
@@ -165,11 +186,33 @@ def fused_update(
     if fn is None:
         raise KeyError(f"no fused_update backend for (algo={algo!r}, "
                        f"impl={impl!r}); registered: {registered()}")
+
+    def unwrap(codes):
+        if isinstance(codes, PackedCodes):
+            return codes.packed, codes.bits, codes.n_codes
+        return codes, 8, None
+    has_second = codes_r is not None
+    codes_m, bits_m, ncodes_m = unwrap(codes_m)
+    codes_r, bits_r, ncodes_r = unwrap(codes_r)
+    checks = [(qmap_m, bits_m, "qmap_m")]
+    if has_second:
+        checks.append((qmap_r, bits_r, "qmap_r"))
+    for qm, bits, nm in checks:
+        if qm is not None and qm.shape[-1] != (1 << bits):
+            raise ValueError(f"{nm} has {qm.shape[-1]} levels; "
+                             f"{bits}-bit codes need {1 << bits}")
+
     hyper = dict(lr=lr, beta1=beta1, beta2=beta2, eps=eps,
                  weight_decay=weight_decay, step=step,
                  trust_coeff=trust_coeff, gnorm_scale=gnorm_scale,
-                 stochastic=stochastic, seed=seed, rows=rows)
+                 stochastic=stochastic, seed=seed, rows=rows,
+                 bits_m=bits_m, bits_r=bits_r)
     if impl == "jnp":
         hyper["blockwise"] = blockwise
-    return fn(p, g, codes_m, absmax_m, codes_r, absmax_r, qmap_m, qmap_r,
-              **hyper)
+    res = fn(p, g, codes_m, absmax_m, codes_r, absmax_r, qmap_m, qmap_r,
+             **hyper)
+    if ncodes_m is not None:
+        res = res._replace(codes_m=PackedCodes(res.codes_m, bits_m, ncodes_m))
+    if ncodes_r is not None and res.codes_r is not None:
+        res = res._replace(codes_r=PackedCodes(res.codes_r, bits_r, ncodes_r))
+    return res

@@ -59,7 +59,8 @@ def _requantize(x: jax.Array, codebook: jax.Array, *, blockwise: bool,
     if random_u is not None:
         q_near = codebook[codes]
         direction = jnp.where(xn > q_near, 1, -1)
-        other = jnp.clip(codes + direction, 0, common.CODEBOOK_SIZE - 1)
+        # k-bit codebooks have 2^bits levels; clip at the last real one.
+        other = jnp.clip(codes + direction, 0, codebook.shape[0] - 1)
         q_other = codebook[other]
         codes = common.stochastic_codes(xn, codes, q_near, q_other, other,
                                         random_u)
@@ -73,8 +74,8 @@ def fused_update_ref(
     absmax_m: jax.Array,           # (n_blocks,)   f32
     codes_r: Optional[jax.Array],  # 2-state algos only
     absmax_r: Optional[jax.Array],
-    qmap_m: jax.Array,             # (256,) state-1 codebook
-    qmap_r: Optional[jax.Array],   # (256,) state-2 codebook
+    qmap_m: jax.Array,             # (2^bits,) state-1 codebook
+    qmap_r: Optional[jax.Array],   # (2^bits,) state-2 codebook
     *,
     algo: str,
     lr, beta1=0.9, beta2=0.999, eps=1e-8, weight_decay=0.0, step=1.0,

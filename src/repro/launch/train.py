@@ -42,6 +42,9 @@ def main(argv=None):
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--qmap", default="dynamic")
+    ap.add_argument("--state-bits", default=None,
+                    help="per-slot storage bitwidth for quantized states: "
+                         "'4' or '4,8' (m,r); default 8-bit (DESIGN.md §9)")
     ap.add_argument("--no-blockwise", action="store_true")
     ap.add_argument("--no-stable-embedding", action="store_true")
     ap.add_argument("--no-32bit-embed-override", action="store_true")
@@ -75,6 +78,9 @@ def main(argv=None):
         opt_kw.update(qmap_m=args.qmap if args.qmap != "dynamic" else "dynamic",
                       qmap_r=args.qmap if args.qmap != "dynamic" else "dynamic",
                       blockwise_norm=not args.no_blockwise)
+        if args.state_bits:
+            parts = [int(b) for b in args.state_bits.split(",")]
+            opt_kw["state_bits"] = parts[0] if len(parts) == 1 else tuple(parts)
         if args.no_32bit_embed_override:
             opt_kw["override_32bit"] = lambda p: False
     opt = make_optimizer(args.optimizer, lr=args.lr, weight_decay=0.0,

@@ -11,7 +11,6 @@ recipe App C identifies as a source of instability.
 from __future__ import annotations
 
 import jax
-import jax
 import jax.numpy as jnp
 import numpy as np
 

@@ -13,7 +13,10 @@ Resolution is greedy and *divisibility-safe*:
 
 Optimizer state: Quant8Leaf lives in the flat block domain — codes/absmax/
 master shard their block dim over *all* mesh axes (whole quantization blocks
-per device); Full32Leaf mirrors the param's spec.
+per device); Full32Leaf mirrors the param's spec.  Bit-packed sub-byte codes
+(``PackedCodes``, DESIGN.md §9) shard the *block-count* axis (dim 0) exactly
+like plain codes — never the byte axis, whose width is a per-block packing
+detail — so k-bit states inherit the whole-blocks-per-device guarantee.
 """
 from __future__ import annotations
 
@@ -26,6 +29,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from repro.core.lowbit import PackedCodes
 from repro.core.optim.base import Full32Leaf, Quant8Leaf
 from repro.core.optim.adafactor import AdafactorLeaf
 
@@ -137,10 +141,20 @@ def opt_state_shardings(abstract_opt_state, param_shard_tree, mesh: Mesh,
     vec = NamedSharding(mesh, P(tuple(mesh.axis_names)))
     rep = NamedSharding(mesh, P())
 
+    def code_sharding(c):
+        # Packed codes: the sharding rides on the packed uint8 child so
+        # the tree mirrors the state's structure; dim 0 is still the
+        # block-count axis, the byte axis stays unsharded.
+        if isinstance(c, PackedCodes):
+            return dataclasses.replace(c, packed=blocks)
+        return blocks
+
     def leaf(st, pshard):
         if isinstance(st, Quant8Leaf):
-            return Quant8Leaf(master=pshard, codes_m=blocks, absmax_m=vec,
-                              codes_r=None if st.codes_r is None else blocks,
+            return Quant8Leaf(master=pshard, codes_m=code_sharding(st.codes_m),
+                              absmax_m=vec,
+                              codes_r=None if st.codes_r is None
+                              else code_sharding(st.codes_r),
                               absmax_r=None if st.absmax_r is None else vec,
                               shape=st.shape, n=st.n)
         if isinstance(st, Full32Leaf):

@@ -20,6 +20,14 @@ restored run resumes with the exact clipping statistics it left with
 (tests/test_checkpoint.py round-trips it).  ``None`` leaves (e.g. the
 history when clipping is off) are recorded in the manifest and restored
 as ``None``.
+
+Bit-packed sub-byte states (``PackedCodes``, DESIGN.md §9) are stored as
+their packed uint8 words with a ``"packed": {"bits", "n_codes"}`` manifest
+annotation; restore validates the annotation against the template's static
+format (a 4-bit checkpoint cannot silently load as 5-bit — same byte
+count, different codes) and re-wraps the array.  Because packing is a
+per-block layout detail and the full logical array is stored, packed
+leaves stay elastic: the same checkpoint restores onto any mesh.
 """
 from __future__ import annotations
 
@@ -32,11 +40,17 @@ from typing import Any, Optional
 import jax
 import numpy as np
 
+from repro.core.lowbit import PackedCodes
+
 Pytree = Any
 
 
+def _is_packed(x) -> bool:
+    return isinstance(x, PackedCodes)
+
+
 def _leaf_paths(tree) -> list[tuple[str, Any]]:
-    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    flat = jax.tree_util.tree_flatten_with_path(tree, is_leaf=_is_packed)[0]
     out = []
     for path, leaf in flat:
         key = jax.tree_util.keystr(path)
@@ -56,10 +70,14 @@ def save(ckpt_dir: str, step: int, tree: Pytree, *, keep_last: int = 3) -> str:
                 index.append({"key": key, "none": True})
                 continue
             name = f"a{i}"
+            entry = {"key": key, "name": name}
+            if _is_packed(leaf):
+                entry["packed"] = {"bits": leaf.bits, "n_codes": leaf.n_codes}
+                leaf = leaf.packed
             arrays[name] = np.asarray(jax.device_get(leaf))
-            index.append({"key": key, "name": name,
-                          "dtype": str(arrays[name].dtype),
-                          "shape": list(arrays[name].shape)})
+            entry.update(dtype=str(arrays[name].dtype),
+                         shape=list(arrays[name].shape))
+            index.append(entry)
         np.savez(os.path.join(tmp, "leaves.npz"), **arrays)
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
             json.dump({"step": step, "index": index}, f)
@@ -107,11 +125,13 @@ def restore(ckpt_dir: str, step: int, template: Pytree,
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)
     data = np.load(os.path.join(path, "leaves.npz"))
-    by_key = {}
+    by_key, meta_by_key = {}, {}
     for ent in manifest["index"]:
         by_key[ent["key"]] = None if ent.get("none") else data[ent["name"]]
+        meta_by_key[ent["key"]] = ent
 
-    flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(
+        template, is_leaf=_is_packed)
     shard_flat = (jax.tree_util.tree_leaves(shardings)
                   if shardings is not None else [None] * len(flat))
     leaves = []
@@ -123,12 +143,32 @@ def restore(ckpt_dir: str, step: int, template: Pytree,
         if arr is None:
             leaves.append(None)
             continue
+        packed_tmpl = tmpl if _is_packed(tmpl) else None
+        saved = meta_by_key[key].get("packed")
+        if packed_tmpl is not None:
+            # Packedness must agree in both directions: packed bytes and
+            # plain codes can share a shape without sharing a meaning.
+            if saved is None:
+                raise ValueError(
+                    f"{key}: template expects {packed_tmpl.bits}-bit packed "
+                    f"codes; checkpoint stores a plain array")
+            if (saved["bits"] != packed_tmpl.bits or
+                    saved["n_codes"] != packed_tmpl.n_codes):
+                raise ValueError(
+                    f"{key}: checkpoint packs {saved['bits']}-bit x "
+                    f"{saved['n_codes']} codes; template expects "
+                    f"{packed_tmpl.bits}-bit x {packed_tmpl.n_codes}")
+            tmpl = packed_tmpl.packed
+        elif saved is not None:
+            raise ValueError(
+                f"{key}: checkpoint stores packed {saved['bits']}-bit codes; "
+                f"template expects a plain array")
         want = tuple(tmpl.shape) if hasattr(tmpl, "shape") else None
         if want is not None and tuple(arr.shape) != want:
             raise ValueError(f"{key}: checkpoint shape {arr.shape} != "
                              f"template {want}")
-        if shd is not None:
-            leaves.append(jax.device_put(arr, shd))
-        else:
-            leaves.append(jax.device_put(arr))
+        arr = jax.device_put(arr, shd) if shd is not None else jax.device_put(arr)
+        if packed_tmpl is not None:
+            arr = PackedCodes(arr, packed_tmpl.bits, packed_tmpl.n_codes)
+        leaves.append(arr)
     return jax.tree_util.tree_unflatten(treedef, leaves)

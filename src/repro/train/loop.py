@@ -154,6 +154,15 @@ def make_train_step(cfg, optimizer, hyper: TrainHyper = TrainHyper(),
         _, new_opt = optimizer.apply(grads, state.opt_state, lr=lr,
                                      param_dtype=param_dtype)
         metrics = {"loss": loss, "grad_norm": gnorm, **mx}
+        if hasattr(optimizer, "state_bytes"):
+            # Static-shape accounting (constant under jit): the *measured*
+            # optimizer-statistics bytes per parameter, so k-bit memory
+            # savings are observable in the metrics stream, not inferred
+            # from the config (DESIGN.md §9).
+            sb = optimizer.state_bytes(state.opt_state)
+            if sb.get("n_params"):
+                metrics["state_bytes_per_param"] = jnp.float32(
+                    sb["state_bytes"] / sb["n_params"])
         if getattr(optimizer, "cfg", None) is not None and \
                 getattr(optimizer.cfg, "percentile_clipping", 100) < 100:
             # Same subgraph apply() evaluates internally -> CSE'd by XLA;
