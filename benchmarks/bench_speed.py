@@ -186,6 +186,50 @@ def bench_kbit_fused(bits: int, smoke: bool = False):
     return results
 
 
+def bench_pooled_dispatch(smoke: bool = False):
+    """Pooled single-dispatch (DESIGN.md §10) vs per-leaf dispatch on a
+    many-leaf parameter tree: fused-update *launches per train step*
+    (counted at trace time — what the compiled step actually bakes in) and
+    the wall-clock of one optimizer step.  Appends both to
+    BENCH_speed.json so the pooled win is tracked over PRs."""
+    from repro.core.optim import make_optimizer
+    n_leaves = 12 if smoke else 48
+    key = jax.random.PRNGKey(0)
+    params = {f"layer{i:02d}": jax.random.normal(
+        jax.random.fold_in(key, i), (8 + (i % 5) * 8, 256))
+        for i in range(n_leaves)}
+    grads = jax.tree_util.tree_map(lambda p: p * 0.01, params)
+    results: dict[str, dict] = {}
+    for mode, pooled in (("pooled", True), ("per_leaf", False)):
+        opt = make_optimizer("adam8", lr=1e-3, min_8bit_size=256,
+                             override_32bit=lambda p: False, pooled=pooled)
+        st = opt.init(params)
+        step = jax.jit(lambda g, s: opt.apply(g, s))
+        ops.reset_fused_update_count()
+        step.lower(grads, st)                 # trace only: launches/step
+        calls = ops.fused_update_count()
+        us, _ = time_fn(step, grads, st, iters=2 if smoke else 5, warmup=1)
+        results[mode] = {"launches_per_step": calls, "us_per_step": us}
+        emit(f"pooled/{mode}/us_per_step", us,
+             f"{calls} fused launches/step, {n_leaves} leaves")
+    assert results["pooled"]["launches_per_step"] <= 2, results
+    assert results["per_leaf"]["launches_per_step"] == n_leaves, results
+    speedup = (results["per_leaf"]["us_per_step"]
+               / max(results["pooled"]["us_per_step"], 1e-9))
+    emit("pooled/speedup_vs_per_leaf", 0.0, f"{speedup:.2f}x")
+    _append_bench_json({
+        "bench": "pooled_dispatch",
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "smoke": smoke, "backend": jax.default_backend(),
+        "n_leaves": n_leaves,
+        "launches_per_step": {m: r["launches_per_step"]
+                              for m, r in results.items()},
+        "us_per_step": {m: r["us_per_step"] for m, r in results.items()},
+        "speedup_pooled_vs_per_leaf": speedup,
+    }, label="pooled/json")
+    return results
+
+
 def bench_quantize_throughput():
     qs = jnp.asarray(qmap.get_qmap("dynamic", True))
     x = jax.random.normal(jax.random.PRNGKey(0), (512, 2048))
@@ -205,6 +249,7 @@ def main(smoke: bool = False, bits: int | None = None):
         bench_table5_update_speed()
         bench_quantize_throughput()
     bench_fused_update_sweep(smoke=smoke)
+    bench_pooled_dispatch(smoke=smoke)
     if bits is not None:
         bench_kbit_fused(bits, smoke=smoke)
 

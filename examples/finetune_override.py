@@ -8,7 +8,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import base
-from repro.core.optim import Quant8Leaf, Full32Leaf, make_optimizer
+from repro.core.optim import (Quant8Leaf, Full32Leaf, make_optimizer,
+                              unpool_state)
 from repro.data.pipeline import DataConfig, SyntheticLMPipeline
 from repro.train import loop as L
 
@@ -25,8 +26,11 @@ def main():
     opt = make_optimizer("adamw8", lr=3e-3, weight_decay=0.01,
                          override_32bit=my_override)
     state, _ = L.init_train_state(cfg, opt, jax.random.PRNGKey(0))
+    # unpool_state gives the per-leaf canonical view regardless of the
+    # pooled dispatch (DESIGN.md §10), so the kinds read the same
     kinds = jax.tree_util.tree_map(
-        lambda l: type(l).__name__, state.opt_state.leaves,
+        lambda l: type(l).__name__,
+        unpool_state(state.opt_state).leaves,
         is_leaf=lambda x: isinstance(x, (Quant8Leaf, Full32Leaf)))
     print("per-leaf state kinds:",
           {k: str(v)[:60] for k, v in kinds.items()})

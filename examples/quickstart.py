@@ -8,6 +8,8 @@ memory (more with sub-byte states).
     PYTHONPATH=src python examples/quickstart.py
     PYTHONPATH=src python examples/quickstart.py --bits 4   # packed 4-bit
                                                  # first moment, 8-bit second
+    PYTHONPATH=src python examples/quickstart.py --no-pooled  # per-leaf
+                                  # dispatch (debugging; bit-identical)
 """
 import argparse
 
@@ -42,8 +44,14 @@ if __name__ == "__main__":
     ap.add_argument("--bits", type=int, default=8, choices=[4, 5, 6, 8],
                     help="first-moment storage bitwidth for the quantized "
                          "run (second moment stays 8-bit; DESIGN.md §9)")
+    ap.add_argument("--no-pooled", action="store_true",
+                    help="per-leaf dispatch instead of the pooled arena "
+                         "(one fused launch per leaf instead of one per "
+                         "state format; bit-identical — DESIGN.md §10)")
     args = ap.parse_args()
     opt_kw = {} if args.bits == 8 else {"state_bits": (args.bits, 8)}
+    if args.no_pooled:
+        opt_kw["pooled"] = False
     l32, b32 = run("adam32")
     l8, b8 = run("adam8", **opt_kw)
     print(f"\nloss diff: {abs(l8 - l32):.4f}   state memory: {b32 / b8:.1f}x smaller")

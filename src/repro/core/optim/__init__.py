@@ -11,9 +11,12 @@ from __future__ import annotations
 from typing import Callable, Optional
 
 from repro.core.optim.adafactor import Adafactor, AdafactorConfig
-from repro.core.optim.base import (Full32Leaf, OptimConfig, Quant8Leaf,
+from repro.core.optim.base import (FlatSegment, Full32Leaf, OptimConfig,
+                                   Pool32Arena, Pool32Leaf, PooledQuantLeaf,
+                                   Quant8Leaf, QuantArena, QuantSegment,
                                    default_override_32bit)
-from repro.core.optim.blockopt import Block8bitOptimizer, OptState
+from repro.core.optim.blockopt import (Block8bitOptimizer, OptState,
+                                       repool_like, unpool_state)
 
 _NAMES = {
     # name: (algo, bits)
@@ -54,7 +57,9 @@ def make_optimizer(name: str,
 
 
 __all__ = [
-    "Adafactor", "AdafactorConfig", "Block8bitOptimizer", "Full32Leaf",
-    "OptimConfig", "OptState", "Quant8Leaf", "default_override_32bit",
-    "make_optimizer",
+    "Adafactor", "AdafactorConfig", "Block8bitOptimizer", "FlatSegment",
+    "Full32Leaf", "OptimConfig", "OptState", "Pool32Arena", "Pool32Leaf",
+    "PooledQuantLeaf", "Quant8Leaf", "QuantArena", "QuantSegment",
+    "default_override_32bit", "make_optimizer", "repool_like",
+    "unpool_state",
 ]

@@ -112,7 +112,11 @@ class Adafactor:
             is_leaf=lambda x: isinstance(x, AdafactorLeaf))
 
     def state_bytes(self, state: AdafactorState) -> dict:
-        stats = master = 0
+        # n_params is part of the contract shared with Block8bitOptimizer:
+        # train/loop.py gates its state_bytes_per_param metric on it, and
+        # that metric is exactly the paper's Table 1 comparison against
+        # this 32-bit memory-efficient baseline.
+        stats = master = n_params = 0
         for leaf in jax.tree_util.tree_leaves(
                 state.leaves, is_leaf=lambda x: isinstance(x, AdafactorLeaf)):
             stats += leaf.m.size * 4
@@ -120,4 +124,6 @@ class Adafactor:
                 if v is not None:
                     stats += v.size * 4
             master += leaf.master.size * 4
-        return {"state_bytes": int(stats), "master_bytes": int(master)}
+            n_params += leaf.master.size
+        return {"state_bytes": int(stats), "master_bytes": int(master),
+                "n_params": int(n_params)}

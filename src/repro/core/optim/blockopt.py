@@ -35,6 +35,20 @@ per-optimizer history of squared global gradient norms in
 gradients by a scalar inside the fused kernel — no extra pass over the
 states.  The history is ordinary optimizer state: it is checkpointed and
 restored like every other leaf.
+
+**Pooled single dispatch** (``cfg.pooled``, default on; DESIGN.md §10):
+``init`` concatenates every quantized leaf's statistics into one
+:class:`~repro.core.optim.base.QuantArena` and every sub-``min_quant_size``
+leaf's fp32 state into one :class:`~repro.core.optim.base.Pool32Arena`, so
+``apply`` issues **one** ``kops.fused_update`` per arena (plus one jnp
+update for the fp32 pool) instead of one launch per parameter leaf.
+Per-leaf stochastic-rounding seeds become per-block seed vectors and
+LAMB/LARS trust ratios are finalized per arena *segment*, so pooled and
+per-leaf dispatch are bit-identical — ``pooled=False`` is kept as the
+parity oracle (and serves the tensor-wise ablation, which needs a
+per-tensor absmax).  Checkpoints always store the per-leaf canonical form
+(:func:`unpool_state`), so pooled and per-leaf runs share checkpoints in
+both directions.
 """
 from __future__ import annotations
 
@@ -43,10 +57,13 @@ from typing import Any, Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.lowbit import CodeFormat, PackedCodes
 from repro.core.optim import base
-from repro.core.optim.base import (Full32Leaf, OptimConfig, Quant8Leaf,
+from repro.core.optim.base import (FlatSegment, Full32Leaf, OptimConfig,
+                                   Pool32Arena, Pool32Leaf, PooledQuantLeaf,
+                                   Quant8Leaf, QuantArena, QuantSegment,
                                    blocks_to_param, flatten_to_blocks,
                                    path_str)
 from repro.models.constrain import constrain as _constrain
@@ -58,10 +75,20 @@ Pytree = Any
 
 class OptState(NamedTuple):
     step: jax.Array           # int32 scalar, number of updates applied
-    leaves: Pytree            # tree of Quant8Leaf / Full32Leaf
+    # tree of Quant8Leaf / Full32Leaf (per-leaf dispatch) or
+    # PooledQuantLeaf / Pool32Leaf / Full32Leaf (pooled dispatch)
+    leaves: Pytree
     # (pclip_history,) f32 squared-gnorm history, or None when percentile
     # clipping is off (cfg.percentile_clipping == 100).
     gnorm_vec: Optional[jax.Array] = None
+    # Pooled-dispatch arenas (DESIGN.md §10); None on the per-leaf layout.
+    arena: Optional[QuantArena] = None
+    pool32: Optional[Pool32Arena] = None
+
+
+def _is_state_leaf(x) -> bool:
+    return isinstance(x, (Quant8Leaf, Full32Leaf, PooledQuantLeaf,
+                          Pool32Leaf))
 
 
 def _state1_signed(algo: str) -> bool:
@@ -96,6 +123,8 @@ class Block8bitOptimizer:
 
     def init(self, params: Pytree) -> OptState:
         cfg = self.cfg
+        if cfg.pooling_active:
+            return self._init_pooled(params)
 
         def init_leaf(path, p):
             path = path_str(path)
@@ -128,6 +157,68 @@ class Block8bitOptimizer:
                      if cfg.percentile_clipping < 100 else None)
         return OptState(step=jnp.zeros((), jnp.int32), leaves=leaves,
                         gnorm_vec=gnorm_vec)
+
+    def _init_pooled(self, params: Pytree) -> OptState:
+        """Pooled arena layout (DESIGN.md §10): quantized statistics of all
+        quantized leaves concatenate into one QuantArena; small leaves pool
+        their fp32 state into one Pool32Arena; masters stay per-leaf in
+        param shape (sharded like the param, §Perf A2).  Segment offsets
+        are assigned in leaf flatten order, the order ``apply`` re-walks."""
+        cfg = self.cfg
+        mdt = jnp.dtype(cfg.master_dtype)
+        bs = cfg.block_size
+        second = cfg.has_second_moment
+        qsegs: list = []
+        fsegs: list = []
+        flat32: list = []
+
+        def init_leaf(path, p):
+            path = path_str(path)
+            if self._leaf_is_quantized(path, p):
+                nb = base.n_blocks_for(p.shape, bs, cfg.shard_multiple)
+                off = qsegs[-1].offset + qsegs[-1].n_blocks if qsegs else 0
+                qsegs.append(QuantSegment(path, off, nb, tuple(p.shape),
+                                          int(p.size)))
+                return PooledQuantLeaf(master=p.astype(mdt),
+                                       shape=tuple(p.shape), n=int(p.size),
+                                       offset=off, n_blocks=nb)
+            if p.size < cfg.min_quant_size and not self.override_32bit(path):
+                off = fsegs[-1].offset + fsegs[-1].n if fsegs else 0
+                fsegs.append(FlatSegment(path, off, int(p.size),
+                                         tuple(p.shape)))
+                flat32.append(p.reshape(-1).astype(jnp.float32))
+                return Pool32Leaf(shape=tuple(p.shape), n=int(p.size),
+                                  offset=off)
+            # stable-embedding override (paper §2.3): stays a per-leaf
+            # Full32Leaf — large, sharded like its param.
+            master = p.astype(jnp.float32)
+            return Full32Leaf(
+                master=master, m=jnp.zeros_like(master),
+                r=jnp.zeros_like(master) if second else None)
+
+        leaves = jax.tree_util.tree_map_with_path(init_leaf, params)
+        arena = None
+        if qsegs:
+            total = qsegs[-1].offset + qsegs[-1].n_blocks
+            arena = QuantArena(
+                codes_m=self._fmt1.init_codes(total, bs),
+                absmax_m=jnp.zeros((total,), jnp.float32),
+                codes_r=self._fmt2.init_codes(total, bs) if second else None,
+                absmax_r=jnp.zeros((total,), jnp.float32) if second else None,
+                segments=tuple(qsegs))
+        pool32 = None
+        if fsegs:
+            total = fsegs[-1].offset + fsegs[-1].n
+            master = (jnp.concatenate(flat32) if len(flat32) > 1
+                      else flat32[0])
+            pool32 = Pool32Arena(
+                master=master, m=jnp.zeros((total,), jnp.float32),
+                r=jnp.zeros((total,), jnp.float32) if second else None,
+                segments=tuple(fsegs))
+        gnorm_vec = (jnp.zeros((cfg.pclip_history,), jnp.float32)
+                     if cfg.percentile_clipping < 100 else None)
+        return OptState(step=jnp.zeros((), jnp.int32), leaves=leaves,
+                        gnorm_vec=gnorm_vec, arena=arena, pool32=pool32)
 
     # ------------------------------------------------------------- algorithms
     def _math32(self, g, p, m, r, lr, step_f):
@@ -206,6 +297,115 @@ class Block8bitOptimizer:
         m2, r2, p2 = self._math32(g, leaf.master, leaf.m, r, lr, step_f)
         return Full32Leaf(master=p2, m=m2, r=r2)
 
+    def _apply_pool32(self, pool: Pool32Arena, gflat: jax.Array, lr,
+                      step_f) -> Pool32Arena:
+        """One jnp update for every pooled small leaf at once.  LAMB/LARS
+        trust ratios stay per-tensor: each segment's norms are reduced on a
+        view reshaped to the original param shape, so the reduction is
+        bit-identical to the per-leaf Full32 path."""
+        cfg = self.cfg
+        spec = kfu.ALGO_SPECS[cfg.algo]
+        s = dict(lr=lr, beta1=cfg.beta1, beta2=cfg.beta2, eps=cfg.eps,
+                 weight_decay=cfg.weight_decay, step=step_f,
+                 tensor_scale=jnp.float32(1.0))
+        if spec.needs_norms:
+            def seg_scale(i, off, n):
+                shape = pool.segments[i].shape
+                view = lambda a: a[off:off + n].reshape(shape)
+                return kfu.tensor_scale_for(
+                    spec, view(gflat), view(pool.master), view(pool.m),
+                    None if pool.r is None else view(pool.r), s,
+                    cfg.trust_coeff)
+
+            s["tensor_scale"] = kfu.segment_scale_vector(
+                [(seg.offset, seg.n) for seg in pool.segments],
+                pool.master.shape[0], seg_scale)
+        m2, r2, p2 = kfu.update_math(spec, gflat, pool.master, pool.m,
+                                     pool.r, s)
+        return dataclasses.replace(pool, master=p2, m=m2, r=r2)
+
+    def _apply_pooled(self, grads: Pytree, state: OptState, lr, step_f,
+                      base_seed, gnorm_scale):
+        """One fused_update for the whole QuantArena + one jnp update for
+        the Pool32Arena; per-leaf Full32 overrides ride along unchanged.
+        Seeds, element indices and trust ratios are threaded per block /
+        per segment so the result is bit-identical to the per-leaf
+        dispatch (tests/test_pooled.py)."""
+        cfg = self.cfg
+        mdt = jnp.dtype(cfg.master_dtype)
+
+        # Walk leaves+grads once, in flatten order — the same order the
+        # per-leaf dispatch numbers its leaves, so seed i matches.
+        entries: list = []
+        idx = [0]
+
+        def collect(leaf, g):
+            entries.append((leaf, g, idx[0]))
+            idx[0] += 1
+            return leaf
+
+        jax.tree_util.tree_map(collect, state.leaves, grads,
+                               is_leaf=_is_state_leaf)
+
+        new_arena, res_p = state.arena, None
+        if state.arena is not None:
+            arena = state.arena
+            quant = [(l, g, i) for l, g, i in entries
+                     if isinstance(l, PooledQuantLeaf)]
+            gbs, mbs, seeds, offs = [], [], [], []
+            for leaf, g, i in quant:
+                gbs.append(flatten_to_blocks(g, cfg.block_size,
+                                             cfg.shard_multiple))
+                mbs.append(flatten_to_blocks(leaf.master, cfg.block_size,
+                                             cfg.shard_multiple))
+                seeds.append(jnp.broadcast_to(
+                    base_seed + jnp.int32(i * 7919), (leaf.n_blocks,)))
+                offs.append(np.arange(leaf.n_blocks, dtype=np.int32))
+            gb = _constrain(jnp.concatenate(gbs), "all", None)
+            mb = _constrain(jnp.concatenate(mbs), "all", None)
+            res = kops.fused_update(
+                cfg.algo, mb, gb, arena.codes_m, arena.absmax_m,
+                arena.codes_r, arena.absmax_r, self._qmap1, self._qmap2,
+                lr=lr, beta1=cfg.beta1, beta2=cfg.beta2, eps=cfg.eps,
+                weight_decay=cfg.weight_decay, step=step_f,
+                trust_coeff=cfg.trust_coeff, gnorm_scale=gnorm_scale,
+                blockwise=True, stochastic=cfg.stochastic_rounding,
+                block_seeds=jnp.concatenate(seeds),
+                block_offsets=jnp.asarray(np.concatenate(offs)),
+                segments=tuple((s.offset, s.n_blocks)
+                               for s in arena.segments),
+                impl=self._impl)
+            new_arena = dataclasses.replace(
+                arena, codes_m=res.codes_m, absmax_m=res.absmax_m,
+                codes_r=res.codes_r if res.codes_r is not None
+                else arena.codes_r,
+                absmax_r=res.absmax_r if res.absmax_r is not None
+                else arena.absmax_r)
+            res_p = res.p
+
+        new_pool = state.pool32
+        if state.pool32 is not None:
+            small_g = [g for l, g, i in entries if isinstance(l, Pool32Leaf)]
+            gflat = (jnp.concatenate([g.reshape(-1).astype(jnp.float32)
+                                      for g in small_g])
+                     if len(small_g) > 1
+                     else small_g[0].reshape(-1).astype(jnp.float32))
+            new_pool = self._apply_pool32(state.pool32, gflat * gnorm_scale,
+                                          lr, step_f)
+
+        def upd(leaf, g):
+            if isinstance(leaf, PooledQuantLeaf):
+                sl = res_p[leaf.offset:leaf.offset + leaf.n_blocks]
+                return dataclasses.replace(
+                    leaf, master=blocks_to_param(sl, leaf.shape, leaf.n, mdt))
+            if isinstance(leaf, Pool32Leaf):
+                return leaf
+            return self._apply_full32(leaf, g, lr, step_f, gnorm_scale)
+
+        new_leaves = jax.tree_util.tree_map(upd, state.leaves, grads,
+                                            is_leaf=_is_state_leaf)
+        return new_leaves, new_arena, new_pool
+
     def apply(self, grads: Pytree, state: OptState, *,
               lr: Optional[jax.Array] = None,
               param_dtype=jnp.float32,
@@ -230,39 +430,45 @@ class Block8bitOptimizer:
             # int32 wraparound is fine: the seed only feeds a hash.
             base_seed = state.step.astype(jnp.int32) * jnp.int32(1000003)
 
-        leaf_idx = [0]
+        if cfg.pooling_active:
+            new_leaves, new_arena, new_pool = self._apply_pooled(
+                grads, state, lr, step_f, base_seed, gnorm_scale)
+        else:
+            leaf_idx = [0]
 
-        def upd(leaf, g):
-            i = leaf_idx[0]
-            leaf_idx[0] += 1
-            seed = base_seed + jnp.int32(i * 7919)
-            if isinstance(leaf, Quant8Leaf):
-                return self._apply_quant8(leaf, g, lr, step_f, seed,
-                                          gnorm_scale)
-            return self._apply_full32(leaf, g, lr, step_f, gnorm_scale)
+            def upd(leaf, g):
+                i = leaf_idx[0]
+                leaf_idx[0] += 1
+                seed = base_seed + jnp.int32(i * 7919)
+                if isinstance(leaf, Quant8Leaf):
+                    return self._apply_quant8(leaf, g, lr, step_f, seed,
+                                              gnorm_scale)
+                return self._apply_full32(leaf, g, lr, step_f, gnorm_scale)
 
-        new_leaves = jax.tree_util.tree_map(
-            upd, state.leaves, grads,
-            is_leaf=lambda x: isinstance(x, (Quant8Leaf, Full32Leaf)))
+            new_leaves = jax.tree_util.tree_map(
+                upd, state.leaves, grads, is_leaf=_is_state_leaf)
+            new_arena, new_pool = state.arena, state.pool32
 
-        def to_param(leaf):
-            return leaf.master.astype(param_dtype)
-
-        new_params = jax.tree_util.tree_map(
-            to_param, new_leaves,
-            is_leaf=lambda x: isinstance(x, (Quant8Leaf, Full32Leaf)))
-        return new_params, OptState(step=state.step + 1, leaves=new_leaves,
-                                    gnorm_vec=new_vec)
+        new_state = OptState(step=state.step + 1, leaves=new_leaves,
+                             gnorm_vec=new_vec, arena=new_arena,
+                             pool32=new_pool)
+        return self.params_view(new_state, param_dtype), new_state
 
     def params_view(self, state: OptState, param_dtype=jnp.float32) -> Pytree:
         """Model-shape params reconstructed from the (sharded, flat-block)
         master copies — ZeRO-3 style: no persistent model-shape duplicate;
-        XLA inserts the all-gather at use sites."""
+        XLA inserts the all-gather at use sites.  Pooled small leaves are
+        sliced out of the Pool32Arena."""
+        pool = state.pool32
+
         def to_param(leaf):
+            if isinstance(leaf, Pool32Leaf):
+                sl = pool.master[leaf.offset:leaf.offset + leaf.n]
+                return sl.reshape(leaf.shape).astype(param_dtype)
             return leaf.master.astype(param_dtype)
-        return jax.tree_util.tree_map(
-            to_param, state.leaves,
-            is_leaf=lambda x: isinstance(x, (Quant8Leaf, Full32Leaf)))
+
+        return jax.tree_util.tree_map(to_param, state.leaves,
+                                      is_leaf=_is_state_leaf)
 
     # ------------------------------------------------------------- utilities
     def state_bytes(self, state: OptState) -> dict:
@@ -276,18 +482,185 @@ class Block8bitOptimizer:
             return c.nbytes() if isinstance(c, PackedCodes) else c.size
 
         stats = master = n_params = 0
-        for leaf in jax.tree_util.tree_leaves(
-                state.leaves,
-                is_leaf=lambda x: isinstance(x, (Quant8Leaf, Full32Leaf))):
+        for leaf in jax.tree_util.tree_leaves(state.leaves,
+                                              is_leaf=_is_state_leaf):
             if isinstance(leaf, Quant8Leaf):
                 stats += codes_bytes(leaf.codes_m) + leaf.absmax_m.size * 4
                 if leaf.codes_r is not None:
                     stats += codes_bytes(leaf.codes_r) + leaf.absmax_r.size * 4
                 master += leaf.master.size * leaf.master.dtype.itemsize
                 n_params += leaf.n
+            elif isinstance(leaf, PooledQuantLeaf):
+                # quantized statistics counted once via the arena below
+                master += leaf.master.size * leaf.master.dtype.itemsize
+                n_params += leaf.n
+            elif isinstance(leaf, Pool32Leaf):
+                pass  # all state counted via the Pool32Arena below
             else:
                 stats += leaf.m.size * 4 + (leaf.r.size * 4 if leaf.r is not None else 0)
                 master += leaf.master.size * 4
                 n_params += leaf.master.size
+        arena = getattr(state, "arena", None)
+        if arena is not None:
+            stats += codes_bytes(arena.codes_m) + arena.absmax_m.size * 4
+            if arena.codes_r is not None:
+                stats += codes_bytes(arena.codes_r) + arena.absmax_r.size * 4
+        pool = getattr(state, "pool32", None)
+        if pool is not None:
+            stats += pool.m.size * 4 + (pool.r.size * 4
+                                        if pool.r is not None else 0)
+            master += pool.master.size * 4
+            n_params += pool.master.size
         return {"state_bytes": int(stats), "master_bytes": int(master),
                 "n_params": int(n_params)}
+
+
+# ------------------------------------------------ pooled <-> per-leaf views
+# Checkpoints always store the per-leaf canonical layout: `unpool_state`
+# slices arenas back into Quant8Leaf / Full32Leaf containers (save side),
+# `repool_like` concatenates restored per-leaf arrays into the template's
+# arena layout (restore side).  Both work leaf-by-leaf from the static
+# segment metadata, so the on-disk format is independent of `cfg.pooled`
+# and old per-leaf checkpoints restore into pooled states and vice versa.
+
+
+def _slice_blocks(x, off: int, nb: int):
+    """Block-dim slice [off, off+nb) of an arena child; shape-only on
+    ShapeDtypeStruct templates, rewrapping PackedCodes containers."""
+    if isinstance(x, PackedCodes):
+        return PackedCodes(_slice_blocks(x.packed, off, nb), x.bits,
+                           x.n_codes)
+    if isinstance(x, jax.ShapeDtypeStruct):
+        return jax.ShapeDtypeStruct((nb,) + tuple(x.shape[1:]), x.dtype)
+    return x[off:off + nb]
+
+
+def _slice_flat(x, off: int, n: int, shape: tuple):
+    if isinstance(x, jax.ShapeDtypeStruct):
+        return jax.ShapeDtypeStruct(tuple(shape), x.dtype)
+    return x[off:off + n].reshape(shape)
+
+
+def unpool_state(state: OptState) -> OptState:
+    """Pooled layout -> per-leaf canonical layout (identity for per-leaf
+    states).  Accepts concrete arrays or ShapeDtypeStruct templates."""
+    arena, pool = state.arena, state.pool32
+    if arena is None and pool is None:
+        return state
+
+    def conv(leaf):
+        if isinstance(leaf, PooledQuantLeaf):
+            o, nb = leaf.offset, leaf.n_blocks
+            return Quant8Leaf(
+                master=leaf.master,
+                codes_m=_slice_blocks(arena.codes_m, o, nb),
+                absmax_m=_slice_blocks(arena.absmax_m, o, nb),
+                codes_r=None if arena.codes_r is None
+                else _slice_blocks(arena.codes_r, o, nb),
+                absmax_r=None if arena.absmax_r is None
+                else _slice_blocks(arena.absmax_r, o, nb),
+                shape=leaf.shape, n=leaf.n)
+        if isinstance(leaf, Pool32Leaf):
+            return Full32Leaf(
+                master=_slice_flat(pool.master, leaf.offset, leaf.n,
+                                   leaf.shape),
+                m=_slice_flat(pool.m, leaf.offset, leaf.n, leaf.shape),
+                r=None if pool.r is None
+                else _slice_flat(pool.r, leaf.offset, leaf.n, leaf.shape))
+        return leaf
+
+    leaves = jax.tree_util.tree_map(conv, state.leaves,
+                                    is_leaf=_is_state_leaf)
+    return OptState(step=state.step, leaves=leaves,
+                    gnorm_vec=state.gnorm_vec, arena=None, pool32=None)
+
+
+def _concat_rows(parts, like):
+    """Host-side concat of per-leaf arena rows, honouring PackedCodes."""
+    if isinstance(like, PackedCodes):
+        return PackedCodes(
+            np.concatenate([np.asarray(p.packed) for p in parts]),
+            like.bits, like.n_codes)
+    return np.concatenate([np.asarray(p) for p in parts])
+
+
+def repool_like(per_leaf: OptState, template: OptState) -> OptState:
+    """Per-leaf state -> the pooled layout of ``template`` (identity when
+    the template is per-leaf).  Used by elastic checkpoint restore; array
+    data is concatenated on the host, placement happens afterwards."""
+    t_arena, t_pool = template.arena, template.pool32
+    if t_arena is None and t_pool is None:
+        return per_leaf
+    by_block: dict = {}
+    by_flat: dict = {}
+
+    def onto(tmpl_leaf, got):
+        if isinstance(tmpl_leaf, PooledQuantLeaf):
+            by_block[tmpl_leaf.offset] = got
+            return dataclasses.replace(tmpl_leaf, master=got.master)
+        if isinstance(tmpl_leaf, Pool32Leaf):
+            by_flat[tmpl_leaf.offset] = got
+            return tmpl_leaf
+        return got
+
+    leaves = jax.tree_util.tree_map(onto, template.leaves, per_leaf.leaves,
+                                    is_leaf=_is_state_leaf)
+    arena = None
+    if t_arena is not None:
+        parts = [by_block[s.offset] for s in t_arena.segments]
+        arena = QuantArena(
+            codes_m=_concat_rows([p.codes_m for p in parts],
+                                 t_arena.codes_m),
+            absmax_m=_concat_rows([p.absmax_m for p in parts],
+                                  t_arena.absmax_m),
+            codes_r=None if t_arena.codes_r is None
+            else _concat_rows([p.codes_r for p in parts], t_arena.codes_r),
+            absmax_r=None if t_arena.absmax_r is None
+            else _concat_rows([p.absmax_r for p in parts],
+                              t_arena.absmax_r),
+            segments=t_arena.segments)
+    pool = None
+    if t_pool is not None:
+        parts = [by_flat[s.offset] for s in t_pool.segments]
+
+        def flat(xs):
+            return np.concatenate([np.asarray(x).reshape(-1) for x in xs])
+
+        pool = Pool32Arena(
+            master=flat([p.master for p in parts]),
+            m=flat([p.m for p in parts]),
+            r=None if t_pool.r is None else flat([p.r for p in parts]),
+            segments=t_pool.segments)
+    return OptState(step=per_leaf.step, leaves=leaves,
+                    gnorm_vec=per_leaf.gnorm_vec, arena=arena, pool32=pool)
+
+
+def map_opt_states(tree, fn):
+    """Apply ``fn`` to every OptState inside a checkpointable container
+    tree (dicts / lists / (named)tuples), leaving everything else alone."""
+    if isinstance(tree, OptState):
+        return fn(tree)
+    if isinstance(tree, dict):
+        return {k: map_opt_states(v, fn) for k, v in tree.items()}
+    if isinstance(tree, tuple) and hasattr(tree, "_fields"):
+        return type(tree)(*(map_opt_states(v, fn) for v in tree))
+    if isinstance(tree, (list, tuple)):
+        return type(tree)(map_opt_states(v, fn) for v in tree)
+    return tree
+
+
+def zip_opt_states(tree, template, fn):
+    """Parallel walk of ``tree`` and ``template``; applies ``fn(sub,
+    template_sub)`` wherever the template holds an OptState."""
+    if isinstance(template, OptState):
+        return fn(tree, template)
+    if isinstance(template, dict):
+        return {k: zip_opt_states(tree[k], v, fn)
+                for k, v in template.items()}
+    if isinstance(template, tuple) and hasattr(template, "_fields"):
+        return type(template)(*(zip_opt_states(t, v, fn)
+                                for t, v in zip(tree, template)))
+    if isinstance(template, (list, tuple)):
+        return type(template)(zip_opt_states(t, v, fn)
+                              for t, v in zip(tree, template))
+    return tree

@@ -26,10 +26,21 @@ Extras fused into the same pass:
 
 LAMB/LARS need per-tensor norms, which are global reductions and cannot be
 fused into one block-local pass.  They get a *norm prologue*: a first grid
-pass emits per-grid-row partial sums of ||p||^2 / ||g||^2 / ||u||^2, the
-XLA side finalizes them into the scalar trust ratio, and the main kernel
-consumes it via the scalar vector (so LAMB/LARS cost two passes instead of
-the jnp fallback's 3-4).
+pass emits per-**block** partial sums of ||p||^2 / ||g||^2 / ||u||^2, the
+XLA side finalizes them per *segment* (a contiguous block range belonging
+to one logical tensor — the whole input by default, one range per pooled
+leaf under the pooled dispatch, DESIGN.md §10) into a per-block
+trust-ratio vector the main kernel streams like a second absmax (so
+LAMB/LARS cost two passes instead of the jnp fallback's 3-4).
+
+The pooled dispatch (DESIGN.md §10) batches many parameter leaves into one
+arena, so per-leaf identity enters the kernel as three extra per-block
+inputs/statics: ``block_seeds`` (each block's stochastic-rounding seed —
+the seed of the leaf it belongs to), ``block_offsets`` (each block's index
+*within its leaf*, so element indices for the counter-based PRNG are
+leaf-local), and the static ``segments``.  With the defaults (constant
+seed, ``arange`` offsets, one segment) the kernel is bit-identical to the
+historical single-tensor behaviour.
 
 ``repro.kernels.ops`` registers these builders under ``(algo, "pallas")``
 and ``(algo, "interpret")``; the matching jnp oracle lives in ``ref.py``
@@ -52,9 +63,10 @@ from repro.kernels import common
 
 # scalar vector layout:
 # [lr, beta1, beta2, eps, weight_decay, step, gnorm_scale, tensor_scale]
-# Slot 7 holds trust_coeff on entry to fused_update_pallas and is rewritten
-# to the finalized tensor_scale (trust ratio / local lr) before the main
-# kernel runs; it is 1.0 for block-local algorithms.
+# Slot 7 holds trust_coeff on entry to fused_update_pallas; norm-needing
+# algorithms (lamb/lars) consume the finalized per-block tensor_scale via a
+# dedicated (n_blocks, 1) input instead, and the slot is rewritten to 1.0
+# before the main kernel runs.
 N_SCALARS = 8
 
 
@@ -164,6 +176,25 @@ def tensor_scale_from_norms(spec: AlgoSpec, pn2, gn2, un2, *,
     return jnp.float32(1.0)
 
 
+def segment_scale_vector(segments, total: int, scale_fn):
+    """Assemble a per-block (or per-element) tensor_scale vector from
+    per-segment scalars: ``scale_fn(i, off, n)`` returns segment i's scalar
+    scale; positions past the last segment (rows padding) get 1.0.  The
+    single shared assembly point for the pooled dispatch's per-tensor trust
+    ratios — the Pallas finalization, the jnp oracle and the fp32 pool all
+    call it, so the pooled/per-leaf bit-exactness contract has one
+    implementation to keep honest.  Segments must tile a contiguous
+    prefix of ``total``."""
+    pieces, cursor = [], 0
+    for i, (off, n) in enumerate(segments):
+        assert off == cursor, (segments, "segments must be contiguous")
+        pieces.append(jnp.broadcast_to(scale_fn(i, off, n), (n,)))
+        cursor += n
+    if cursor < total:
+        pieces.append(jnp.ones((total - cursor,), jnp.float32))
+    return pieces[0] if len(pieces) == 1 else jnp.concatenate(pieces)
+
+
 def tensor_scale_for(spec: AlgoSpec, g, p, m, r, s, trust_coeff):
     """Whole-tensor norm prologue + finalization for single-tensor callers
     (the jnp oracle and the Full32 engine path).  The Pallas path computes
@@ -198,6 +229,8 @@ def _make_update_kernel(spec: AlgoSpec, rows: int, bsz: int, stochastic: bool,
         it = iter(refs)
         scal_ref = next(it)
         seed_ref = next(it) if stochastic else None
+        boff_ref = next(it) if stochastic else None
+        ts_ref = next(it) if spec.needs_norms else None
         qm1_ref, b1_ref = next(it), next(it)
         qm2_ref, b2_ref = (next(it), next(it)) if two else (None, None)
         p_ref, g_ref, c1_ref, a1_ref = next(it), next(it), next(it), next(it)
@@ -206,6 +239,10 @@ def _make_update_kernel(spec: AlgoSpec, rows: int, bsz: int, stochastic: bool,
         c2_out, a2_out = (next(it), next(it)) if two else (None, None)
 
         s = _scalars_dict(scal_ref[...])
+        if spec.needs_norms:
+            # Per-block trust ratio / local lr from the norm prologue;
+            # constant within a segment, broadcast over the block dim.
+            s["tensor_scale"] = ts_ref[...]
         g = g_ref[...].astype(jnp.float32) * s["gnorm_scale"]
         p = p_ref[...].astype(jnp.float32)
 
@@ -223,8 +260,13 @@ def _make_update_kernel(spec: AlgoSpec, rows: int, bsz: int, stochastic: bool,
         # ---- requantize (per-block absmax is a row reduction in VMEM) ----
         u1 = u2 = None
         if stochastic:
-            seed = seed_ref[0, 0].astype(jnp.uint32)
-            idx = common.element_indices(rows, bsz, pl.program_id(0) * rows)
+            # Per-block seed + leaf-local block offset (pooled dispatch):
+            # element index is offset*B + col inside the block's own leaf,
+            # so pooled and per-leaf rounding draw identical uniforms.
+            seed = seed_ref[...].astype(jnp.uint32)          # (rows, 1)
+            off = boff_ref[...].astype(jnp.uint32)           # (rows, 1)
+            col = jax.lax.broadcasted_iota(jnp.uint32, (rows, bsz), 1)
+            idx = off * jnp.uint32(bsz) + col
             u1 = common.hash_uniform(idx, seed + jnp.uint32(common.STATE1_SEED_SALT))
             if two:
                 u2 = common.hash_uniform(idx, seed + jnp.uint32(common.STATE2_SEED_SALT))
@@ -245,8 +287,11 @@ def _make_update_kernel(spec: AlgoSpec, rows: int, bsz: int, stochastic: bool,
 
 def _make_norm_kernel(spec: AlgoSpec, rows: int, bsz: int,
                       bits_m: int, bits_r: int):
-    """Norm prologue: per-grid-row partial squared norms, shape (1, 8) row
-    [||p||^2, ||g||^2, ||u||^2, 0...].  lars only needs p and g; lamb
+    """Norm prologue: per-**block** partial squared norms, one (rows, 8)
+    tile of rows [||p||^2, ||g||^2, ||u||^2, 0...] per grid step.  Block
+    granularity (not grid-row granularity) is what lets the XLA side
+    finalize the partials per *segment* under the pooled dispatch, where a
+    leaf boundary need not be tile-aligned.  lars only needs p and g; lamb
     re-derives the pre-trust update u from the dequantized states."""
 
     def kernel(*refs):
@@ -264,26 +309,27 @@ def _make_norm_kernel(spec: AlgoSpec, rows: int, bsz: int,
         s = _scalars_dict(scal_ref[...])
         g = g_ref[...].astype(jnp.float32) * s["gnorm_scale"]
         p = p_ref[...].astype(jnp.float32)
-        pn2 = jnp.sum(p * p)
-        gn2 = jnp.sum(g * g)
-        un2 = jnp.zeros((), jnp.float32)
+        pn2 = jnp.sum(p * p, axis=1)                      # (rows,)
+        gn2 = jnp.sum(g * g, axis=1)
+        un2 = jnp.zeros((rows,), jnp.float32)
         if spec.norm_kind == "lamb":
             m = common.decode(unpack_codes(c1_ref[...], bits_m),
                               qm1_ref[...], 1 << bits_m) * a1_ref[...]
             r = common.decode(unpack_codes(c2_ref[...], bits_r),
                               qm2_ref[...], 1 << bits_r) * a2_ref[...]
             _, _, u = adam_base_update(g, p, m, r, s)
-            un2 = jnp.sum(u * u)
-        zero = jnp.zeros((), jnp.float32)
+            un2 = jnp.sum(u * u, axis=1)
+        zero = jnp.zeros((rows,), jnp.float32)
         out_ref[...] = jnp.stack(
-            [pn2, gn2, un2, zero, zero, zero, zero, zero]).reshape(1, N_SCALARS)
+            [pn2, gn2, un2, zero, zero, zero, zero, zero], axis=1)
 
     return kernel
 
 
 # ------------------------------------------------------------- public entry
 @functools.partial(jax.jit, static_argnames=("algo", "rows", "stochastic",
-                                             "interpret", "bits_m", "bits_r"))
+                                             "interpret", "bits_m", "bits_r",
+                                             "segments"))
 def fused_update_pallas(
     p: jax.Array,                  # (n_blocks, B) f32 master params
     g: jax.Array,                  # (n_blocks, B) f32/bf16 grads
@@ -294,7 +340,8 @@ def fused_update_pallas(
     qmap_m: jax.Array,             # (2^bits_m,) state-1 codebook
     qmap_r: Optional[jax.Array],   # (2^bits_r,) state-2 codebook
     scalars: jax.Array,            # (N_SCALARS,) f32 (tensor_scale slot unused)
-    seed: jax.Array,               # () int32 stochastic-rounding seed
+    block_seeds: jax.Array,        # (n_blocks,) int32 per-block rounding seeds
+    block_offsets: jax.Array,      # (n_blocks,) int32 leaf-local block index
     *,
     algo: str,
     rows: int = common.DEFAULT_ROWS,
@@ -302,13 +349,20 @@ def fused_update_pallas(
     interpret: bool = True,
     bits_m: int = 8,
     bits_r: int = 8,
+    segments: tuple = (),          # ((block_offset, n_blocks), ...) static
 ) -> FusedUpdateResult:
     """One fused k-bit update for ``algo`` in the flat block domain.
 
     ``n_blocks`` must be a multiple of ``rows`` (ops.fused_update pads).
     ``scalars`` layout: [lr, beta1, beta2, eps, weight_decay, step,
-    gnorm_scale, trust_coeff]; the last slot is rewritten with the
-    tensor_scale finalized from the norm prologue (lamb/lars) or 1.0.
+    gnorm_scale, trust_coeff].  ``block_seeds`` / ``block_offsets`` give
+    every block its stochastic-rounding seed and its block index *within
+    its own leaf* — a constant seed plus ``arange`` offsets reproduce the
+    single-tensor behaviour; the pooled dispatch (DESIGN.md §10) passes one
+    seed per pooled leaf so pooled and per-leaf rounding are bit-identical.
+    ``segments`` lists the contiguous per-tensor block ranges the lamb/lars
+    norm prologue is finalized over (empty = one segment spanning the
+    input); blocks outside every segment get tensor_scale 1.0.
     Sub-byte state slots (``bits_m``/``bits_r`` < 8) stream bit-packed
     uint8 words and unpack/re-pack inside the kernel (DESIGN.md §9).
     """
@@ -321,6 +375,8 @@ def fused_update_pallas(
     if two:
         w2 = packed_width(bsz, bits_r)
         assert codes_r.shape == (n_blocks, w2), (codes_r.shape, n_blocks, w2)
+    if not segments:
+        segments = ((0, n_blocks),)
     grid = (n_blocks // rows,)
 
     row_spec = pl.BlockSpec((rows, bsz), lambda i: (i, 0))
@@ -335,6 +391,7 @@ def fused_update_pallas(
         qm2, b2 = common.padded_qmap(qmap_r), common.padded_bounds(qmap_r)
 
     scalars = scalars.astype(jnp.float32)
+    tscale_blocks = None
     if spec.needs_norms:
         norm_kernel = _make_norm_kernel(spec, rows, bsz, bits_m, bits_r)
         in_specs = [scal_spec]
@@ -351,24 +408,33 @@ def fused_update_pallas(
             norm_kernel,
             grid=grid,
             in_specs=in_specs,
-            out_specs=pl.BlockSpec((1, N_SCALARS), lambda i: (i, 0)),
-            out_shape=jax.ShapeDtypeStruct((grid[0], N_SCALARS), jnp.float32),
+            out_specs=pl.BlockSpec((rows, N_SCALARS), lambda i: (i, 0)),
+            out_shape=jax.ShapeDtypeStruct((n_blocks, N_SCALARS), jnp.float32),
             interpret=interpret,
         )(*args)
-        sums = jnp.sum(partials, axis=0)
-        tscale = tensor_scale_from_norms(
-            spec, sums[0], sums[1], sums[2],
-            weight_decay=scalars[4], trust_coeff=scalars[7])
-        scalars = scalars.at[7].set(tscale)
-    else:
-        scalars = scalars.at[7].set(1.0)
+        # Finalize per segment: a (nb_s,) sum per tensor, identical in
+        # shape (hence in f32 reduction order) to the per-leaf dispatch —
+        # the pooled/per-leaf trust-ratio bit-exactness contract.
+        def seg_scale(i, off, nb):
+            sums = jnp.sum(partials[off:off + nb], axis=0)
+            return tensor_scale_from_norms(
+                spec, sums[0], sums[1], sums[2],
+                weight_decay=scalars[4], trust_coeff=scalars[7])
+
+        tscale_blocks = segment_scale_vector(segments, n_blocks,
+                                             seg_scale)[:, None]
+    scalars = scalars.at[7].set(1.0)
 
     kernel = _make_update_kernel(spec, rows, bsz, stochastic, bits_m, bits_r)
     in_specs = [scal_spec]
     args = [scalars.reshape(1, N_SCALARS)]
     if stochastic:
-        in_specs += [pl.BlockSpec((1, N_SCALARS), lambda i: (0, 0))]
-        args += [jnp.full((1, N_SCALARS), seed, jnp.int32)]
+        in_specs += [one_spec, one_spec]
+        args += [block_seeds.astype(jnp.int32)[:, None],
+                 block_offsets.astype(jnp.int32)[:, None]]
+    if spec.needs_norms:
+        in_specs += [one_spec]
+        args += [tscale_blocks]
     in_specs += [const_spec, const_spec]
     args += [qm1, b1]
     if two:

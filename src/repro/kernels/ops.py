@@ -88,6 +88,21 @@ def dequantize_blockwise(codes, absmax, codebook, *, impl: str | None = None,
 # ----------------------------------------------------- fused-update registry
 _REGISTRY: dict[tuple[str, str], Callable] = {}
 
+# Dispatch counter: incremented once per fused_update() call.  Under jit the
+# count advances at trace time, so "calls recorded while tracing one train
+# step" == "fused launches baked into the compiled step" — what
+# benchmarks/bench_speed.py reports as launches_per_step for the pooled
+# dispatch (DESIGN.md §10).
+_FUSED_UPDATE_CALLS = [0]
+
+
+def reset_fused_update_count() -> None:
+    _FUSED_UPDATE_CALLS[0] = 0
+
+
+def fused_update_count() -> int:
+    return _FUSED_UPDATE_CALLS[0]
+
 
 def register(algo: str, impl: str, fn: Callable) -> None:
     """Register a fused-update backend under ``(algo, impl)``.  ``fn`` takes
@@ -104,7 +119,8 @@ def registered(algo: str | None = None) -> list[tuple[str, str]]:
 def _pallas_entry(algo: str, interpret: bool) -> Callable:
     def run(p, g, cm, am, cr, ar, qmap_m, qmap_r, *,
             lr, beta1, beta2, eps, weight_decay, step, trust_coeff,
-            gnorm_scale, stochastic, seed, rows, bits_m=8, bits_r=8):
+            gnorm_scale, stochastic, seed, rows, bits_m=8, bits_r=8,
+            block_seeds=None, block_offsets=None, segments=None):
         scalars = jnp.stack([
             jnp.asarray(lr, jnp.float32), jnp.asarray(beta1, jnp.float32),
             jnp.asarray(beta2, jnp.float32), jnp.asarray(eps, jnp.float32),
@@ -114,15 +130,24 @@ def _pallas_entry(algo: str, interpret: bool) -> Callable:
             jnp.asarray(trust_coeff, jnp.float32)])
         two = _fu.ALGO_SPECS[algo].n_states == 2
         nb = p.shape[0]
-        arrs = [p, g, cm, am] + ([cr, ar] if two else [])
+        # Single-tensor defaults: one segment, a shared seed, arange block
+        # offsets — bit-identical to the historical per-leaf behaviour.
+        if block_seeds is None:
+            block_seeds = jnp.broadcast_to(
+                jnp.asarray(seed, jnp.int32), (nb,))
+        if block_offsets is None:
+            block_offsets = jnp.arange(nb, dtype=jnp.int32)
+        segments = tuple(segments) if segments else ((0, nb),)
+        arrs = [p, g, cm, am, block_seeds, block_offsets] \
+            + ([cr, ar] if two else [])
         arrs, _ = _pad_rows(arrs, nb, rows)
-        p, g, cm, am = arrs[:4]
-        cr, ar = (arrs[4], arrs[5]) if two else (None, None)
+        p, g, cm, am, block_seeds, block_offsets = arrs[:6]
+        cr, ar = (arrs[6], arrs[7]) if two else (None, None)
         res = _fu.fused_update_pallas(
             p, g, cm, am, cr, ar, qmap_m, qmap_r if two else None, scalars,
-            jnp.asarray(seed, jnp.int32), algo=algo, rows=rows,
+            block_seeds, block_offsets, algo=algo, rows=rows,
             stochastic=stochastic, interpret=interpret,
-            bits_m=bits_m, bits_r=bits_r)
+            bits_m=bits_m, bits_r=bits_r, segments=segments)
         return _fu.FusedUpdateResult(
             res.p[:nb], res.codes_m[:nb], res.absmax_m[:nb],
             res.codes_r[:nb] if two else None,
@@ -164,6 +189,9 @@ def fused_update(
     blockwise: bool = True,
     stochastic: bool = False,
     seed=0,
+    block_seeds=None,
+    block_offsets=None,
+    segments=None,
     impl: Optional[str] = None,
     rows: int = DEFAULT_ROWS,
 ) -> _fu.FusedUpdateResult:
@@ -175,11 +203,21 @@ def fused_update(
     served by the "jnp" entry regardless of ``impl``.  ``codes_m`` /
     ``codes_r`` may be plain uint8 arrays (8-bit states) or
     :class:`~repro.core.lowbit.PackedCodes` (sub-byte states); results come
-    back in the same container type.  Returns a
+    back in the same container type.
+
+    Pooled dispatch (DESIGN.md §10): when the input concatenates several
+    logical tensors, pass ``block_seeds`` (per-block int32 rounding seeds —
+    each leaf's seed repeated over its blocks), ``block_offsets``
+    (per-block int32 index of each block *within its leaf*) and static
+    ``segments`` (contiguous ``(block_offset, n_blocks)`` per-tensor
+    ranges, used by the lamb/lars per-tensor norm finalization).  Left at
+    None they default to the single-tensor interpretation (shared ``seed``,
+    ``arange`` offsets, one segment).  Returns a
     :class:`~repro.kernels.fused_update.FusedUpdateResult` whose
     codes_r/absmax_r are None for one-state algorithms.
     """
     impl = impl or default_impl()
+    _FUSED_UPDATE_CALLS[0] += 1
     if not blockwise:
         impl = "jnp"
     fn = _REGISTRY.get((algo, impl))
@@ -206,7 +244,9 @@ def fused_update(
                  weight_decay=weight_decay, step=step,
                  trust_coeff=trust_coeff, gnorm_scale=gnorm_scale,
                  stochastic=stochastic, seed=seed, rows=rows,
-                 bits_m=bits_m, bits_r=bits_r)
+                 bits_m=bits_m, bits_r=bits_r,
+                 block_seeds=block_seeds, block_offsets=block_offsets,
+                 segments=None if segments is None else tuple(segments))
     if impl == "jnp":
         hyper["blockwise"] = blockwise
     res = fn(p, g, codes_m, absmax_m, codes_r, absmax_r, qmap_m, qmap_r,

@@ -83,9 +83,19 @@ def fused_update_ref(
     blockwise: bool = True,
     stochastic: bool = False,
     seed=0,
+    block_seeds=None,
+    block_offsets=None,
+    segments=None,
 ) -> fu.FusedUpdateResult:
     """The paper's §2 procedure (dequantize -> 32-bit update -> requantize)
-    for any of the six algorithms, as straight-line XLA ops."""
+    for any of the six algorithms, as straight-line XLA ops.
+
+    ``block_seeds`` / ``block_offsets`` / ``segments`` carry the pooled
+    dispatch's per-leaf identity (see ``ops.fused_update``); None keeps the
+    single-tensor behaviour.  Per-segment trust ratios are computed on
+    static slices so each segment's reduction has exactly the shape the
+    per-leaf call would use — pooled and per-leaf results stay bit-exact.
+    """
     spec = fu.ALGO_SPECS[algo]
     two = spec.n_states == 2
     p = p.astype(jnp.float32)
@@ -101,15 +111,32 @@ def fused_update_ref(
     m = dequantize_ref(codes_m, absmax_m, qmap_m)
     r = dequantize_ref(codes_r, absmax_r, qmap_r) if two else None
 
-    s["tensor_scale"] = fu.tensor_scale_for(
-        spec, g, p, m, r, s, jnp.asarray(trust_coeff, jnp.float32))
+    tc = jnp.asarray(trust_coeff, jnp.float32)
+    if spec.needs_norms and segments:
+        def seg_scale(i, off, nb):
+            sl = slice(off, off + nb)
+            return fu.tensor_scale_for(spec, g[sl], p[sl], m[sl],
+                                       r[sl] if two else None, s, tc)
+
+        s["tensor_scale"] = fu.segment_scale_vector(
+            segments, p.shape[0], seg_scale)[:, None]
+    else:
+        s["tensor_scale"] = fu.tensor_scale_for(spec, g, p, m, r, s, tc)
 
     m2, r2, p2 = fu.update_math(spec, g, p, m, r, s)
 
     u1 = u2 = None
     if stochastic:
-        seed = jnp.asarray(seed, jnp.int32).astype(jnp.uint32)
-        idx = common.element_indices(*codes_m.shape, 0)
+        if block_seeds is None:
+            seed = jnp.asarray(seed, jnp.int32).astype(jnp.uint32)
+            idx = common.element_indices(*codes_m.shape, 0)
+        else:
+            nb_, bsz = codes_m.shape
+            offs = (jnp.arange(nb_, dtype=jnp.uint32) if block_offsets is None
+                    else block_offsets.astype(jnp.uint32))
+            col = jax.lax.broadcasted_iota(jnp.uint32, (nb_, bsz), 1)
+            idx = offs[:, None] * jnp.uint32(bsz) + col
+            seed = block_seeds.astype(jnp.uint32)[:, None]
         u1 = common.hash_uniform(idx, seed + jnp.uint32(common.STATE1_SEED_SALT))
         if two:
             u2 = common.hash_uniform(idx, seed + jnp.uint32(common.STATE2_SEED_SALT))

@@ -48,7 +48,19 @@ class ServeEngine:
         """prompts: (B, P) int32 (right-aligned, equal length for the batch
         bucket). Returns (B, max_new_tokens) int32."""
         B, P = prompts.shape
-        assert P + max_new_tokens <= self.scfg.max_len
+        if max_new_tokens < 0:
+            raise ValueError(f"max_new_tokens must be >= 0, got "
+                             f"{max_new_tokens}")
+        # A bare assert vanishes under `python -O`; capacity overrun must
+        # fail loudly with the offending lengths either way.
+        if P + max_new_tokens > self.scfg.max_len:
+            raise ValueError(
+                f"prompt length {P} + max_new_tokens {max_new_tokens} "
+                f"exceeds max_len {self.scfg.max_len}")
+        if max_new_tokens == 0:
+            # the prefill-sampled token belongs to position P; emitting it
+            # would return shape (B, 1) for a 0-token request
+            return np.zeros((B, 0), np.int32)
         key = jax.random.PRNGKey(self.scfg.seed)
         logits, caches = self._prefill(self.params, jnp.asarray(prompts))
         out = []

@@ -17,6 +17,10 @@ per device); Full32Leaf mirrors the param's spec.  Bit-packed sub-byte codes
 (``PackedCodes``, DESIGN.md §9) shard the *block-count* axis (dim 0) exactly
 like plain codes — never the byte axis, whose width is a per-block packing
 detail — so k-bit states inherit the whole-blocks-per-device guarantee.
+The pooled dispatch's ``QuantArena`` (DESIGN.md §10) is that same flat
+block domain with every quantized leaf concatenated, and shards
+identically (block dim over all axes); pooled masters keep the param spec
+and the fp32 small-leaf pool (``Pool32Arena``) is replicated.
 """
 from __future__ import annotations
 
@@ -30,7 +34,8 @@ from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro.core.lowbit import PackedCodes
-from repro.core.optim.base import Full32Leaf, Quant8Leaf
+from repro.core.optim.base import (Full32Leaf, Pool32Arena, Pool32Leaf,
+                                   PooledQuantLeaf, Quant8Leaf, QuantArena)
 from repro.core.optim.adafactor import AdafactorLeaf
 
 Pytree = Any
@@ -157,6 +162,12 @@ def opt_state_shardings(abstract_opt_state, param_shard_tree, mesh: Mesh,
                               else code_sharding(st.codes_r),
                               absmax_r=None if st.absmax_r is None else vec,
                               shape=st.shape, n=st.n)
+        if isinstance(st, PooledQuantLeaf):
+            # pooled dispatch (DESIGN.md §10): only the param-shaped master
+            # lives per leaf; the arena is sharded below.
+            return dataclasses.replace(st, master=pshard)
+        if isinstance(st, Pool32Leaf):
+            return st                      # no arrays; Pool32Arena below
         if isinstance(st, Full32Leaf):
             return Full32Leaf(master=pshard, m=pshard,
                               r=None if st.r is None else pshard)
@@ -172,13 +183,33 @@ def opt_state_shardings(abstract_opt_state, param_shard_tree, mesh: Mesh,
                 v_full=None if st.v_full is None else pshard)
         raise TypeError(type(st))
 
-    is_state_leaf = lambda x: isinstance(x, (Quant8Leaf, Full32Leaf, AdafactorLeaf))
+    is_state_leaf = lambda x: isinstance(
+        x, (Quant8Leaf, Full32Leaf, PooledQuantLeaf, Pool32Leaf,
+            AdafactorLeaf))
     leaves = jax.tree_util.tree_map(leaf, abstract_opt_state.leaves,
                                     param_shard_tree, is_leaf=is_state_leaf)
     extra = {}
     if getattr(abstract_opt_state, "gnorm_vec", None) is not None:
         # percentile-clipping gnorm history: tiny, replicated everywhere
         extra["gnorm_vec"] = rep
+    arena = getattr(abstract_opt_state, "arena", None)
+    if arena is not None:
+        # the arena is the flat block domain itself: block dim over ALL
+        # mesh axes, exactly like per-leaf codes (total_blocks is a sum of
+        # per-leaf shard_multiple-padded counts, so it divides evenly)
+        extra["arena"] = QuantArena(
+            codes_m=code_sharding(arena.codes_m), absmax_m=vec,
+            codes_r=None if arena.codes_r is None
+            else code_sharding(arena.codes_r),
+            absmax_r=None if arena.absmax_r is None else vec,
+            segments=arena.segments)
+    pool32 = getattr(abstract_opt_state, "pool32", None)
+    if pool32 is not None:
+        # pooled small leaves: tiny by construction, replicated like the
+        # per-leaf Full32 small leaves they replace
+        extra["pool32"] = Pool32Arena(
+            master=rep, m=rep, r=None if pool32.r is None else rep,
+            segments=pool32.segments)
     return type(abstract_opt_state)(step=rep, leaves=leaves, **extra)
 
 

@@ -28,6 +28,13 @@ format (a 4-bit checkpoint cannot silently load as 5-bit — same byte
 count, different codes) and re-wraps the array.  Because packing is a
 per-block layout detail and the full logical array is stored, packed
 leaves stay elastic: the same checkpoint restores onto any mesh.
+
+Pooled optimizer states (``OptimConfig.pooled``, DESIGN.md §10) are stored
+**per-leaf**: ``save`` slices every arena back into the per-leaf canonical
+layout (``blockopt.unpool_state``) before writing, and ``restore``
+reassembles arenas to match the template (``blockopt.repool_like``).  The
+on-disk format is therefore independent of the pooling flag — per-leaf
+checkpoints restore into pooled states and vice versa, on any mesh.
 """
 from __future__ import annotations
 
@@ -49,6 +56,39 @@ def _is_packed(x) -> bool:
     return isinstance(x, PackedCodes)
 
 
+def _canonical(tree: Pytree) -> Pytree:
+    """Per-leaf canonical view of every OptState in the tree (identity for
+    trees without pooled optimizer states)."""
+    from repro.core.optim import blockopt
+    return blockopt.map_opt_states(tree, blockopt.unpool_state)
+
+
+def _repool(tree: Pytree, template: Pytree) -> Pytree:
+    """Reassemble pooled arenas to match ``template`` (identity when the
+    template has no pooled optimizer states)."""
+    from repro.core.optim import blockopt
+    return blockopt.zip_opt_states(tree, template, blockopt.repool_like)
+
+
+def _check_no_orphan_pooled(tree: Pytree) -> None:
+    """Pooled containers outside an OptState cannot be canonicalized (the
+    arena and its per-leaf nodes live on sibling OptState fields), so e.g.
+    saving ``state.leaves`` alone would silently drop every quantized
+    statistic.  Fail loudly instead."""
+    from repro.core.optim import base as optim_base
+    pooled = (optim_base.PooledQuantLeaf, optim_base.Pool32Leaf,
+              optim_base.QuantArena, optim_base.Pool32Arena)
+    flat = jax.tree_util.tree_flatten_with_path(
+        tree, is_leaf=lambda x: _is_packed(x) or isinstance(x, pooled))[0]
+    bad = [jax.tree_util.keystr(p) for p, l in flat if isinstance(l, pooled)]
+    if bad:
+        raise ValueError(
+            f"cannot checkpoint pooled optimizer containers outside their "
+            f"OptState (their arena/per-leaf halves live on sibling "
+            f"fields): {bad[:5]}{'...' if len(bad) > 5 else ''} — save the "
+            f"whole OptState (or unpool_state it) instead")
+
+
 def _leaf_paths(tree) -> list[tuple[str, Any]]:
     flat = jax.tree_util.tree_flatten_with_path(tree, is_leaf=_is_packed)[0]
     out = []
@@ -60,6 +100,8 @@ def _leaf_paths(tree) -> list[tuple[str, Any]]:
 
 def save(ckpt_dir: str, step: int, tree: Pytree, *, keep_last: int = 3) -> str:
     """Atomically write checkpoint for ``step``. Returns the final path."""
+    tree = _canonical(tree)
+    _check_no_orphan_pooled(tree)
     os.makedirs(ckpt_dir, exist_ok=True)
     final = os.path.join(ckpt_dir, f"step_{step:010d}")
     tmp = tempfile.mkdtemp(dir=ckpt_dir, prefix=".tmp_")
@@ -120,7 +162,10 @@ def restore(ckpt_dir: str, step: int, template: Pytree,
             shardings: Optional[Pytree] = None) -> Pytree:
     """Load ``step`` into the structure of ``template`` (values ignored; may
     be ShapeDtypeStructs from jax.eval_shape).  ``shardings``: optional
-    matching tree of jax.sharding.Sharding for elastic placement."""
+    tree of jax.sharding.Sharding matching ``template`` for elastic
+    placement; ``None`` entries (at any leaf) mean default placement, and a
+    shardings tree whose structure does not match the template is an
+    error."""
     path = os.path.join(ckpt_dir, f"step_{step:010d}")
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)
@@ -130,12 +175,14 @@ def restore(ckpt_dir: str, step: int, template: Pytree,
         by_key[ent["key"]] = None if ent.get("none") else data[ent["name"]]
         meta_by_key[ent["key"]] = ent
 
+    # Checkpoints are stored in the per-leaf canonical layout; load into
+    # the per-leaf view of the template, then repool to its real layout.
+    pl_template = _canonical(template)
+    _check_no_orphan_pooled(pl_template)
     flat, treedef = jax.tree_util.tree_flatten_with_path(
-        template, is_leaf=_is_packed)
-    shard_flat = (jax.tree_util.tree_leaves(shardings)
-                  if shardings is not None else [None] * len(flat))
+        pl_template, is_leaf=_is_packed)
     leaves = []
-    for (p, tmpl), shd in zip(flat, shard_flat):
+    for p, tmpl in flat:
         key = jax.tree_util.keystr(p)
         if key not in by_key:
             raise KeyError(f"checkpoint missing leaf {key}")
@@ -167,8 +214,25 @@ def restore(ckpt_dir: str, step: int, template: Pytree,
         if want is not None and tuple(arr.shape) != want:
             raise ValueError(f"{key}: checkpoint shape {arr.shape} != "
                              f"template {want}")
-        arr = jax.device_put(arr, shd) if shd is not None else jax.device_put(arr)
         if packed_tmpl is not None:
             arr = PackedCodes(arr, packed_tmpl.bits, packed_tmpl.n_codes)
         leaves.append(arr)
-    return jax.tree_util.tree_unflatten(treedef, leaves)
+    tree = jax.tree_util.tree_unflatten(treedef, leaves)
+    tree = _repool(tree, template)
+    if shardings is None:
+        return jax.device_put(tree)
+
+    # Flatten the shardings with the *output* treedef (is_leaf aware and
+    # None-preserving): tree_leaves(shardings) would silently drop None
+    # entries and mis-zip everything after the first one.
+    out_flat, out_treedef = jax.tree_util.tree_flatten(tree,
+                                                       is_leaf=_is_packed)
+    try:
+        shard_flat = out_treedef.flatten_up_to(shardings)
+    except ValueError as e:
+        raise ValueError(
+            f"shardings tree structure does not match the restore "
+            f"template: {e}") from e
+    placed = [jax.device_put(x) if shd is None else jax.device_put(x, shd)
+              for x, shd in zip(out_flat, shard_flat)]
+    return jax.tree_util.tree_unflatten(out_treedef, placed)

@@ -25,9 +25,12 @@ class TrainState(NamedTuple):
 
     ``opt_state`` also carries the optimizer's auxiliary state: the
     percentile-clipping gnorm history (``OptState.gnorm_vec``) rides here
-    and therefore checkpoints/restores with everything else; stochastic-
-    rounding seeds are derived from ``opt_state.step`` inside the optimizer,
-    so a restore replays identical rounding — no RNG state to persist."""
+    and therefore checkpoints/restores with everything else, as do the
+    pooled-dispatch arenas (``OptState.arena`` / ``pool32``, DESIGN.md
+    §10 — checkpointed per-leaf, so pooled and per-leaf runs share
+    checkpoints); stochastic-rounding seeds are derived from
+    ``opt_state.step`` inside the optimizer, so a restore replays
+    identical rounding — no RNG state to persist."""
     opt_state: Any            # optimizer-owned (master, 8-bit stats, gnorms)
     step: jax.Array           # int32
 
@@ -151,9 +154,17 @@ def make_train_step(cfg, optimizer, hyper: TrainHyper = TrainHyper(),
         loss, mx, grads = compute_grads(params, batch)
         grads, gnorm = clip_by_global_norm(grads, hyper.grad_clip)
         lr = hyper.lr_schedule(state.step) if hyper.lr_schedule else None
+        from repro.kernels import ops as kops
+        dispatch0 = kops.fused_update_count()
         _, new_opt = optimizer.apply(grads, state.opt_state, lr=lr,
                                      param_dtype=param_dtype)
         metrics = {"loss": loss, "grad_norm": gnorm, **mx}
+        # Counted at trace time => a constant under jit: how many fused
+        # optimizer dispatches the compiled step bakes in.  1 per state-
+        # format arena with the pooled dispatch (DESIGN.md §10), O(#leaves)
+        # per-leaf, 0 for 32-bit engines.
+        metrics["opt_fused_dispatches"] = jnp.float32(
+            kops.fused_update_count() - dispatch0)
         if hasattr(optimizer, "state_bytes"):
             # Static-shape accounting (constant under jit): the *measured*
             # optimizer-statistics bytes per parameter, so k-bit memory

@@ -1,0 +1,10 @@
+"""Force 2 host CPU devices so mesh-placement tests (elastic restore,
+pooled<->per-leaf checkpoint interchange) exercise a real 2-device mesh.
+Must run before jax initializes its backends — conftest import time is the
+only reliable hook."""
+import os
+
+_flags = os.environ.get("XLA_FLAGS", "")
+if "xla_force_host_platform_device_count" not in _flags:
+    os.environ["XLA_FLAGS"] = (
+        _flags + " --xla_force_host_platform_device_count=2").strip()

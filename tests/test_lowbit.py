@@ -14,7 +14,7 @@ from repro.core import qmap
 from repro.core.lowbit import (SUPPORTED_BITS, CodeFormat, PackedCodes,
                                pack_codes, packed_width, unpack_codes)
 from repro.core.optim import (Full32Leaf, OptimConfig, Quant8Leaf,
-                              make_optimizer)
+                              make_optimizer, unpool_state)
 from repro.kernels import ops, ref
 
 
@@ -185,7 +185,9 @@ def test_state_bits_containers_and_bytes():
     opt4 = make_optimizer("adam8", lr=1e-3, min_8bit_size=1024,
                           override_32bit=lambda p: False, state_bits=(4, 8))
     st8, st4 = opt8.init(_params()), opt4.init(_params())
-    leaf = st4.leaves["dense"]["w"]
+    assert isinstance(st4.arena.codes_m, PackedCodes)
+    assert st4.arena.codes_m.bits == 4
+    leaf = unpool_state(st4).leaves["dense"]["w"]
     assert isinstance(leaf, Quant8Leaf)
     assert isinstance(leaf.codes_m, PackedCodes) and leaf.codes_m.bits == 4
     assert not isinstance(leaf.codes_r, PackedCodes)  # 8-bit slot unchanged
@@ -215,7 +217,8 @@ def test_min_quantized_size_canonical_name():
     the legacy min_8bit_size keeps working as an alias."""
     opt = make_optimizer("adam8", lr=1e-3, min_quantized_size=32,
                          override_32bit=lambda p: False)
-    st = opt.init({"big": jnp.zeros((64,)), "small": jnp.zeros((8,))})
+    st = unpool_state(opt.init({"big": jnp.zeros((64,)),
+                                "small": jnp.zeros((8,))}))
     assert isinstance(st.leaves["big"], Quant8Leaf)
     assert isinstance(st.leaves["small"], Full32Leaf)
     # canonical name wins over the alias
@@ -294,8 +297,8 @@ def test_checkpoint_packed_roundtrip_elastic(tmp_path):
     sh = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
     shardings = jax.tree_util.tree_map(lambda x: sh, st)
     st_b = C.restore(d, 3, jax.eval_shape(lambda s: s, st), shardings)
-    leaf_b = st_b.leaves["w"]
-    assert isinstance(leaf_b.codes_m, PackedCodes)
+    assert isinstance(st_b.arena.codes_m, PackedCodes)
+    assert isinstance(unpool_state(st_b).leaves["w"].codes_m, PackedCodes)
     for a, b in zip(jax.tree_util.tree_leaves(st),
                     jax.tree_util.tree_leaves(st_b)):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
@@ -346,7 +349,7 @@ def test_opt_state_shardings_packed_block_axis():
         mesh, jax.sharding.PartitionSpec())}
     shd = rules.opt_state_shardings(abstract, pshard, mesh,
                                     rules.ShardingPolicy())
-    codes_shd = shd.leaves["w"].codes_m
+    codes_shd = shd.arena.codes_m
     assert isinstance(codes_shd, PackedCodes)
     spec = codes_shd.packed.spec
     assert spec[0] == ("data", "model")
@@ -354,5 +357,5 @@ def test_opt_state_shardings_packed_block_axis():
     # structure mirrors the state: device_put works leafwise
     st_placed = jax.device_put(st, shd)
     np.testing.assert_array_equal(
-        np.asarray(st_placed.leaves["w"].codes_m.packed),
-        np.asarray(st.leaves["w"].codes_m.packed))
+        np.asarray(st_placed.arena.codes_m.packed),
+        np.asarray(st.arena.codes_m.packed))

@@ -8,7 +8,8 @@ import numpy as np
 import pytest
 
 from repro.core.optim import (Block8bitOptimizer, Full32Leaf, OptimConfig,
-                              Quant8Leaf, make_optimizer)
+                              Pool32Leaf, PooledQuantLeaf, Quant8Leaf,
+                              make_optimizer, unpool_state)
 
 
 def _params(key=0):
@@ -61,12 +62,26 @@ def test_all_optimizers_decrease_loss(name):
 
 
 def test_stable_embedding_override_is_32bit():
-    """Paper §2.3: embedding leaves keep 32-bit optimizer state."""
+    """Paper §2.3: embedding leaves keep 32-bit optimizer state.  Under the
+    pooled dispatch the quantized leaf is a PooledQuantLeaf (arena slice)
+    and the small leaf pools into the fp32 arena; the per-leaf canonical
+    view recovers the classic containers."""
     opt = make_optimizer("adam8", lr=1e-3, min_8bit_size=1024)
     st = opt.init(_params())
     assert isinstance(st.leaves["embed"]["w"], Full32Leaf)
-    assert isinstance(st.leaves["dense"]["w"], Quant8Leaf)
-    assert isinstance(st.leaves["bias"], Full32Leaf)   # < min_8bit_size
+    assert isinstance(st.leaves["dense"]["w"], PooledQuantLeaf)
+    assert isinstance(st.leaves["bias"], Pool32Leaf)   # < min_8bit_size
+    view = unpool_state(st)
+    assert isinstance(view.leaves["embed"]["w"], Full32Leaf)
+    assert isinstance(view.leaves["dense"]["w"], Quant8Leaf)
+    assert isinstance(view.leaves["bias"], Full32Leaf)
+    # ...and the per-leaf dispatch (the parity oracle) keeps them directly
+    opt_pl = make_optimizer("adam8", lr=1e-3, min_8bit_size=1024,
+                            pooled=False)
+    st_pl = opt_pl.init(_params())
+    assert isinstance(st_pl.leaves["embed"]["w"], Full32Leaf)
+    assert isinstance(st_pl.leaves["dense"]["w"], Quant8Leaf)
+    assert isinstance(st_pl.leaves["bias"], Full32Leaf)
 
 
 def test_memory_accounting():
@@ -125,8 +140,9 @@ def test_shard_multiple_pads_blocks():
     opt = make_optimizer("adam8", lr=1e-3, min_8bit_size=1,
                          override_32bit=lambda p: False, shard_multiple=16)
     st = opt.init({"w": jnp.zeros((5000,))})
-    leaf = st.leaves["w"]
-    assert leaf.codes_m.shape[0] % 16 == 0
+    assert st.arena.codes_m.shape[0] % 16 == 0
+    assert all(s.n_blocks % 16 == 0 for s in st.arena.segments)
+    assert unpool_state(st).leaves["w"].codes_m.shape[0] % 16 == 0
 
 
 def test_stochastic_rounding_needs_no_key():
@@ -140,13 +156,10 @@ def test_stochastic_rounding_needs_no_key():
     g = jax.grad(lambda p: _loss(p, target))(params)
     p1, st1 = opt.apply(g, st)
     p1b, st1b = opt.apply(g, st)          # same step -> same seed -> same codes
-    np.testing.assert_array_equal(
-        np.asarray(st1.leaves["dense"]["w"].codes_m),
-        np.asarray(st1b.leaves["dense"]["w"].codes_m))
+    codes = lambda s: np.asarray(unpool_state(s).leaves["dense"]["w"].codes_m)
+    np.testing.assert_array_equal(codes(st1), codes(st1b))
     _, st2 = opt.apply(g, st1)            # next step -> different rounding
-    assert not np.array_equal(
-        np.asarray(st1.leaves["dense"]["w"].codes_m),
-        np.asarray(st2.leaves["dense"]["w"].codes_m))
+    assert not np.array_equal(codes(st1), codes(st2))
 
 
 def test_percentile_clipping_state_and_scale():
@@ -203,7 +216,8 @@ def test_adagrad_single_state():
     opt = make_optimizer("adagrad8", lr=1e-2, min_8bit_size=1024,
                          override_32bit=lambda p: False)
     st = opt.init(_params())
-    leaf = st.leaves["dense"]["w"]
+    assert st.arena.codes_r is None and st.arena.absmax_r is None
+    leaf = unpool_state(st).leaves["dense"]["w"]
     assert leaf.codes_r is None and leaf.absmax_r is None
 
 

@@ -1,0 +1,322 @@
+"""Pooled single-dispatch optimizer step (DESIGN.md §10).
+
+The contract under test: `cfg.pooled` changes the *dispatch* (one fused
+launch per state-format arena instead of one per leaf) and nothing else —
+codes, absmax, masters, params, stochastic rounding and LAMB/LARS
+trust ratios are bit-identical to the per-leaf parity oracle, launches per
+step collapse to <= 2 per state-format group, and checkpoints interchange
+with per-leaf runs in both directions on a real mesh.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import qmap
+from repro.core.optim import (Pool32Leaf, PooledQuantLeaf, Quant8Leaf,
+                              make_optimizer, unpool_state)
+from repro.kernels import ops, ref
+from repro.train import checkpoint as C
+
+
+def _params(key=0):
+    """Several quantized leaves + an override leaf + small pooled leaves."""
+    k = jax.random.PRNGKey(key)
+    ks = jax.random.split(k, 5)
+    return {
+        "dense": {"w": jax.random.normal(ks[0], (64, 128)),
+                  "v": jax.random.normal(ks[1], (48, 64))},
+        "out": jax.random.normal(ks[2], (96, 32)),
+        "embed": {"w": jax.random.normal(ks[3], (128, 64))},   # override
+        "bias": jnp.zeros((10,)),                              # pooled fp32
+        "small": jax.random.normal(ks[4], (17,)) * 0.1,        # pooled fp32
+    }
+
+
+def _loss(p, target):
+    return sum(jnp.sum((a - b) ** 2)
+               for a, b in zip(jax.tree_util.tree_leaves(p),
+                               jax.tree_util.tree_leaves(target)))
+
+
+def _train(opt, params, steps=3):
+    target = jax.tree_util.tree_map(lambda p: jnp.ones_like(p) * 0.5, params)
+    grad = jax.jit(jax.grad(lambda p: _loss(p, target)))
+    st = opt.init(params)
+    p = params
+    for _ in range(steps):
+        p, st = opt.apply(grad(p), st)
+    return p, st
+
+
+def _assert_trees_equal(a, b, msg=""):
+    la = jax.tree_util.tree_leaves(a)
+    lb = jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb), msg
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=msg)
+
+
+# ----------------------------------------------------- engine bit-exactness
+@pytest.mark.parametrize("algo", ["adam", "adamw", "momentum", "lamb",
+                                  "lars", "adagrad"])
+def test_pooled_matches_per_leaf_bit_exact(algo):
+    """Pooled apply == per-leaf apply, bitwise: codes, absmax, master,
+    params — incl. stochastic rounding (per-block seed offsets) and
+    LAMB/LARS per-tensor trust ratios (segment norm prologue)."""
+    kw = dict(lr=1e-2, min_8bit_size=1024, stochastic_rounding=True)
+    p_a, st_a = _train(make_optimizer(f"{algo}8", pooled=True, **kw),
+                       _params())
+    p_b, st_b = _train(make_optimizer(f"{algo}8", pooled=False, **kw),
+                       _params())
+    assert st_a.arena is not None and st_a.pool32 is not None
+    _assert_trees_equal(p_a, p_b, f"{algo}: params")
+    _assert_trees_equal(unpool_state(st_a).leaves, st_b.leaves,
+                        f"{algo}: state")
+
+
+def test_pooled_matches_per_leaf_packed_and_clipping():
+    """Same contract with packed (4, 8) states and percentile clipping."""
+    kw = dict(lr=1e-2, min_8bit_size=1024, state_bits=(4, 8),
+              stochastic_rounding=True, percentile_clipping=50,
+              pclip_history=3)
+    p_a, st_a = _train(make_optimizer("adam8", pooled=True, **kw),
+                       _params(), steps=5)
+    p_b, st_b = _train(make_optimizer("adam8", pooled=False, **kw),
+                       _params(), steps=5)
+    _assert_trees_equal(p_a, p_b, "params")
+    _assert_trees_equal(unpool_state(st_a).leaves, st_b.leaves, "state")
+    _assert_trees_equal(st_a.gnorm_vec, st_b.gnorm_vec, "gnorm history")
+
+
+def test_pooled_layout_and_views():
+    opt = make_optimizer("adam8", lr=1e-2, min_8bit_size=1024)
+    params = _params()
+    st = opt.init(params)
+    kinds = {type(l).__name__
+             for l in jax.tree_util.tree_leaves(
+                 st.leaves, is_leaf=lambda x: isinstance(
+                     x, (Quant8Leaf, PooledQuantLeaf, Pool32Leaf)) or
+                 hasattr(x, "master"))}
+    assert "PooledQuantLeaf" in kinds and "Pool32Leaf" in kinds
+    # arena covers exactly the quantized leaves, in offset order
+    segs = st.arena.segments
+    assert [s.offset for s in segs] == sorted(s.offset for s in segs)
+    assert st.arena.codes_m.shape[0] == sum(s.n_blocks for s in segs)
+    # params_view reproduces the inputs
+    view = opt.params_view(st)
+    for a, b in zip(jax.tree_util.tree_leaves(view),
+                    jax.tree_util.tree_leaves(params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-7)
+    # memory accounting matches the per-leaf layout exactly
+    b_pooled = opt.state_bytes(st)
+    opt_pl = make_optimizer("adam8", lr=1e-2, min_8bit_size=1024,
+                            pooled=False)
+    assert b_pooled == opt_pl.state_bytes(opt_pl.init(params))
+
+
+def test_tensorwise_ablation_falls_back_to_per_leaf():
+    """Tensor-wise quantization needs a per-*tensor* absmax, which one
+    arena cannot represent: pooling must deactivate, not mis-quantize."""
+    opt = make_optimizer("adam8", lr=1e-2, min_8bit_size=1024,
+                         blockwise_norm=False)   # pooled left at default
+    assert not opt.cfg.pooling_active
+    st = opt.init(_params())
+    assert st.arena is None and st.pool32 is None
+    assert isinstance(st.leaves["dense"]["w"], Quant8Leaf)
+
+
+# ------------------------------------------------------- launches per step
+def test_pooled_single_dispatch_launch_count():
+    """Pooled apply issues ONE fused_update per state-format arena; the
+    per-leaf oracle issues one per quantized leaf."""
+    params = _params()
+    target = jax.tree_util.tree_map(lambda p: jnp.ones_like(p) * 0.5, params)
+    grad = jax.grad(lambda p: _loss(p, target))(params)
+
+    def calls(pooled):
+        opt = make_optimizer("adam8", lr=1e-2, min_8bit_size=1024,
+                             pooled=pooled)
+        st = opt.init(params)
+        ops.reset_fused_update_count()
+        jax.jit(lambda g, s: opt.apply(g, s)).lower(grad, st)  # trace only
+        return ops.fused_update_count()
+
+    n_quant = 3   # dense/w, dense/v, out
+    assert calls(False) == n_quant
+    assert calls(True) == 1
+
+
+# ------------------------------------------------- kernel-level pooled call
+def test_fused_update_segments_match_separate_calls_interpret():
+    """ops.fused_update on a concatenated input with per-block seeds /
+    offsets / segments == separate per-tensor calls, bitwise, through the
+    Pallas (interpret) kernels — stochastic rounding + LAMB prologue."""
+    qs = jnp.asarray(qmap.get_qmap("dynamic", True))
+    qu = jnp.asarray(qmap.get_qmap("dynamic", False))
+    hyper = dict(lr=1e-3, weight_decay=0.01, step=5.0, trust_coeff=1e-3)
+
+    def inputs(nb, seed):
+        k = jax.random.PRNGKey(seed)
+        ks = jax.random.split(k, 4)
+        p = jax.random.normal(ks[0], (nb, 256))
+        g = jax.random.normal(ks[1], (nb, 256)) * 0.1
+        cm, am = ref.quantize_ref(jax.random.normal(ks[2], (nb, 256)) * 0.01, qs)
+        cr, ar = ref.quantize_ref(
+            jnp.abs(jax.random.normal(ks[3], (nb, 256))) * 1e-4, qu)
+        return p, g, cm, am, cr, ar
+
+    a, b = inputs(5, 0), inputs(11, 1)
+    seeds = (17, 99)
+    sep = [ops.fused_update("lamb", *x, qs, qu, impl="interpret",
+                            stochastic=True, seed=s, **hyper)
+           for x, s in zip((a, b), seeds)]
+    cat = [jnp.concatenate([x, y]) for x, y in zip(a, b)]
+    pooled = ops.fused_update(
+        "lamb", *cat, qs, qu, impl="interpret", stochastic=True,
+        block_seeds=jnp.concatenate([jnp.full((5,), seeds[0], jnp.int32),
+                                     jnp.full((11,), seeds[1], jnp.int32)]),
+        block_offsets=jnp.concatenate([jnp.arange(5, dtype=jnp.int32),
+                                       jnp.arange(11, dtype=jnp.int32)]),
+        segments=((0, 5), (5, 11)), **hyper)
+    for name, got in zip(pooled._fields, pooled):
+        want = jnp.concatenate([getattr(sep[0], name), getattr(sep[1], name)])
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want),
+                                      err_msg=name)
+
+
+# --------------------------------------------- checkpoint interchange (mesh)
+def _mesh2():
+    if jax.device_count() < 2:
+        pytest.skip("needs 2 devices (xla_force_host_platform_device_count)")
+    return jax.make_mesh((2,), ("data",))
+
+
+@pytest.mark.parametrize("state_bits", [None, (4, 8)])
+def test_checkpoint_interchange_per_leaf_to_pooled(tmp_path, state_bits):
+    """Save per-leaf -> restore pooled on a 2-device mesh, bit-exact codes/
+    absmax/master (incl. PackedCodes), and the resumed pooled run matches
+    the uninterrupted per-leaf run bit-exactly."""
+    from repro.sharding import rules
+    mesh = _mesh2()
+    kw = dict(lr=1e-2, min_8bit_size=256, override_32bit=lambda p: False,
+              shard_multiple=2, stochastic_rounding=True)
+    if state_bits:
+        kw["state_bits"] = state_bits
+    params = {"w": jnp.ones((64, 64)), "v": jnp.ones((48, 32)),
+              "b": jnp.zeros((8,))}
+    opt_pl = make_optimizer("adam8", pooled=False, **kw)
+    opt_po = make_optimizer("adam8", pooled=True, **kw)
+    _, st = _train_with(opt_pl, params, 3)
+    d = str(tmp_path)
+    C.save(d, 3, st)
+
+    template = jax.eval_shape(lambda: opt_po.init(params))
+    pshard = jax.tree_util.tree_map(
+        lambda p: jax.sharding.NamedSharding(mesh,
+                                             jax.sharding.PartitionSpec()),
+        params)
+    shardings = rules.opt_state_shardings(template, pshard, mesh,
+                                          rules.ShardingPolicy())
+    st_po = C.restore(d, 3, template, shardings)
+    # arena block dim is sharded over the mesh
+    assert st_po.arena.codes_m is not None
+    _assert_trees_equal(unpool_state(st_po).leaves, st.leaves,
+                        "restored pooled != saved per-leaf")
+    # resumed step parity: pooled resume == uninterrupted per-leaf
+    target = jax.tree_util.tree_map(lambda p: jnp.ones_like(p) * 0.5, params)
+    grad = jax.jit(jax.grad(lambda p: _loss(p, target)))
+    g = grad(opt_pl.params_view(st))
+    _, st_a = opt_pl.apply(g, st)
+    _, st_b = opt_po.apply(g, st_po)
+    _assert_trees_equal(st_a.leaves, unpool_state(st_b).leaves,
+                        "resumed step diverged")
+
+
+@pytest.mark.parametrize("state_bits", [None, (4, 8)])
+def test_checkpoint_interchange_pooled_to_per_leaf(tmp_path, state_bits):
+    """Save pooled -> restore per-leaf on a 2-device mesh, bit-exact."""
+    from repro.sharding import rules
+    mesh = _mesh2()
+    kw = dict(lr=1e-2, min_8bit_size=256, override_32bit=lambda p: False,
+              shard_multiple=2)
+    if state_bits:
+        kw["state_bits"] = state_bits
+    params = {"w": jnp.ones((64, 64)), "v": jnp.ones((48, 32)),
+              "b": jnp.zeros((8,))}
+    opt_po = make_optimizer("adam8", pooled=True, **kw)
+    opt_pl = make_optimizer("adam8", pooled=False, **kw)
+    _, st = _train_with(opt_po, params, 3)
+    d = str(tmp_path)
+    C.save(d, 3, st)
+
+    template = jax.eval_shape(lambda: opt_pl.init(params))
+    pshard = jax.tree_util.tree_map(
+        lambda p: jax.sharding.NamedSharding(mesh,
+                                             jax.sharding.PartitionSpec()),
+        params)
+    shardings = rules.opt_state_shardings(template, pshard, mesh,
+                                          rules.ShardingPolicy())
+    st_pl = C.restore(d, 3, template, shardings)
+    _assert_trees_equal(st_pl.leaves, unpool_state(st).leaves,
+                        "restored per-leaf != saved pooled")
+
+
+def _train_with(opt, params, steps):
+    target = jax.tree_util.tree_map(lambda p: jnp.ones_like(p) * 0.5, params)
+    grad = jax.jit(jax.grad(lambda p: _loss(p, target)))
+    st = opt.init(params)
+    p = params
+    for _ in range(steps):
+        p, st = opt.apply(grad(p), st)
+    return p, st
+
+
+# ------------------------------------------- restore shardings regression
+def test_restore_none_shardings_are_preserved(tmp_path):
+    """Regression: tree_leaves(shardings) silently dropped None entries,
+    mis-zipping every sharding after the first None.  None must mean
+    'default placement' for exactly that leaf, with everything after it
+    still landing on its requested device."""
+    mesh = _mesh2()
+    sh = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec("data"))
+    tree = {"a": jnp.zeros((4, 2)), "b": jnp.ones((8, 2)),
+            "c": jnp.full((6, 2), 2.0)}
+    d = str(tmp_path)
+    C.save(d, 1, tree)
+    template = jax.eval_shape(lambda: tree)
+    shardings = {"a": None, "b": sh, "c": sh}
+    out = C.restore(d, 1, template, shardings)
+    # before the fix, 'b' got None's slot dropped -> b took sh... and 'c'
+    # ran off the end; now b and c are sharded over the mesh, a is not
+    assert out["b"].sharding.is_equivalent_to(sh, 2)
+    assert out["c"].sharding.is_equivalent_to(sh, 2)
+    for k in "abc":
+        np.testing.assert_array_equal(np.asarray(out[k]),
+                                      np.asarray(tree[k]))
+
+
+def test_save_orphan_pooled_containers_rejected(tmp_path):
+    """Saving pooled containers outside their OptState (e.g. just the
+    leaves subtree) would silently drop every quantized statistic — the
+    arena lives on a sibling field.  Must fail loudly."""
+    opt = make_optimizer("adam8", lr=1e-2, min_8bit_size=256,
+                         override_32bit=lambda p: False)
+    st = opt.init({"w": jnp.ones((64, 64))})
+    with pytest.raises(ValueError, match="OptState"):
+        C.save(str(tmp_path), 1, st.leaves)
+    # the whole state (or its per-leaf view) is fine
+    C.save(str(tmp_path), 1, st)
+    C.save(str(tmp_path), 2, unpool_state(st).leaves)
+
+
+def test_restore_sharding_structure_mismatch_raises(tmp_path):
+    tree = {"a": jnp.zeros((4,)), "b": jnp.ones((8,))}
+    d = str(tmp_path)
+    C.save(d, 1, tree)
+    template = jax.eval_shape(lambda: tree)
+    with pytest.raises(ValueError, match="shardings"):
+        C.restore(d, 1, template, {"a": None})   # missing 'b'

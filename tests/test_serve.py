@@ -64,6 +64,30 @@ def test_generate_greedy_deterministic():
     assert g1.shape == (3, 6)
 
 
+def test_generate_zero_new_tokens_is_empty():
+    """max_new_tokens=0 must return shape (B, 0): the prefill-sampled token
+    belongs to position P and must not leak into a 0-token request."""
+    cfg = CASES["dense"]
+    params, _ = M.init_model(cfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params, ServeConfig(max_len=64))
+    prompts = np.random.RandomState(0).randint(0, 97, (3, 10)).astype(np.int32)
+    out = eng.generate(prompts, 0)
+    assert out.shape == (3, 0) and out.dtype == np.int32
+
+
+def test_generate_capacity_check_raises():
+    """Capacity overrun raises ValueError naming the offending lengths
+    (an assert would vanish under `python -O`); negative counts too."""
+    cfg = CASES["dense"]
+    params, _ = M.init_model(cfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params, ServeConfig(max_len=16))
+    prompts = np.zeros((2, 10), np.int32)
+    with pytest.raises(ValueError, match="10.*7.*16"):
+        eng.generate(prompts, 7)
+    with pytest.raises(ValueError, match="-1"):
+        eng.generate(prompts, -1)
+
+
 def test_long_context_decode_small():
     """xlstm-style O(1) state: decode far past any attention window."""
     cfg = CASES["xlstm"]

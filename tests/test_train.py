@@ -81,6 +81,35 @@ def test_grad_clip_engages():
     assert float(m["grad_norm"]) > 1e-6    # reported norm is pre-clip
 
 
+@pytest.mark.parametrize("opt_name,expected", [
+    ("adam8", 2 * (1 + 4 / 2048)),   # two 8-bit states + amortized absmax
+    ("adafactor32", None),           # factored baseline: > 4 B/param (m) only
+])
+def test_state_bytes_per_param_metric_emitted(opt_name, expected):
+    """The measured state_bytes_per_param metric is the paper's Table 1
+    comparison; it must be emitted by BOTH engines — the quantized one and
+    the 32-bit memory-efficient Adafactor baseline (whose state_bytes used
+    to omit n_params, silently dropping the metric)."""
+    cfg, pipe = _setup()
+    opt = make_optimizer(opt_name, lr=5e-3, min_8bit_size=1024)
+    state, _ = L.init_train_state(cfg, opt, jax.random.PRNGKey(0))
+    step = jax.jit(L.make_train_step(cfg, opt))
+    batch = {k: jnp.asarray(v) for k, v in pipe.batch_at(0).items()}
+    _, m = step(state, batch)
+    assert "state_bytes_per_param" in m, opt_name
+    if opt_name == "adam8":
+        # pooled dispatch: the whole quantized tree is ONE fused launch
+        assert float(m["opt_fused_dispatches"]) == 1.0
+    bpp = float(m["state_bytes_per_param"])
+    if expected is not None:
+        # mixed 8-bit/32-bit tree: quantized leaves sit at `expected`,
+        # overrides above it — the measured value must be in between
+        assert expected * 0.9 < bpp < 8.0
+    else:
+        # Adafactor: full first moment (4 B) + factored second moment
+        assert 4.0 < bpp < 4.5
+
+
 def test_vlm_embeds_path_trains():
     cfg, pipe = _setup()
     import dataclasses
