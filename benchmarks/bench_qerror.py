@@ -112,11 +112,56 @@ def bench_kbit_error_table():
     emit("kbit/error_table_json", 0.0, path)
 
 
+def bench_muon_kbit_error_table():
+    """Muon momentum quantization error per bitwidth, pre- vs post-
+    orthogonalization (DESIGN.md §11).  The question the Newton–Schulz
+    update raises that element-wise optimizers don't: does block-wise
+    rounding of the momentum *matrix* get amplified by orth()?  Measured
+    as relative Frobenius error of the dequantized momentum (pre) and of
+    NS(5) applied to it vs NS(5) of the exact momentum (post); appended
+    to BENCH_qerror.json next to the element-wise k-bit table so the
+    4/5/6/8-bit gate covers the matrix-shaped state."""
+    from repro.kernels import ref as kref
+
+    rng = np.random.RandomState(7)
+    rows, cols = 256, 1024
+    # heavy-tailed momentum matrix with layer-like row structure
+    m = (rng.randn(rows, cols) *
+         10 ** rng.uniform(-4, -2, (rows, 1))).astype(np.float32)
+    m = jnp.asarray(m)
+    o_exact = kref.newton_schulz_ref(m)
+    on_exact = float(jnp.sqrt(jnp.sum(o_exact * o_exact)))
+    mn = float(jnp.sqrt(jnp.sum(m * m)))
+    table = {}
+    for bits in (4, 5, 6, 8):
+        cb = jnp.asarray(qmap.get_qmap("dynamic", True, bits=bits))
+        blocks = bw.pad_to_blocks(m.reshape(-1), 2048)
+        cm, am = bw.quantize_blocks(blocks, cb)
+        md = bw.dequantize_blocks(cm, am, cb).reshape(-1)[:m.size]
+        md = md.reshape(rows, cols)
+        pre = float(jnp.sqrt(jnp.sum((md - m) ** 2))) / mn
+        o_q = kref.newton_schulz_ref(md)
+        post = float(jnp.sqrt(jnp.sum((o_q - o_exact) ** 2))) / on_exact
+        table[str(bits)] = {"rel_err_pre_orth": pre,
+                            "rel_err_post_orth": post}
+        emit(f"muon/rel_err_pre_orth/{bits}bit", 0.0, f"{pre * 100:.2f}%")
+        emit(f"muon/rel_err_post_orth/{bits}bit", 0.0, f"{post * 100:.2f}%")
+    path = append_bench_json(BENCH_JSON, {
+        "bench": "muon_kbit_error_table", "algo": "muon",
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "qmap": "dynamic", "block_size": 2048,
+        "shape": [rows, cols],
+        "per_bitwidth": table,
+    })
+    emit("muon/error_table_json", 0.0, path)
+
+
 def main():
     bench_table6_dtype_error()
     bench_blockwise_vs_tensorwise()
     bench_appD_error_by_code()
     bench_kbit_error_table()
+    bench_muon_kbit_error_table()
 
 
 if __name__ == "__main__":

@@ -230,6 +230,76 @@ def bench_pooled_dispatch(smoke: bool = False):
     return results
 
 
+def bench_muon(smoke: bool = False):
+    """Muon matrix-optimizer sweep (DESIGN.md §11): the NS(5) fused update
+    through the registry, jnp vs Pallas-interpret, plus the pooled-
+    fallback dispatch count on a mixed 2-D/1-D/small model — one fused
+    arena launch for the element-wise adamw leaves + one NS launch per
+    matrix leaf.  The analytic TPU roofline position comes from
+    ``repro.roofline.analysis.muon_update_roofline`` (the first compute-
+    bound optimizer kernel in the repo).  Appends to BENCH_speed.json."""
+    from repro.core.optim import make_optimizer
+    from repro.roofline import analysis as roofline
+
+    qs = jnp.asarray(qmap.get_qmap("dynamic", True))
+    kw = dict(lr=1e-3, beta1=0.95, weight_decay=0.01)
+    sizes = {"jnp": (128, 512) if smoke else (512, 2048),
+             "interpret": (32, 256) if smoke else (64, 2048)}
+    results: dict[str, float] = {}
+    for impl, (rows, cols) in sizes.items():
+        k = jax.random.PRNGKey(0)
+        p = jax.random.normal(k, (rows, cols))
+        g = jax.random.normal(jax.random.fold_in(k, 1), (rows, cols)) * 0.01
+        n = rows * cols
+        nb, bsz = -(-n // 2048), 2048
+        m0 = jax.random.normal(jax.random.fold_in(k, 2), (nb, bsz)) * 0.01
+        cm, am = ref.quantize_ref(m0, qs)
+
+        @jax.jit
+        def run(p, g, cm, am):
+            return ops.fused_update("muon", p, g, cm, am, qmap_m=qs,
+                                    impl=impl, **kw)
+
+        us, _ = time_fn(run, p, g, cm, am,
+                        iters=2 if impl == "interpret" else 3, warmup=1)
+        results[impl] = us
+        rf = roofline.muon_update_roofline((rows, cols))
+        emit(f"muon/fused_ns5_{rows}x{cols}/{impl}_us", us,
+             f"tpu-roofline {rf['bottleneck']}-bound "
+             f"({rf['flops'] / 1e6:.0f}MFLOP)" if impl == "jnp"
+             else "validation-path")
+
+    # Pooled fallback dispatch: matrix leaves per-leaf, element-wise adamw
+    # leaves in ONE arena launch (trace-time count, DESIGN.md §10/§11).
+    n_matrix, n_vec = (3, 6) if smoke else (6, 12)
+    key = jax.random.PRNGKey(1)
+    params = {f"w{i}": jax.random.normal(jax.random.fold_in(key, i),
+                                         (32, 64)) for i in range(n_matrix)}
+    params.update({f"v{i}": jax.random.normal(
+        jax.random.fold_in(key, 100 + i), (512,)) for i in range(n_vec)})
+    grads = jax.tree_util.tree_map(lambda p: p * 0.01, params)
+    opt = make_optimizer("muon8", lr=1e-3, min_8bit_size=256,
+                         override_32bit=lambda p: False)
+    st = opt.init(params)
+    ops.reset_fused_update_count()
+    jax.jit(lambda g, s: opt.apply(g, s)).lower(grads, st)   # trace only
+    launches = ops.fused_update_count()
+    emit("muon/pooled_fallback/launches_per_step", 0.0,
+         f"{launches} = {n_matrix} NS leaves + 1 adamw arena "
+         f"({n_vec} pooled 1-D leaves)")
+    assert launches == n_matrix + 1, (launches, n_matrix)
+    _append_bench_json({
+        "bench": "muon_sweep", "algo": "muon",
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "smoke": smoke, "backend": jax.default_backend(),
+        "sizes": {k: list(v) for k, v in sizes.items()},
+        "us_per_call": results,
+        "pooled_fallback_launches": launches,
+        "n_matrix_leaves": n_matrix,
+    }, label="muon/json")
+    return results
+
+
 def bench_quantize_throughput():
     qs = jnp.asarray(qmap.get_qmap("dynamic", True))
     x = jax.random.normal(jax.random.PRNGKey(0), (512, 2048))
@@ -244,7 +314,8 @@ def bench_quantize_throughput():
          f"{n / us:.0f} elem/us")
 
 
-def main(smoke: bool = False, bits: int | None = None):
+def main(smoke: bool = False, bits: int | None = None,
+         algo: str | None = None):
     if not smoke:
         bench_table5_update_speed()
         bench_quantize_throughput()
@@ -252,6 +323,8 @@ def main(smoke: bool = False, bits: int | None = None):
     bench_pooled_dispatch(smoke=smoke)
     if bits is not None:
         bench_kbit_fused(bits, smoke=smoke)
+    if algo == "muon" or not smoke:
+        bench_muon(smoke=smoke)
 
 
 if __name__ == "__main__":

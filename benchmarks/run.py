@@ -37,6 +37,11 @@ def main() -> None:
     ap.add_argument("--bits", type=int, default=None,
                     help="also run the packed k-bit legs (4/5/6/8) of any "
                          "suite that supports a bitwidth sweep")
+    ap.add_argument("--algo", type=str, default=None,
+                    help="also run the algorithm-specific legs of any "
+                         "suite that supports them (e.g. --algo muon runs "
+                         "the Newton–Schulz matrix-optimizer sweep even "
+                         "under --smoke; DESIGN.md §11)")
     args = ap.parse_args()
     if args.only:
         names = args.only.split(",")
@@ -55,6 +60,8 @@ def main() -> None:
             kwargs["smoke"] = True
         if args.bits is not None and "bits" in params:
             kwargs["bits"] = args.bits
+        if args.algo is not None and "algo" in params:
+            kwargs["algo"] = args.algo
         try:
             mod.main(**kwargs)
         except Exception as e:  # keep the harness running

@@ -1,15 +1,22 @@
 """Quickstart: the paper's "two-line code change".
 
-Train the same tiny LM twice — once with 32-bit Adam, once with quantized
-Adam (block-wise dynamic quantization + stable embedding).  Same
-hyperparameters, same data, same final loss, ~4x less optimizer-state
+Train the same tiny LM twice — once with the 32-bit optimizer, once with
+its quantized twin (block-wise dynamic quantization + stable embedding).
+Same hyperparameters, same data, same final loss, ~4x less optimizer-state
 memory (more with sub-byte states).
 
     PYTHONPATH=src python examples/quickstart.py
     PYTHONPATH=src python examples/quickstart.py --bits 4   # packed 4-bit
                                                  # first moment, 8-bit second
+    PYTHONPATH=src python examples/quickstart.py --algo muon  # quantized
+                                  # matrix momentum + Newton-Schulz updates
+                                  # on 2-D leaves (DESIGN.md §11)
     PYTHONPATH=src python examples/quickstart.py --no-pooled  # per-leaf
                                   # dispatch (debugging; bit-identical)
+
+``--algo`` accepts any registered algorithm (adam/adamw/momentum/lamb/
+lars/adagrad/muon): the script compares ``<algo>32`` against ``<algo>8``
+through the same ``make_optimizer`` entry point.
 """
 import argparse
 
@@ -17,7 +24,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import base
-from repro.core.optim import make_optimizer
+from repro.core.optim import ALGOS, make_optimizer
 from repro.data.pipeline import DataConfig, SyntheticLMPipeline
 from repro.train import loop as L
 
@@ -41,6 +48,10 @@ def run(opt_name: str, steps: int = 80, **opt_kw):
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
+    ap.add_argument("--algo", default="adam", choices=sorted(ALGOS),
+                    help="algorithm to compare at 32 vs quantized state "
+                         "(any registered algo, incl. the muon matrix "
+                         "optimizer — DESIGN.md §11)")
     ap.add_argument("--bits", type=int, default=8, choices=[4, 5, 6, 8],
                     help="first-moment storage bitwidth for the quantized "
                          "run (second moment stays 8-bit; DESIGN.md §9)")
@@ -48,10 +59,11 @@ if __name__ == "__main__":
                     help="per-leaf dispatch instead of the pooled arena "
                          "(one fused launch per leaf instead of one per "
                          "state format; bit-identical — DESIGN.md §10)")
+    ap.add_argument("--steps", type=int, default=80)
     args = ap.parse_args()
     opt_kw = {} if args.bits == 8 else {"state_bits": (args.bits, 8)}
     if args.no_pooled:
         opt_kw["pooled"] = False
-    l32, b32 = run("adam32")
-    l8, b8 = run("adam8", **opt_kw)
+    l32, b32 = run(f"{args.algo}32", steps=args.steps)
+    l8, b8 = run(f"{args.algo}8", steps=args.steps, **opt_kw)
     print(f"\nloss diff: {abs(l8 - l32):.4f}   state memory: {b32 / b8:.1f}x smaller")

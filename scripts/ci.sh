@@ -9,7 +9,10 @@ python -m pip install -e '.[test]'
 
 PYTHONPATH=src python -m pytest -x -q
 
-# Smoke sweep plus the packed 4-bit leg: k-bit qmaps + PackedCodes through
-# the fused registry (jnp + Pallas-interpret in-kernel unpack/pack),
-# DESIGN.md §9.  `--bits 4` is a superset of the plain --smoke run.
-PYTHONPATH=src python -m benchmarks.run --smoke --bits 4
+# Smoke sweep plus the packed 4-bit leg (k-bit qmaps + PackedCodes through
+# the fused registry's jnp + Pallas-interpret in-kernel unpack/pack,
+# DESIGN.md §9) plus the muon leg (NS(5) fused update jnp vs interpret +
+# the pooled-fallback dispatch count on a mixed 2-D/1-D model, DESIGN.md
+# §11).  One invocation: both flags forward to the same suite mains, so
+# this is a superset of the plain --smoke run at no repeated suites.
+PYTHONPATH=src python -m benchmarks.run --smoke --bits 4 --algo muon

@@ -1,65 +1,101 @@
-"""8-bit optimizers (paper core) + 32-bit baselines.
+"""8-bit optimizers (paper core) + 32-bit baselines + matrix optimizers.
 
 Factory usage (the "two-line change" of the paper):
 
     opt = make_optimizer("adam8", lr=1e-3)      # instead of "adam32"
     state = opt.init(params)
     params, state = opt.apply(grads, state)
+
+``make_optimizer`` is the single construction entry point: it accepts a
+registered *name* ("adam8", "muon8", "adafactor32", ...) or a ready
+*config object* (``OptimConfig`` / ``AdafactorConfig``) and dispatches to
+the right engine class (``Block8bitOptimizer``, ``MuonOptimizer``,
+``Adafactor``) — train/launch/serve construct every optimizer through it
+instead of per-module conditionals.
 """
 from __future__ import annotations
 
-from typing import Callable, Optional
+import dataclasses
+from typing import Callable, Optional, Union
 
 from repro.core.optim.adafactor import Adafactor, AdafactorConfig
-from repro.core.optim.base import (FlatSegment, Full32Leaf, OptimConfig,
-                                   Pool32Arena, Pool32Leaf, PooledQuantLeaf,
-                                   Quant8Leaf, QuantArena, QuantSegment,
-                                   default_override_32bit)
+from repro.core.optim.base import (ALGOS, FlatSegment, Full32Leaf,
+                                   OptimConfig, Pool32Arena, Pool32Leaf,
+                                   PooledQuantLeaf, Quant8Leaf, QuantArena,
+                                   QuantSegment, default_override_32bit)
 from repro.core.optim.blockopt import (Block8bitOptimizer, OptState,
                                        repool_like, unpool_state)
+from repro.core.optim.muon import MuonOptimizer
 
-_NAMES = {
-    # name: (algo, bits)
-    "adam8": ("adam", 8), "adamw8": ("adamw", 8), "momentum8": ("momentum", 8),
-    "lamb8": ("lamb", 8), "lars8": ("lars", 8), "adagrad8": ("adagrad", 8),
-    "adam32": ("adam", 32), "adamw32": ("adamw", 32),
-    "momentum32": ("momentum", 32), "lamb32": ("lamb", 32),
-    "lars32": ("lars", 32), "adagrad32": ("adagrad", 32),
-}
+# name: (algo, bits) — every registered algorithm gets an "<algo>8" and an
+# "<algo>32" name, so new algorithms are CLI-runnable without extra wiring.
+_NAMES = {f"{algo}{bits}": (algo, bits) for algo in ALGOS for bits in (8, 32)}
 
 
-def make_optimizer(name: str,
+def optimizer_names() -> list:
+    """Every constructible optimizer name (quickstart/launch CLI choices)."""
+    return sorted(_NAMES) + ["adafactor32"]
+
+
+def _from_config(cfg, override_32bit=None):
+    """Config object -> engine instance (the one dispatch point)."""
+    if isinstance(cfg, AdafactorConfig):
+        return Adafactor(cfg)
+    assert isinstance(cfg, OptimConfig), type(cfg)
+    if cfg.algo == "muon":
+        return MuonOptimizer(cfg, override_32bit=override_32bit)
+    return Block8bitOptimizer(cfg, override_32bit=override_32bit)
+
+
+def make_optimizer(name_or_config: Union[str, OptimConfig, AdafactorConfig],
                    override_32bit: Optional[Callable[[str], bool]] = None,
                    **kwargs):
-    """Build an optimizer by name. ``adafactor32`` or any of
-    adam8/adamw8/momentum8/lamb8/lars8/adagrad8 and their 32-bit twins.
+    """Build an optimizer from a name or a config object.
+
+    Names: ``adafactor32`` or ``<algo>8``/``<algo>32`` for any registered
+    algorithm (adam/adamw/momentum/lamb/lars/adagrad/muon).  Config
+    objects (``OptimConfig``/``AdafactorConfig``) construct directly —
+    ``**kwargs`` are applied as ``dataclasses.replace`` overrides.
 
     ``override_32bit``: path predicate forcing 32-bit state for matching
-    leaves (defaults to the paper's stable-embedding rule when the name ends
-    in '8'; pass ``lambda p: False`` to disable).
+    leaves (defaults to the paper's stable-embedding rule when quantized
+    state is requested; pass ``lambda p: False`` to disable).  For muon the
+    override additionally routes matched 2-D leaves to the element-wise
+    adamw fallback (DESIGN.md §11) — Muon's usual embedding/head exclusion.
 
-    Sub-byte state storage (DESIGN.md §9) is a kwarg on the quantized
-    names: ``make_optimizer("adam8", state_bits=(4, 8))`` stores a packed
-    4-bit first moment and an 8-bit second moment."""
+    Sub-byte state storage (DESIGN.md §9) is a config field:
+    ``make_optimizer("adam8", state_bits=(4, 8))`` stores a packed 4-bit
+    first moment and an 8-bit second moment; the same knob packs Muon's
+    matrix momentum (``make_optimizer("muon8", state_bits=(4, 8))``)."""
+    if isinstance(name_or_config, (OptimConfig, AdafactorConfig)):
+        cfg = name_or_config
+        if kwargs:
+            cfg = dataclasses.replace(cfg, **kwargs)
+        if isinstance(cfg, OptimConfig) and override_32bit is None \
+                and (cfg.bits == 8 or cfg.algo == "muon"):
+            # For muon the override doubles as the algorithm routing
+            # (matched 2-D leaves run adamw, DESIGN.md §11), so the
+            # embedding exclusion applies to the fp32 baseline too —
+            # muon32 and muon8 must route identically to be comparable.
+            override_32bit = default_override_32bit
+        return _from_config(cfg, override_32bit)
+    name = name_or_config
     if name == "adafactor32":
-        import dataclasses
         fields = {f.name for f in dataclasses.fields(AdafactorConfig)}
-        return Adafactor(AdafactorConfig(
+        return _from_config(AdafactorConfig(
             **{k: v for k, v in kwargs.items() if k in fields}))
     if name not in _NAMES:
         raise ValueError(f"unknown optimizer '{name}'; have "
-                         f"{sorted(_NAMES) + ['adafactor32']}")
+                         f"{optimizer_names()}")
     algo, bits = _NAMES[name]
-    cfg = OptimConfig(algo=algo, bits=bits, **kwargs)
-    if bits == 8 and override_32bit is None:
-        override_32bit = default_override_32bit
-    return Block8bitOptimizer(cfg, override_32bit=override_32bit)
+    return make_optimizer(OptimConfig(algo=algo, bits=bits, **kwargs),
+                          override_32bit=override_32bit)
 
 
 __all__ = [
     "Adafactor", "AdafactorConfig", "Block8bitOptimizer", "FlatSegment",
-    "Full32Leaf", "OptimConfig", "OptState", "Pool32Arena", "Pool32Leaf",
-    "PooledQuantLeaf", "Quant8Leaf", "QuantArena", "QuantSegment",
-    "default_override_32bit", "make_optimizer", "repool_like",
-    "unpool_state",
+    "Full32Leaf", "MuonOptimizer", "OptimConfig", "OptState", "Pool32Arena",
+    "Pool32Leaf", "PooledQuantLeaf", "Quant8Leaf", "QuantArena",
+    "QuantSegment", "default_override_32bit", "make_optimizer",
+    "optimizer_names", "repool_like", "unpool_state",
 ]

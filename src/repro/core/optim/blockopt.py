@@ -49,6 +49,13 @@ parity oracle (and serves the tensor-wise ablation, which needs a
 per-tensor absmax).  Checkpoints always store the per-leaf canonical form
 (:func:`unpool_state`), so pooled and per-leaf runs share checkpoints in
 both directions.
+
+**Matrix-class leaves** (DESIGN.md §11): subclasses can route leaves to a
+matrix algorithm via the ``_leaf_class``/``_init_matrix_leaf`` hooks and
+re-point ``self._ew_algo`` at their element-wise fallback —
+``MuonOptimizer`` routes 2-D leaves to Newton–Schulz momentum updates
+(one-state ``Quant8Leaf``, dispatched per leaf even under pooling) while
+everything else runs fused adamw through the machinery above.
 """
 from __future__ import annotations
 
@@ -102,6 +109,14 @@ class Block8bitOptimizer:
                  override_32bit: Optional[Callable[[str], bool]] = None):
         self.cfg = config
         self.override_32bit = override_32bit or (lambda path: False)
+        # The algorithm element-wise leaves run through the fused registry.
+        # Matrix-class optimizers (MuonOptimizer, DESIGN.md §11) override
+        # `_elementwise_algo` to their fallback algorithm ("adamw") while
+        # routing 2-D leaves to the matrix update — the per-leaf routing
+        # split.  The base engine has no matrix routing and rejects
+        # matrix-class algos outright (feeding the flat block arena into
+        # Newton–Schulz would silently orthogonalize garbage).
+        self._ew_algo = self._elementwise_algo(config.algo)
         signed1 = _state1_signed(config.algo)
         bits1, bits2 = config.state_bits_pair
         self._fmt1 = CodeFormat(
@@ -121,6 +136,27 @@ class Block8bitOptimizer:
             return False
         return not self.override_32bit(path)
 
+    def _elementwise_algo(self, algo: str) -> str:
+        """The algorithm non-matrix leaves dispatch through the fused
+        registry.  Matrix optimizers override this (muon -> "adamw")."""
+        if kfu.ALGO_SPECS[algo].matrix:
+            raise ValueError(
+                f"'{algo}' is a matrix-class algorithm; construct it via "
+                f"make_optimizer / MuonOptimizer (DESIGN.md §11) — "
+                f"Block8bitOptimizer has no matrix-leaf routing")
+        return algo
+
+    def _leaf_class(self, path: str, param: jax.Array) -> str:
+        """Per-leaf algorithm class: "ew" (element-wise, the fused-registry
+        path) or "matrix" (Newton–Schulz leaves, MuonOptimizer only —
+        DESIGN.md §11).  The base engine is entirely element-wise."""
+        del path, param
+        return "ew"
+
+    def _init_matrix_leaf(self, path: str, param: jax.Array):
+        raise NotImplementedError(
+            "matrix-class leaves need a matrix optimizer (MuonOptimizer)")
+
     def init(self, params: Pytree) -> OptState:
         cfg = self.cfg
         if cfg.pooling_active:
@@ -128,6 +164,8 @@ class Block8bitOptimizer:
 
         def init_leaf(path, p):
             path = path_str(path)
+            if self._leaf_class(path, p) == "matrix":
+                return self._init_matrix_leaf(path, p)
             if self._leaf_is_quantized(path, p):
                 # master stays in PARAM SHAPE (sharded like the param) so the
                 # fwd/bwd sees per-layer gathers inside the scan; only the
@@ -174,6 +212,11 @@ class Block8bitOptimizer:
 
         def init_leaf(path, p):
             path = path_str(path)
+            if self._leaf_class(path, p) == "matrix":
+                # Matrix-class leaves (muon) never pool: each one is its
+                # own Newton–Schulz problem and dispatches per leaf
+                # (DESIGN.md §11) — they ride along like Full32 overrides.
+                return self._init_matrix_leaf(path, p)
             if self._leaf_is_quantized(path, p):
                 nb = base.n_blocks_for(p.shape, bs, cfg.shard_multiple)
                 off = qsegs[-1].offset + qsegs[-1].n_blocks if qsegs else 0
@@ -226,7 +269,7 @@ class Block8bitOptimizer:
         update the fused kernels run (kernels/fused_update.update_math),
         with per-tensor norms computed inline.  Returns (m', r', p')."""
         cfg = self.cfg
-        spec = kfu.ALGO_SPECS[cfg.algo]
+        spec = kfu.ALGO_SPECS[self._ew_algo]
         s = dict(lr=lr, beta1=cfg.beta1, beta2=cfg.beta2, eps=cfg.eps,
                  weight_decay=cfg.weight_decay, step=step_f,
                  tensor_scale=jnp.float32(1.0))
@@ -275,7 +318,7 @@ class Block8bitOptimizer:
         # One registry entry point for every algorithm and ablation mode;
         # tensor-wise quantization is dispatched to the jnp entry inside.
         res = kops.fused_update(
-            cfg.algo, mb, gb, leaf.codes_m, leaf.absmax_m,
+            self._ew_algo, mb, gb, leaf.codes_m, leaf.absmax_m,
             leaf.codes_r, leaf.absmax_r, self._qmap1, self._qmap2,
             lr=lr, beta1=cfg.beta1, beta2=cfg.beta2, eps=cfg.eps,
             weight_decay=cfg.weight_decay, step=step_f,
@@ -304,7 +347,7 @@ class Block8bitOptimizer:
         view reshaped to the original param shape, so the reduction is
         bit-identical to the per-leaf Full32 path."""
         cfg = self.cfg
-        spec = kfu.ALGO_SPECS[cfg.algo]
+        spec = kfu.ALGO_SPECS[self._ew_algo]
         s = dict(lr=lr, beta1=cfg.beta1, beta2=cfg.beta2, eps=cfg.eps,
                  weight_decay=cfg.weight_decay, step=step_f,
                  tensor_scale=jnp.float32(1.0))
@@ -364,7 +407,7 @@ class Block8bitOptimizer:
             gb = _constrain(jnp.concatenate(gbs), "all", None)
             mb = _constrain(jnp.concatenate(mbs), "all", None)
             res = kops.fused_update(
-                cfg.algo, mb, gb, arena.codes_m, arena.absmax_m,
+                self._ew_algo, mb, gb, arena.codes_m, arena.absmax_m,
                 arena.codes_r, arena.absmax_r, self._qmap1, self._qmap2,
                 lr=lr, beta1=cfg.beta1, beta2=cfg.beta2, eps=cfg.eps,
                 weight_decay=cfg.weight_decay, step=step_f,
@@ -393,13 +436,26 @@ class Block8bitOptimizer:
             new_pool = self._apply_pool32(state.pool32, gflat * gnorm_scale,
                                           lr, step_f)
 
+        # Second walk re-plays the same flatten order as `collect`, so each
+        # ride-along leaf recovers its flatten index i — per-leaf seeds
+        # (base + i*7919) therefore match the per-leaf dispatch bit-exactly.
+        ent = iter(entries)
+
         def upd(leaf, g):
+            _, _, i = next(ent)
             if isinstance(leaf, PooledQuantLeaf):
                 sl = res_p[leaf.offset:leaf.offset + leaf.n_blocks]
                 return dataclasses.replace(
                     leaf, master=blocks_to_param(sl, leaf.shape, leaf.n, mdt))
             if isinstance(leaf, Pool32Leaf):
                 return leaf
+            if isinstance(leaf, Quant8Leaf):
+                # matrix-class (muon) leaves stay per-leaf under the pooled
+                # dispatch: each is its own Newton–Schulz problem
+                # (DESIGN.md §11).
+                return self._apply_quant8(
+                    leaf, g, lr, step_f, base_seed + jnp.int32(i * 7919),
+                    gnorm_scale)
             return self._apply_full32(leaf, g, lr, step_f, gnorm_scale)
 
         new_leaves = jax.tree_util.tree_map(upd, state.leaves, grads,

@@ -1,0 +1,126 @@
+"""Muon: the repo's first matrix optimizer, with k-bit quantized momentum.
+
+``MuonOptimizer`` (Jordan et al. 2024; quantized states: Gupta et al. 2025,
+"Effective Quantization of Muon Optimizer States") is a
+``Block8bitOptimizer`` with a **per-leaf algorithm-routing split**
+(DESIGN.md §11):
+
+  * **matrix-class leaves** — 2-D params not matched by the 32-bit
+    override — keep a single block-wise quantized momentum state
+    (``Quant8Leaf`` with ``codes_r=None``; ``PackedCodes`` for sub-byte
+    ``state_bits``).  Each step runs dequantize → nesterov momentum EMA →
+    Newton–Schulz(5) orthogonalization (``kernels/newton_schulz.py``) →
+    param update → blockwise requantize, through the same
+    ``(algo, impl)`` registry entry point as every other algorithm
+    (``ops.fused_update("muon", ...)``).  Muon is the hard single-state
+    low-bit case (SOLO, Xu et al. 2025): there is no second moment to
+    average out rounding error, so stochastic rounding matters most here.
+  * **element-wise leaves** — 1-D/0-D params, embeddings (the stable-
+    embedding override, which Muon excludes by convention anyway), and
+    anything else — fall through to the existing fused **adamw** path,
+    including the pooled ``QuantArena`` single dispatch (DESIGN.md §10):
+    one fused launch covers all of them, with the matrix leaves dispatched
+    per leaf alongside (each is its own Newton–Schulz problem).
+
+Everything downstream is inherited unchanged: block-domain sharding (the
+momentum leaf is a ``Quant8Leaf``, whose block dim shards over all mesh
+axes), elastic checkpoint save/restore (per-leaf canonical layout),
+``state_bytes`` metrics, percentile clipping, and the pooled ↔ per-leaf
+bit-exactness contract (matrix leaves take identical per-leaf code paths
+and flatten-order seeds in both layouts).
+
+Matrix leaves below ``min_quant_size`` (or under ``bits=32`` — the
+fp32-Muon baseline) keep fp32 momentum in a ``Full32Leaf`` with ``r=None``
+and run the same Muon math in fp32; the state container thus encodes the
+routing (a one-state 2-D leaf is a Muon leaf, a two-state leaf is adamw).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.optim import base
+from repro.core.optim.base import Full32Leaf, OptimConfig, Quant8Leaf
+from repro.core.optim.blockopt import Block8bitOptimizer
+from repro.kernels import newton_schulz as kns
+from repro.kernels import ops as kops
+
+
+class MuonOptimizer(Block8bitOptimizer):
+    """Block8bitOptimizer whose 2-D leaves get Newton–Schulz-orthogonalized
+    (quantized) momentum updates; all other leaves run fused adamw."""
+
+    def __init__(self, config: OptimConfig,
+                 override_32bit: Optional[Callable[[str], bool]] = None):
+        assert config.algo == "muon", config.algo
+        if not config.blockwise_norm:
+            raise ValueError(
+                "muon serves block-wise quantization only; the tensor-wise "
+                "ablation is element-wise (DESIGN.md §11)")
+        super().__init__(config, override_32bit=override_32bit)
+
+    # ------------------------------------------------------------- routing
+    def _elementwise_algo(self, algo: str) -> str:
+        # Element-wise fallback leaves run adamw through the fused
+        # registry / pooled arena; cfg.beta1/beta2/eps/weight_decay are
+        # shared between the two classes.
+        return "adamw"
+    def _leaf_class(self, path: str, param: jax.Array) -> str:
+        if param.ndim == 2 and not self.override_32bit(path):
+            return "matrix"
+        return "ew"
+
+    def _init_matrix_leaf(self, path: str, param: jax.Array):
+        cfg = self.cfg
+        if self._leaf_is_quantized(path, param):
+            nb = base.n_blocks_for(param.shape, cfg.block_size,
+                                   cfg.shard_multiple)
+            return Quant8Leaf(
+                master=param.astype(jnp.dtype(cfg.master_dtype)),
+                codes_m=self._fmt1.init_codes(nb, cfg.block_size),
+                absmax_m=jnp.zeros((nb,), jnp.float32),
+                codes_r=None, absmax_r=None,
+                shape=tuple(param.shape), n=int(param.size))
+        # fp32 momentum (sub-min_quant_size leaves and the bits=32
+        # fp32-Muon baseline): one-state Full32Leaf, same Muon math.
+        master = param.astype(jnp.float32)
+        return Full32Leaf(master=master, m=jnp.zeros_like(master), r=None)
+
+    # ------------------------------------------------------------- updates
+    def _apply_quant8(self, leaf: Quant8Leaf, g: jax.Array, lr, step_f,
+                      seed, gnorm_scale):
+        if leaf.codes_r is None and len(leaf.shape) == 2:
+            return self._apply_muon_leaf(leaf, g, lr, seed, gnorm_scale)
+        return super()._apply_quant8(leaf, g, lr, step_f, seed, gnorm_scale)
+
+    def _apply_muon_leaf(self, leaf: Quant8Leaf, g: jax.Array, lr, seed,
+                         gnorm_scale) -> Quant8Leaf:
+        """One fused Muon step for a quantized matrix leaf: p/g stay in
+        param (matrix) shape, the momentum state in the flat block domain
+        (ops.fused_update handles the reshape at the requant boundary)."""
+        cfg = self.cfg
+        res = kops.fused_update(
+            "muon", leaf.master, g, leaf.codes_m, leaf.absmax_m,
+            qmap_m=self._qmap1, lr=lr, beta1=cfg.beta1,
+            weight_decay=cfg.weight_decay, gnorm_scale=gnorm_scale,
+            stochastic=cfg.stochastic_rounding, seed=seed,
+            ns_steps=cfg.ns_steps, impl=self._impl)
+        return dataclasses.replace(
+            leaf, master=res.p.astype(jnp.dtype(cfg.master_dtype)),
+            codes_m=res.codes_m, absmax_m=res.absmax_m)
+
+    def _math32(self, g, p, m, r, lr, step_f):
+        """fp32 Muon math for one-state 2-D leaves (the same shared
+        ``muon_math`` the quantized registry entry runs, so muon32 and
+        muon8 cannot drift apart); everything else (the 2-state
+        override/fallback leaves) is the inherited adamw math."""
+        if r is None and p.ndim == 2:
+            cfg = self.cfg
+            m2, p2 = kns.muon_math(g, p, m, beta1=cfg.beta1, lr=lr,
+                                   weight_decay=cfg.weight_decay,
+                                   steps=cfg.ns_steps, impl=self._impl)
+            return m2, None, p2
+        return super()._math32(g, p, m, r, lr, step_f)

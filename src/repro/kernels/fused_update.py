@@ -75,16 +75,24 @@ class AlgoSpec:
     """Static description of one optimizer algorithm for the kernel builder.
 
     name          : algorithm key ("adam", ...)
-    n_states      : 1 (momentum/lars/adagrad) or 2 (adam/adamw/lamb)
+    n_states      : 1 (momentum/lars/adagrad/muon) or 2 (adam/adamw/lamb)
     state1_signed : first state uses the signed codebook (False: adagrad's
                     strictly-positive accumulator uses the unsigned map)
     norm_kind     : "" (block-local), "lamb" (needs ||p||, ||update||) or
                     "lars" (needs ||p||, ||g||) — selects the norm prologue
+    matrix        : matrix-class algorithm (muon): the update consumes the
+                    leaf in its 2-D *param shape* (Newton–Schulz matmuls,
+                    kernels/newton_schulz.py) while the quantized state
+                    stays in the flat block domain; ops.fused_update takes
+                    matrix-shaped p/g and the engine dispatches such
+                    leaves per-leaf, never through a pooled arena
+                    (DESIGN.md §11).
     """
     name: str
     n_states: int
     state1_signed: bool
     norm_kind: str = ""
+    matrix: bool = False
 
     @property
     def needs_norms(self) -> bool:
@@ -98,6 +106,7 @@ ALGO_SPECS: dict[str, AlgoSpec] = {
     "momentum": AlgoSpec("momentum", 1, True),
     "lars":     AlgoSpec("lars", 1, True, norm_kind="lars"),
     "adagrad":  AlgoSpec("adagrad", 1, False),
+    "muon":     AlgoSpec("muon", 1, True, matrix=True),
 }
 
 

@@ -1,0 +1,192 @@
+"""Pallas TPU kernel family: tiled Newton–Schulz orthogonalization (Muon).
+
+The repo's first *matrix-class* kernel (DESIGN.md §11): where every other
+kernel in this package is element-wise over the flat block domain, the
+Muon optimizer (Jordan et al. 2024; quantized states: Gupta et al. 2025)
+orthogonalizes its 2-D momentum with the quintic Newton–Schulz iteration
+
+    X ← a·X + b·(XX^T)X + c·(XX^T)^2 X
+
+run NS_STEPS times on the Frobenius-normalized momentum matrix.  The
+coefficients (a, b, c) are the Muon quintic tuned for fast convergence of
+the singular values into a band around 1 rather than exact orthogonality —
+the update direction only needs orth(M) approximately.
+
+Tiling.  With the min-dim-first convention (X is (m, n), m ≤ n — callers
+hand the transpose for tall matrices) each iteration is two tiled passes
+over the lane dim plus one tiny m×m matmul:
+
+  * **gram pass**   A = X X^T : grid over n-tiles, each grid step computes
+    a (m, TILE_N) × (TILE_N, m) partial on the MXU and accumulates into the
+    (m, m) output block (all grid steps map to the same output tile —
+    sequential TPU grid ⇒ a well-defined reduction order).
+  * **finalize**    B = b·A + c·A·A : one (m, m) matmul, done at the XLA
+    level like the LAMB norm finalization (§3) — m is the *small* dim.
+  * **apply pass**  X' = a·X + B X : grid over n-tiles; B streams as a
+    constant block, each grid step emits one (m, TILE_N) output tile.
+
+VMEM footprint is m·TILE_N + m·m floats, so the kernel assumes the small
+dim fits on chip (m ≲ 4k on v5e) — true for every config in this repo
+(the min dim of a weight matrix is ≤ d_model).
+
+Parity by construction: `_gram_tile` / `_apply_tile` are the *same jnp
+functions* inside the Pallas kernels and in the `impl="jnp"` path, which
+replays the identical tile loop on identically padded arrays in the same
+accumulation order — so `impl="interpret"` and `impl="jnp"` are bit-exact
+(tests/test_muon.py), the same contract the fused-update family follows.
+Zero padding (rows to the sublane multiple, lanes to a TILE_N multiple) is
+exact: padded rows/cols of X are zero, so their gram/apply contributions
+are exact f32 zeros.
+
+`kernels/ops.py` registers the full Muon leaf update (dequant → momentum →
+NS → param update → requant) under ``("muon", impl)`` in the fused-update
+registry; `kernels/ref.py` keeps the thin jnp oracle.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Muon quintic coefficients (Jordan et al. 2024).
+NS_COEFFS = (3.4445, -4.7750, 2.0315)
+DEFAULT_NS_STEPS = 5
+# Lane-dim tile per grid step (multiple of the 128-lane register width).
+TILE_N = 256
+_SUBLANE = 8
+
+
+def _pad_matrix(x: jax.Array, tile_n: int) -> jax.Array:
+    """Zero-pad (m, n) so m is a sublane multiple and n a tile multiple."""
+    m, n = x.shape
+    mp = -(-m // _SUBLANE) * _SUBLANE
+    np_ = -(-n // tile_n) * tile_n
+    if (mp, np_) != (m, n):
+        x = jnp.pad(x, ((0, mp - m), (0, np_ - n)))
+    return x
+
+
+def _gram_tile(xt: jax.Array) -> jax.Array:
+    """(m, t) tile -> (m, m) partial gram, contraction over the lane dim.
+    Shared verbatim by the Pallas kernel and the jnp path (parity)."""
+    return jax.lax.dot_general(xt, xt, (((1,), (1,)), ((), ())),
+                               preferred_element_type=jnp.float32)
+
+
+def _apply_tile(xt: jax.Array, b_mat: jax.Array, a: float) -> jax.Array:
+    """One (m, t) tile of a·X + B·X.  Shared by both impls (parity)."""
+    return a * xt + jax.lax.dot(b_mat, xt,
+                                preferred_element_type=jnp.float32)
+
+
+def _gram(x: jax.Array, tile_n: int, impl: str) -> jax.Array:
+    """A = X X^T over the padded (m, n) matrix, tiled along n."""
+    m, n = x.shape
+    grid = (n // tile_n,)
+    if impl == "jnp":
+        acc = jnp.zeros((m, m), jnp.float32)
+        for j in range(grid[0]):   # static loop, same order as the grid
+            acc = acc + _gram_tile(
+                jax.lax.dynamic_slice(x, (0, j * tile_n), (m, tile_n)))
+        return acc
+
+    def kernel(x_ref, out_ref):
+        @pl.when(pl.program_id(0) == 0)
+        def _init():
+            out_ref[...] = jnp.zeros_like(out_ref)
+        out_ref[...] += _gram_tile(x_ref[...])
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((m, tile_n), lambda j: (0, j))],
+        out_specs=pl.BlockSpec((m, m), lambda j: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, m), jnp.float32),
+        interpret=(impl == "interpret"),
+    )(x)
+
+
+def _ns_apply(x: jax.Array, b_mat: jax.Array, a: float, tile_n: int,
+              impl: str) -> jax.Array:
+    """X' = a·X + B·X over the padded (m, n) matrix, tiled along n."""
+    m, n = x.shape
+    grid = (n // tile_n,)
+    if impl == "jnp":
+        tiles = [_apply_tile(
+            jax.lax.dynamic_slice(x, (0, j * tile_n), (m, tile_n)),
+            b_mat, a) for j in range(grid[0])]
+        return tiles[0] if len(tiles) == 1 else jnp.concatenate(tiles, axis=1)
+
+    def kernel(x_ref, b_ref, out_ref):
+        out_ref[...] = _apply_tile(x_ref[...], b_ref[...], a)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((m, tile_n), lambda j: (0, j)),
+                  pl.BlockSpec((m, m), lambda j: (0, 0))],
+        out_specs=pl.BlockSpec((m, tile_n), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=(impl == "interpret"),
+    )(x, b_mat)
+
+
+@functools.partial(jax.jit, static_argnames=("steps", "impl", "tile_n"))
+def newton_schulz(x: jax.Array, *, steps: int = DEFAULT_NS_STEPS,
+                  impl: str = "jnp", tile_n: int = TILE_N,
+                  eps: float = 1e-7) -> jax.Array:
+    """≈ orth(x): quintic Newton–Schulz on a 2-D matrix, any shape.
+
+    Tall matrices are handled via the transpose (the iteration runs with
+    the small dim first, so the gram matrix is min(m,n)²).  ``impl`` ∈
+    {"pallas", "interpret", "jnp"} selects compiled kernels, the
+    interpreter (CPU validation), or the tile-replaying jnp path — the
+    latter two are bit-exact by construction.  Singular values of the
+    result land in a band around 1 (not exactly 1): Muon only needs the
+    approximate orthogonalization.
+    """
+    assert x.ndim == 2, x.shape
+    a, b, c = NS_COEFFS
+    transpose = x.shape[0] > x.shape[1]
+    x = x.T if transpose else x
+    shape = x.shape
+    x = x.astype(jnp.float32)
+    x = x / (jnp.sqrt(jnp.sum(x * x)) + jnp.float32(eps))
+    x = _pad_matrix(x, tile_n)
+    for _ in range(steps):
+        g = _gram(x, tile_n, impl)
+        # Finalize the quintic's small m×m factor at the XLA level, like
+        # the LAMB norm finalization (§3): B = b·A + c·A·A.
+        b_mat = b * g + c * jax.lax.dot(g, g,
+                                        preferred_element_type=jnp.float32)
+        x = _ns_apply(x, b_mat, a, tile_n, impl)
+    out = x[:shape[0], :shape[1]]
+    return out.T if transpose else out
+
+
+def rms_scale(shape: tuple) -> float:
+    """Muon's shape-dependent update scale: the orthogonalized update has
+    RMS ~ 1/sqrt(min(m,n)); scaling by sqrt(max(1, m/n)) matches the RMS
+    of an Adam-style update across aspect ratios (Jordan et al. 2024)."""
+    m, n = shape
+    return max(1.0, m / n) ** 0.5
+
+
+def muon_math(g, p, m, *, beta1, lr, weight_decay,
+              steps: int = DEFAULT_NS_STEPS, impl: str = "jnp"):
+    """One fp32 Muon step on matrix-shaped (g, p, m): nesterov momentum
+    EMA, NS orthogonalization, rms-matched param update.  Returns
+    (m2, p2).  The single implementation shared by the quantized registry
+    entry (``ops._muon_entry``) and the fp32 engine path
+    (``MuonOptimizer._math32``) — the muon analogue of ``update_math``
+    (§3), so the muon32 baseline and quantized muon cannot drift apart.
+    ``g`` must already be gnorm-scaled; all inputs f32."""
+    b1 = jnp.asarray(beta1, jnp.float32)
+    m2 = b1 * m + g
+    o = newton_schulz(g + b1 * m2, steps=steps, impl=impl)
+    p2 = p - jnp.asarray(lr, jnp.float32) * (
+        jnp.float32(rms_scale(tuple(p.shape))) * o
+        + jnp.asarray(weight_decay, jnp.float32) * p)
+    return m2, p2

@@ -25,6 +25,11 @@ containers instead of plain uint8 code arrays.  ``fused_update`` unwraps
 them, threads the static per-slot bitwidths to the backend (the Pallas
 kernels unpack/re-pack in VMEM; the jnp oracle unpacks at the XLA level),
 and re-wraps the results, so the optimizer engine is bitwidth-agnostic.
+
+Matrix-class algorithms (``muon``, DESIGN.md §11) register under the same
+keys: their entries take ``p``/``g`` in the leaf's 2-D param shape and run
+the Newton–Schulz matmul chain (``kernels/newton_schulz.py``) between
+dequantize and requantize.
 """
 from __future__ import annotations
 
@@ -36,6 +41,7 @@ import jax.numpy as jnp
 from repro.core.lowbit import PackedCodes, pack_codes, unpack_codes
 from repro.kernels import common, ref
 from repro.kernels import fused_update as _fu
+from repro.kernels import newton_schulz as _ns
 from repro.kernels.blockwise_dequant import dequantize_blockwise as _dequant_pallas
 from repro.kernels.blockwise_quant import quantize_blockwise as _quant_pallas
 
@@ -173,7 +179,59 @@ def _jnp_entry(algo: str) -> Callable:
     return run
 
 
+def _muon_entry(impl: str) -> Callable:
+    """Matrix-class (muon) fused update (DESIGN.md §11): p/g arrive in the
+    leaf's 2-D param shape, the single quantized momentum state in the flat
+    block domain.  dequant → momentum EMA → Newton–Schulz orthogonalization
+    (kernels/newton_schulz.py, routed by ``impl``) → param update →
+    blockwise requant.  Quantization mechanics ride the XLA level for every
+    impl (they are element-wise and fuse there); the matmul chain is the
+    kernel.  Stochastic rounding draws the same counter-hash uniforms as
+    the element-wise family, so restarts and impl-parity stay bit-exact.
+    """
+    def run(p, g, cm, am, cr, ar, qmap_m, qmap_r, *,
+            lr, beta1, weight_decay, gnorm_scale, stochastic, seed,
+            bits_m=8, ns_steps=_ns.DEFAULT_NS_STEPS, blockwise=True,
+            **_unused):
+        del cr, ar, qmap_r, _unused
+        if not blockwise:
+            raise NotImplementedError(
+                "muon serves block-wise quantization only (the tensor-wise "
+                "ablation is element-wise; DESIGN.md §11)")
+        if p.ndim != 2:
+            raise ValueError(
+                f"muon takes the leaf in its 2-D param shape, got {p.shape} "
+                f"(DESIGN.md §11)")
+        shape = p.shape
+        n = shape[0] * shape[1]
+        nb = cm.shape[0]
+        codes = unpack_codes(cm, bits_m).astype(jnp.uint8)
+        bsz = codes.shape[1]
+        m = ref.dequantize_ref(codes, am, qmap_m)
+        m = m.reshape(-1)[:n].reshape(shape)
+        g32 = g.astype(jnp.float32) * jnp.asarray(gnorm_scale, jnp.float32)
+        m2, p2 = _ns.muon_math(g32, p.astype(jnp.float32), m, beta1=beta1,
+                               lr=lr, weight_decay=weight_decay,
+                               steps=ns_steps, impl=impl)
+        blocks = jnp.pad(m2.reshape(-1), (0, nb * bsz - n)).reshape(nb, bsz)
+        u1 = None
+        if stochastic:
+            idx = common.element_indices(nb, bsz, 0)
+            u1 = common.hash_uniform(
+                idx, jnp.asarray(seed, jnp.int32).astype(jnp.uint32)
+                + jnp.uint32(common.STATE1_SEED_SALT))
+        cm2, am2 = ref._requantize(blocks, qmap_m, blockwise=True,
+                                   random_u=u1)
+        return _fu.FusedUpdateResult(p2, pack_codes(cm2, bits_m), am2,
+                                     None, None)
+    return run
+
+
 for _algo in ALGOS:
+    if _fu.ALGO_SPECS[_algo].matrix:
+        for _impl in IMPLS:
+            register(_algo, _impl, _muon_entry(_impl))
+        continue
     register(_algo, "pallas", _pallas_entry(_algo, interpret=False))
     register(_algo, "interpret", _pallas_entry(_algo, interpret=True))
     register(_algo, "jnp", _jnp_entry(_algo))
@@ -192,6 +250,7 @@ def fused_update(
     block_seeds=None,
     block_offsets=None,
     segments=None,
+    ns_steps: int = _ns.DEFAULT_NS_STEPS,
     impl: Optional[str] = None,
     rows: int = DEFAULT_ROWS,
 ) -> _fu.FusedUpdateResult:
@@ -215,6 +274,11 @@ def fused_update(
     ``arange`` offsets, one segment).  Returns a
     :class:`~repro.kernels.fused_update.FusedUpdateResult` whose
     codes_r/absmax_r are None for one-state algorithms.
+
+    Matrix-class algorithms (``muon``, DESIGN.md §11) take ``p``/``g`` in
+    the leaf's 2-D *param shape* (not the flat block domain); ``codes_m``/
+    ``absmax_m`` stay block-domain.  ``ns_steps`` sets the Newton–Schulz
+    iteration count and is ignored by element-wise algorithms.
     """
     impl = impl or default_impl()
     _FUSED_UPDATE_CALLS[0] += 1
@@ -247,7 +311,10 @@ def fused_update(
                  bits_m=bits_m, bits_r=bits_r,
                  block_seeds=block_seeds, block_offsets=block_offsets,
                  segments=None if segments is None else tuple(segments))
-    if impl == "jnp":
+    if _fu.ALGO_SPECS[algo].matrix:
+        hyper["ns_steps"] = ns_steps
+        hyper["blockwise"] = blockwise
+    elif impl == "jnp":
         hyper["blockwise"] = blockwise
     res = fn(p, g, codes_m, absmax_m, codes_r, absmax_r, qmap_m, qmap_r,
              **hyper)

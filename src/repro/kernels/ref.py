@@ -23,6 +23,7 @@ import jax.numpy as jnp
 
 from repro.kernels import common
 from repro.kernels import fused_update as fu
+from repro.kernels import newton_schulz as ns
 
 
 def _bounds(codebook: jax.Array) -> jax.Array:
@@ -145,3 +146,34 @@ def fused_update_ref(
         cr, ar = _requantize(r2, qmap_r, blockwise=blockwise, random_u=u2)
         return fu.FusedUpdateResult(p2, cm, am, cr, ar)
     return fu.FusedUpdateResult(p2, cm, am, None, None)
+
+
+def newton_schulz_ref(x: jax.Array, *, steps: int = ns.DEFAULT_NS_STEPS,
+                      eps: float = 1e-7) -> jax.Array:
+    """≈ orth(x) — the pure-jnp Newton–Schulz oracle (DESIGN.md §11).
+
+    The quintic iteration X ← aX + b(XX^T)X + c(XX^T)²X on the Frobenius-
+    normalized input, min-dim-first via the transpose.  Numerically this is
+    the same tile-replaying path the Pallas kernels mirror
+    (``newton_schulz.newton_schulz(impl="jnp")``), so kernel parity tests
+    have a single source of truth to compare against.
+    """
+    return ns.newton_schulz(x, steps=steps, impl="jnp", eps=eps)
+
+
+def muon_update_ref(p, g, codes_m, absmax_m, qmap_m, *, lr, beta1=0.95,
+                    weight_decay=0.0, gnorm_scale=1.0, stochastic=False,
+                    seed=0,
+                    ns_steps: int = ns.DEFAULT_NS_STEPS) -> fu.FusedUpdateResult:
+    """Muon leaf update oracle: dequantize the block-domain momentum,
+    nesterov-EMA it with the matrix-shaped gradient, Newton–Schulz-
+    orthogonalize, step the param, requantize (DESIGN.md §11).  This is
+    the ``("muon", "jnp")`` registry entry's math, re-exported here next
+    to the other oracles; parity with "interpret"/"pallas" holds because
+    only the NS matmul chain is impl-routed.
+    """
+    from repro.kernels import ops as kops
+    return kops.fused_update(
+        "muon", p, g, codes_m, absmax_m, qmap_m=qmap_m, lr=lr, beta1=beta1,
+        weight_decay=weight_decay, gnorm_scale=gnorm_scale,
+        stochastic=stochastic, seed=seed, ns_steps=ns_steps, impl="jnp")

@@ -115,6 +115,44 @@ def analyze(cost: dict, hlo_text: str, *, n_chips: int,
                     model_flops=model_flops_global, useful_flops_ratio=ratio)
 
 
+def newton_schulz_flops(rows: int, cols: int, steps: int = 5) -> float:
+    """FLOPs of the tiled NS(steps) orthogonalization on an (rows, cols)
+    matrix (kernels/newton_schulz.py; DESIGN.md §11): per iteration one
+    gram (2·m²·n), one m×m finalize (2·m³) and one apply (2·m²·n), with
+    m = min dim.  The repo's first compute-bound optimizer kernel."""
+    m, n = sorted((rows, cols))
+    return float(steps) * (4.0 * m * m * n + 2.0 * m ** 3)
+
+
+def muon_update_roofline(shape: tuple, *, bits: int = 8,
+                         block_size: int = 2048, steps: int = 5) -> dict:
+    """Roofline position of one quantized-Muon matrix-leaf update.
+
+    Unlike the element-wise family (~11 B/param streamed, ~O(100) ops/param
+    → bandwidth-bound, §3 napkin math), Muon adds the NS matmul chain whose
+    FLOPs/param grow with min(m, n): ~4·steps·min_dim, vs ~14 bytes/param
+    streamed.  The update flips compute-bound once
+    min_dim ≳ bytes_per_param·(peak/bw)/(4·steps) ≈ 14·240/20 ≈ 170 on
+    v5e — i.e. essentially every real weight matrix; the per-block
+    dequant/requant stays bandwidth-bound but no longer dominates.  Used
+    by ``bench_speed``'s muon sweep to derive the analytic TPU position."""
+    rows, cols = shape
+    n = rows * cols
+    # p read+write (4+4), g read (4), momentum codes read+write
+    # (2 · bits/8), absmax amortized (8/block_size per state).
+    bytes_per_param = 12.0 + 2.0 * bits / 8.0 + 8.0 / block_size
+    flops = newton_schulz_flops(rows, cols, steps) + 8.0 * n  # + EMA/step
+    compute_s = flops / PEAK_FLOPS
+    memory_s = bytes_per_param * n / HBM_BW
+    return {
+        "flops": flops,
+        "bytes": bytes_per_param * n,
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "bottleneck": "compute" if compute_s > memory_s else "memory",
+    }
+
+
 def model_flops(cfg, case) -> float:
     """MODEL_FLOPS: 6*N*D for training (N = active params), 2*N*D for
     inference forward (D = tokens processed by the step)."""

@@ -20,7 +20,11 @@ detail — so k-bit states inherit the whole-blocks-per-device guarantee.
 The pooled dispatch's ``QuantArena`` (DESIGN.md §10) is that same flat
 block domain with every quantized leaf concatenated, and shards
 identically (block dim over all axes); pooled masters keep the param spec
-and the fp32 small-leaf pool (``Pool32Arena``) is replicated.
+and the fp32 small-leaf pool (``Pool32Arena``) is replicated.  Muon's
+matrix momentum (DESIGN.md §11) needs no extra rule: it is a one-state
+``Quant8Leaf`` riding per-leaf inside the pooled layout, so the block dim
+of its codes/absmax shards over all axes like every other quantized state
+while the Newton–Schulz matmuls consume the (param-sharded) matrix view.
 """
 from __future__ import annotations
 
