@@ -230,6 +230,57 @@ def bench_pooled_dispatch(smoke: bool = False):
     return results
 
 
+def bench_partition(smoke: bool = False):
+    """ZeRO-1 partitioned optimizer state (DESIGN.md §12): per-device
+    owned state bytes and fused launches vs data-parallel degree on a
+    many-leaf tree.  The span-structured dispatch is bit-exact vs the
+    unpartitioned pooled oracle (tests/test_partition.py); this bench
+    records the memory-scaling claim — owned bytes shrink ~linearly with
+    the shard count (gate: 4-way owned <= 0.3x replicated) — into
+    BENCH_speed.json.  This is the CI `--partition` smoke leg."""
+    from repro.core.optim import make_optimizer
+    n_leaves = 12 if smoke else 48
+    key = jax.random.PRNGKey(0)
+    params = {f"layer{i:02d}": jax.random.normal(
+        jax.random.fold_in(key, i), (8 + (i % 5) * 8, 256))
+        for i in range(n_leaves)}
+    grads = jax.tree_util.tree_map(lambda p: p * 0.01, params)
+    results: dict = {}
+    for shards in (1, 2, 4):
+        opt = make_optimizer("adam8", lr=1e-3, min_8bit_size=256,
+                             override_32bit=lambda p: False,
+                             partition=True, partition_shards=shards)
+        st = opt.init(params)
+        step = jax.jit(lambda g, s, o=opt: o.apply(g, s))
+        ops.reset_fused_update_count()
+        step.lower(grads, st)                 # trace only: launches/step
+        calls = ops.fused_update_count()
+        sb = opt.state_bytes(st)
+        us, _ = time_fn(step, grads, st, iters=2 if smoke else 5, warmup=1)
+        results[shards] = {
+            "launches_per_step": calls, "us_per_step": us,
+            "owned_blocks": sb["owned_blocks"],
+            "owned_state_bytes": sb["owned_state_bytes"],
+            "state_bytes": sb["state_bytes"],
+        }
+        emit(f"partition/shards{shards}/owned_state_bytes",
+             float(sb["owned_state_bytes"]),
+             f"{sb['owned_state_bytes'] / sb['state_bytes']:.3f}x of "
+             f"replicated, {calls} span launches")
+    r4 = results[4]
+    assert r4["owned_state_bytes"] <= 0.3 * r4["state_bytes"], results
+    _append_bench_json({
+        "bench": "partition",
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "smoke": smoke, "backend": jax.default_backend(),
+        "n_leaves": n_leaves,
+        "per_shards": {str(k): v for k, v in results.items()},
+        "owned_over_replicated_4way":
+            r4["owned_state_bytes"] / r4["state_bytes"],
+    }, label="partition/json")
+    return results
+
+
 def bench_muon(smoke: bool = False):
     """Muon matrix-optimizer sweep (DESIGN.md §11): the NS(5) fused update
     through the registry, jnp vs Pallas-interpret, plus the pooled-
@@ -315,7 +366,7 @@ def bench_quantize_throughput():
 
 
 def main(smoke: bool = False, bits: int | None = None,
-         algo: str | None = None):
+         algo: str | None = None, partition: bool = False):
     if not smoke:
         bench_table5_update_speed()
         bench_quantize_throughput()
@@ -325,6 +376,8 @@ def main(smoke: bool = False, bits: int | None = None,
         bench_kbit_fused(bits, smoke=smoke)
     if algo == "muon" or not smoke:
         bench_muon(smoke=smoke)
+    if partition or not smoke:
+        bench_partition(smoke=smoke)
 
 
 if __name__ == "__main__":

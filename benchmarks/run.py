@@ -42,6 +42,10 @@ def main() -> None:
                          "suite that supports them (e.g. --algo muon runs "
                          "the Newton–Schulz matrix-optimizer sweep even "
                          "under --smoke; DESIGN.md §11)")
+    ap.add_argument("--partition", action="store_true",
+                    help="also run the ZeRO-1 partitioned-state legs "
+                         "(per-device owned bytes + span launches vs "
+                         "shard count, even under --smoke; DESIGN.md §12)")
     args = ap.parse_args()
     if args.only:
         names = args.only.split(",")
@@ -62,6 +66,8 @@ def main() -> None:
             kwargs["bits"] = args.bits
         if args.algo is not None and "algo" in params:
             kwargs["algo"] = args.algo
+        if args.partition and "partition" in params:
+            kwargs["partition"] = True
         try:
             mod.main(**kwargs)
         except Exception as e:  # keep the harness running

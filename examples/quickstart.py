@@ -13,6 +13,10 @@ memory (more with sub-byte states).
                                   # on 2-D leaves (DESIGN.md §11)
     PYTHONPATH=src python examples/quickstart.py --no-pooled  # per-leaf
                                   # dispatch (debugging; bit-identical)
+    PYTHONPATH=src python examples/quickstart.py --partition 4  # ZeRO-1
+                                  # span-partitioned optimizer state: each
+                                  # of 4 owners updates only its block
+                                  # span (bit-identical; DESIGN.md §12)
 
 ``--algo`` accepts any registered algorithm (adam/adamw/momentum/lamb/
 lars/adagrad/muon): the script compares ``<algo>32`` against ``<algo>8``
@@ -40,9 +44,14 @@ def run(opt_name: str, steps: int = 80, **opt_kw):
     for i in range(steps):
         batch = {k: jnp.asarray(v) for k, v in pipe.batch_at(i).items()}
         state, m = step(state, batch)
-    bytes_ = opt.state_bytes(state.opt_state)["state_bytes"]
+    sb = opt.state_bytes(state.opt_state)
+    bytes_ = sb["state_bytes"]
+    extra = ""
+    if "owned_state_bytes" in sb:
+        extra = (f"  (owned/device: {sb['owned_state_bytes'] / 1e6:.2f} MB "
+                 f"over {sb['partition_shards']} owners)")
     print(f"{opt_name:8s} final loss {float(m['loss']):.4f}  "
-          f"optimizer statistics: {bytes_ / 1e6:.2f} MB")
+          f"optimizer statistics: {bytes_ / 1e6:.2f} MB{extra}")
     return float(m["loss"]), bytes_
 
 
@@ -59,11 +68,22 @@ if __name__ == "__main__":
                     help="per-leaf dispatch instead of the pooled arena "
                          "(one fused launch per leaf instead of one per "
                          "state format; bit-identical — DESIGN.md §10)")
+    ap.add_argument("--partition", type=int, default=0, metavar="N",
+                    help="ZeRO-1 partition of the pooled arena over N "
+                         "owners: each owner updates only its contiguous "
+                         "block span (bit-identical to the unpartitioned "
+                         "run; on a data-parallel mesh the spans run one "
+                         "local fused update per device — DESIGN.md §12)")
     ap.add_argument("--steps", type=int, default=80)
     args = ap.parse_args()
     opt_kw = {} if args.bits == 8 else {"state_bits": (args.bits, 8)}
     if args.no_pooled:
         opt_kw["pooled"] = False
+    if args.partition:
+        if args.no_pooled:
+            ap.error("--partition subdivides the pooled arena and cannot "
+                     "combine with --no-pooled (DESIGN.md §12)")
+        opt_kw.update(partition=True, partition_shards=args.partition)
     l32, b32 = run(f"{args.algo}32", steps=args.steps)
     l8, b8 = run(f"{args.algo}8", steps=args.steps, **opt_kw)
     print(f"\nloss diff: {abs(l8 - l32):.4f}   state memory: {b32 / b8:.1f}x smaller")

@@ -7,12 +7,23 @@ cd "$(dirname "$0")/.."
 
 python -m pip install -e '.[test]'
 
-PYTHONPATH=src python -m pytest -x -q
+# Tier-1 tests with a coverage gate (floor set conservatively below the
+# suite's measured coverage when the gate landed, so refactors can't
+# silently orphan whole code paths; ratchet it up as coverage grows).
+# Falls back to plain pytest where pytest-cov isn't installed, so the
+# tier-1 invocation stays runnable in minimal environments.
+if python -c 'import pytest_cov' 2>/dev/null; then
+  PYTHONPATH=src python -m pytest -x -q --cov=repro --cov-fail-under=75
+else
+  PYTHONPATH=src python -m pytest -x -q
+fi
 
 # Smoke sweep plus the packed 4-bit leg (k-bit qmaps + PackedCodes through
 # the fused registry's jnp + Pallas-interpret in-kernel unpack/pack,
 # DESIGN.md §9) plus the muon leg (NS(5) fused update jnp vs interpret +
 # the pooled-fallback dispatch count on a mixed 2-D/1-D model, DESIGN.md
-# §11).  One invocation: both flags forward to the same suite mains, so
-# this is a superset of the plain --smoke run at no repeated suites.
-PYTHONPATH=src python -m benchmarks.run --smoke --bits 4 --algo muon
+# §11) plus the partition leg (ZeRO-1 owned bytes + span launches vs shard
+# count, DESIGN.md §12).  One invocation: the flags forward to the same
+# suite mains, so this is a superset of the plain --smoke run at no
+# repeated suites.
+PYTHONPATH=src python -m benchmarks.run --smoke --bits 4 --algo muon --partition

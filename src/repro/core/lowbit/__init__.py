@@ -21,9 +21,9 @@ sharding) treats a state slot as (codes-container, absmax) and dispatches on
 from repro.core.lowbit.format import CodeFormat
 from repro.core.lowbit.packing import (SUPPORTED_BITS, PackedCodes,
                                        pack_codes, packed_width,
-                                       unpack_codes)
+                                       unpack_codes, unwrap_codes)
 
 __all__ = [
     "CodeFormat", "PackedCodes", "SUPPORTED_BITS", "pack_codes",
-    "packed_width", "unpack_codes",
+    "packed_width", "unpack_codes", "unwrap_codes",
 ]

@@ -102,3 +102,17 @@ class PackedCodes:
 
     def nbytes(self) -> int:
         return int(self.packed.size)
+
+
+def unwrap_codes(codes):
+    """One state-slot codes container -> ``(raw, bits, n_codes)``.
+
+    ``raw`` is the stored uint8 array, ``bits`` the code bitwidth (8 for
+    plain arrays), ``n_codes`` the logical per-row code count for packed
+    containers and None for plain arrays (the re-wrap sentinel).  The one
+    shared unwrap point for every layer that strips ``PackedCodes`` at a
+    kernel/shard_map boundary (ops.fused_update, ops.segment_tensor_scales,
+    the partitioned span dispatch)."""
+    if isinstance(codes, PackedCodes):
+        return codes.packed, codes.bits, codes.n_codes
+    return codes, 8, None

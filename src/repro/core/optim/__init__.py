@@ -19,10 +19,11 @@ import dataclasses
 from typing import Callable, Optional, Union
 
 from repro.core.optim.adafactor import Adafactor, AdafactorConfig
-from repro.core.optim.base import (ALGOS, FlatSegment, Full32Leaf,
-                                   OptimConfig, Pool32Arena, Pool32Leaf,
-                                   PooledQuantLeaf, Quant8Leaf, QuantArena,
-                                   QuantSegment, default_override_32bit)
+from repro.core.optim.base import (ALGOS, ArenaPartition, FlatSegment,
+                                   Full32Leaf, OptimConfig, Pool32Arena,
+                                   Pool32Leaf, PooledQuantLeaf, Quant8Leaf,
+                                   QuantArena, QuantSegment,
+                                   default_override_32bit, make_partition)
 from repro.core.optim.blockopt import (Block8bitOptimizer, OptState,
                                        repool_like, unpool_state)
 from repro.core.optim.muon import MuonOptimizer
@@ -37,18 +38,19 @@ def optimizer_names() -> list:
     return sorted(_NAMES) + ["adafactor32"]
 
 
-def _from_config(cfg, override_32bit=None):
+def _from_config(cfg, override_32bit=None, mesh=None):
     """Config object -> engine instance (the one dispatch point)."""
     if isinstance(cfg, AdafactorConfig):
         return Adafactor(cfg)
     assert isinstance(cfg, OptimConfig), type(cfg)
     if cfg.algo == "muon":
-        return MuonOptimizer(cfg, override_32bit=override_32bit)
-    return Block8bitOptimizer(cfg, override_32bit=override_32bit)
+        return MuonOptimizer(cfg, override_32bit=override_32bit, mesh=mesh)
+    return Block8bitOptimizer(cfg, override_32bit=override_32bit, mesh=mesh)
 
 
 def make_optimizer(name_or_config: Union[str, OptimConfig, AdafactorConfig],
                    override_32bit: Optional[Callable[[str], bool]] = None,
+                   mesh=None,
                    **kwargs):
     """Build an optimizer from a name or a config object.
 
@@ -66,11 +68,28 @@ def make_optimizer(name_or_config: Union[str, OptimConfig, AdafactorConfig],
     Sub-byte state storage (DESIGN.md §9) is a config field:
     ``make_optimizer("adam8", state_bits=(4, 8))`` stores a packed 4-bit
     first moment and an 8-bit second moment; the same knob packs Muon's
-    matrix momentum (``make_optimizer("muon8", state_bits=(4, 8))``)."""
+    matrix momentum (``make_optimizer("muon8", state_bits=(4, 8))``).
+
+    ``mesh``: device mesh for the partitioned (ZeRO-1) dispatch's
+    shard_map path (DESIGN.md §12).  When the mesh has the
+    ``cfg.partition_axes`` ("data"; "pod,data" on multi-pod meshes) with
+    a combined size > 1 and ``partition_shards`` was left at its
+    default, the shard count is derived from the mesh — so partitioning
+    turns on automatically on data-parallel meshes, and
+    ``partition=False`` opts out."""
     if isinstance(name_or_config, (OptimConfig, AdafactorConfig)):
         cfg = name_or_config
         if kwargs:
             cfg = dataclasses.replace(cfg, **kwargs)
+        if isinstance(cfg, OptimConfig) and mesh is not None \
+                and cfg.partition_shards == 1:
+            names = getattr(mesh, "axis_names", ())
+            axes = cfg.partition_axes
+            if axes and all(a in names for a in axes):
+                size = 1
+                for a in axes:
+                    size *= int(mesh.shape[a])
+                cfg = dataclasses.replace(cfg, partition_shards=size)
         if isinstance(cfg, OptimConfig) and override_32bit is None \
                 and (cfg.bits == 8 or cfg.algo == "muon"):
             # For muon the override doubles as the algorithm routing
@@ -78,7 +97,7 @@ def make_optimizer(name_or_config: Union[str, OptimConfig, AdafactorConfig],
             # embedding exclusion applies to the fp32 baseline too —
             # muon32 and muon8 must route identically to be comparable.
             override_32bit = default_override_32bit
-        return _from_config(cfg, override_32bit)
+        return _from_config(cfg, override_32bit, mesh=mesh)
     name = name_or_config
     if name == "adafactor32":
         fields = {f.name for f in dataclasses.fields(AdafactorConfig)}
@@ -89,13 +108,14 @@ def make_optimizer(name_or_config: Union[str, OptimConfig, AdafactorConfig],
                          f"{optimizer_names()}")
     algo, bits = _NAMES[name]
     return make_optimizer(OptimConfig(algo=algo, bits=bits, **kwargs),
-                          override_32bit=override_32bit)
+                          override_32bit=override_32bit, mesh=mesh)
 
 
 __all__ = [
-    "Adafactor", "AdafactorConfig", "Block8bitOptimizer", "FlatSegment",
-    "Full32Leaf", "MuonOptimizer", "OptimConfig", "OptState", "Pool32Arena",
-    "Pool32Leaf", "PooledQuantLeaf", "Quant8Leaf", "QuantArena",
-    "QuantSegment", "default_override_32bit", "make_optimizer",
-    "optimizer_names", "repool_like", "unpool_state",
+    "Adafactor", "AdafactorConfig", "ArenaPartition", "Block8bitOptimizer",
+    "FlatSegment", "Full32Leaf", "MuonOptimizer", "OptimConfig", "OptState",
+    "Pool32Arena", "Pool32Leaf", "PooledQuantLeaf", "Quant8Leaf",
+    "QuantArena", "QuantSegment", "default_override_32bit",
+    "make_optimizer", "make_partition", "optimizer_names", "repool_like",
+    "unpool_state",
 ]

@@ -67,11 +67,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.lowbit import CodeFormat, PackedCodes
+from repro.core.lowbit import unwrap_codes as lowbit_unwrap
 from repro.core.optim import base
-from repro.core.optim.base import (FlatSegment, Full32Leaf, OptimConfig,
-                                   Pool32Arena, Pool32Leaf, PooledQuantLeaf,
-                                   Quant8Leaf, QuantArena, QuantSegment,
-                                   blocks_to_param, flatten_to_blocks,
+from repro.core.optim.base import (ArenaPartition, FlatSegment, Full32Leaf,
+                                   OptimConfig, Pool32Arena, Pool32Leaf,
+                                   PooledQuantLeaf, Quant8Leaf, QuantArena,
+                                   QuantSegment, blocks_to_param,
+                                   flatten_to_blocks, make_partition,
                                    path_str)
 from repro.models.constrain import constrain as _constrain
 from repro.kernels import fused_update as kfu
@@ -106,9 +108,14 @@ class Block8bitOptimizer:
     """init/apply optimizer owning the f32 master copy of the params."""
 
     def __init__(self, config: OptimConfig,
-                 override_32bit: Optional[Callable[[str], bool]] = None):
+                 override_32bit: Optional[Callable[[str], bool]] = None,
+                 mesh: Optional[Any] = None):
         self.cfg = config
         self.override_32bit = override_32bit or (lambda path: False)
+        # Mesh for the partitioned (ZeRO-1) dispatch's shard_map path
+        # (DESIGN.md §12).  None => the statically-unrolled span dispatch,
+        # which computes identical results on any device count.
+        self._mesh = mesh
         # The algorithm element-wise leaves run through the fused registry.
         # Matrix-class optimizers (MuonOptimizer, DESIGN.md §11) override
         # `_elementwise_algo` to their fallback algorithm ("adamw") while
@@ -209,6 +216,7 @@ class Block8bitOptimizer:
         qsegs: list = []
         fsegs: list = []
         flat32: list = []
+        matrix_paths: list = []
 
         def init_leaf(path, p):
             path = path_str(path)
@@ -216,7 +224,12 @@ class Block8bitOptimizer:
                 # Matrix-class leaves (muon) never pool: each one is its
                 # own Newton–Schulz problem and dispatches per leaf
                 # (DESIGN.md §11) — they ride along like Full32 overrides.
-                return self._init_matrix_leaf(path, p)
+                leaf = self._init_matrix_leaf(path, p)
+                if isinstance(leaf, Quant8Leaf):
+                    # quantized matrix leaves get a whole-leaf owner under
+                    # the partitioned dispatch (DESIGN.md §12)
+                    matrix_paths.append(path)
+                return leaf
             if self._leaf_is_quantized(path, p):
                 nb = base.n_blocks_for(p.shape, bs, cfg.shard_multiple)
                 off = qsegs[-1].offset + qsegs[-1].n_blocks if qsegs else 0
@@ -240,6 +253,9 @@ class Block8bitOptimizer:
                 r=jnp.zeros_like(master) if second else None)
 
         leaves = jax.tree_util.tree_map_with_path(init_leaf, params)
+        shards = cfg.partition_shards if cfg.partition_active else 0
+        mowners = tuple((p, k % max(shards, 1))
+                        for k, p in enumerate(matrix_paths))
         arena = None
         if qsegs:
             total = qsegs[-1].offset + qsegs[-1].n_blocks
@@ -248,7 +264,14 @@ class Block8bitOptimizer:
                 absmax_m=jnp.zeros((total,), jnp.float32),
                 codes_r=self._fmt2.init_codes(total, bs) if second else None,
                 absmax_r=jnp.zeros((total,), jnp.float32) if second else None,
-                segments=tuple(qsegs))
+                segments=tuple(qsegs),
+                # ZeRO-1 ownership over the block dim (DESIGN.md §12):
+                # spans are whole quantization blocks aligned to the
+                # shard grid, so owned spans match the storage shards
+                # (the kernel entry pads each span to its tile rows).
+                partition=None if not shards else make_partition(
+                    total, shards, grid=max(cfg.shard_multiple, 1),
+                    matrix_owners=mowners))
         pool32 = None
         if fsegs:
             total = fsegs[-1].offset + fsegs[-1].n
@@ -257,7 +280,10 @@ class Block8bitOptimizer:
             pool32 = Pool32Arena(
                 master=master, m=jnp.zeros((total,), jnp.float32),
                 r=jnp.zeros((total,), jnp.float32) if second else None,
-                segments=tuple(fsegs))
+                segments=tuple(fsegs),
+                # element-granular ownership, lane-aligned (128) spans
+                partition=None if not shards else make_partition(
+                    total, shards, grid=128))
         gnorm_vec = (jnp.zeros((cfg.pclip_history,), jnp.float32)
                      if cfg.percentile_clipping < 100 else None)
         return OptState(step=jnp.zeros((), jnp.int32), leaves=leaves,
@@ -290,8 +316,18 @@ class Block8bitOptimizer:
         cfg = self.cfg
         if cfg.percentile_clipping >= 100 or state.gnorm_vec is None:
             return jnp.float32(1.0), state.gnorm_vec
+        mesh = (self._partition_mesh(cfg.partition_shards)
+                if cfg.partition_active else None)
         gn2 = jnp.zeros((), jnp.float32)
         for leaf in jax.tree_util.tree_leaves(grads):
+            if mesh is not None:
+                # Partitioned dispatch (DESIGN.md §12): pin the global
+                # gnorm reduction to replicated compute so its f32
+                # summation order matches the unpartitioned oracle —
+                # SPMD would otherwise distribute it (ULP drift in the
+                # clip history).
+                from repro.sharding import rules as _rules
+                (leaf,) = _rules.replicate_for_scales(mesh, (leaf,))
             gn2 = gn2 + jnp.sum(jnp.square(leaf.astype(jnp.float32)))
         hist = state.gnorm_vec
         new_vec = hist.at[jnp.mod(state.step, hist.shape[0])].set(gn2)
@@ -345,7 +381,9 @@ class Block8bitOptimizer:
         """One jnp update for every pooled small leaf at once.  LAMB/LARS
         trust ratios stay per-tensor: each segment's norms are reduced on a
         view reshaped to the original param shape, so the reduction is
-        bit-identical to the per-leaf Full32 path."""
+        bit-identical to the per-leaf Full32 path.  Under the partitioned
+        dispatch (DESIGN.md §12) the per-element math runs span-by-span —
+        scales are finalized globally first, so results are unchanged."""
         cfg = self.cfg
         spec = kfu.ALGO_SPECS[self._ew_algo]
         s = dict(lr=lr, beta1=cfg.beta1, beta2=cfg.beta2, eps=cfg.eps,
@@ -363,9 +401,182 @@ class Block8bitOptimizer:
             s["tensor_scale"] = kfu.segment_scale_vector(
                 [(seg.offset, seg.n) for seg in pool.segments],
                 pool.master.shape[0], seg_scale)
+        # The fp32 pool is deliberately NOT span-computed under the
+        # partitioned dispatch: its leaves are all sub-min_quant_size, so
+        # the whole update is a few KB of elementwise work on replicated
+        # storage — splitting it buys nothing and embedding it in a
+        # different program shape costs ULP-level bit-exactness (XLA FMA
+        # contraction is fusion-context dependent).  Its ArenaPartition
+        # governs ownership accounting and interchange only (DESIGN.md
+        # §12).
         m2, r2, p2 = kfu.update_math(spec, gflat, pool.master, pool.m,
                                      pool.r, s)
         return dataclasses.replace(pool, master=p2, m=m2, r=r2)
+
+    # ------------------------------------------ partitioned (ZeRO-1) dispatch
+    def _partition_mesh(self, n_shards: int):
+        """The mesh for the shard_map span execution, or None for the
+        statically-unrolled fallback (no mesh configured, or the partition
+        axes absent / of mismatched total size — the fallback computes
+        identical results on any device count).  ``cfg.partition_axes``
+        may name several axes ("pod,data" on multi-pod meshes): their size
+        product must equal the shard count."""
+        mesh = self._mesh
+        axes = self.cfg.partition_axes
+        if mesh is None or not axes:
+            return None
+        names = getattr(mesh, "axis_names", ())
+        if any(a not in names for a in axes):
+            return None
+        size = 1
+        for a in axes:
+            size *= int(mesh.shape[a])
+        if size != n_shards:
+            return None
+        return mesh
+
+    def _fused_update_partitioned(self, arena: QuantArena, mb, gb,
+                                  block_seeds, block_offsets, segs, lr,
+                                  step_f, gnorm_scale):
+        """ZeRO-1 arena update (DESIGN.md §12): every owner updates ONLY
+        its owned block span.  Trust ratios (whole-segment norms — a
+        segment may straddle span boundaries) are finalized globally once
+        and sliced per span, so each span's update is block-local and the
+        stitched result is bit-identical to the unpartitioned dispatch.
+        With a matching mesh the spans run under shard_map (one local
+        fused launch per device; grads reduce-scatter in, master slices
+        all-gather out at their use sites); otherwise the spans unroll
+        statically — same math, any device count."""
+        cfg = self.cfg
+        part = arena.partition
+        spec = kfu.ALGO_SPECS[self._ew_algo]
+        hyper = dict(lr=lr, beta1=cfg.beta1, beta2=cfg.beta2, eps=cfg.eps,
+                     weight_decay=cfg.weight_decay, step=step_f,
+                     trust_coeff=cfg.trust_coeff, gnorm_scale=gnorm_scale)
+        mesh = self._partition_mesh(part.n_shards)
+        tscale = None
+        if spec.needs_norms:
+            sm, sg, scm, sam, scr, sar = (mb, gb, arena.codes_m,
+                                          arena.absmax_m, arena.codes_r,
+                                          arena.absmax_r)
+            if mesh is not None:
+                # Pin the scale pass to replicated compute: a whole-
+                # segment norm is a global reduction, and letting SPMD
+                # distribute it would change the f32 reduction order vs
+                # the unpartitioned oracle (ULP drift in trust ratios).
+                # Replicated, every device runs the oracle's exact
+                # single-device reduction.  (The arena is small — codes;
+                # a reduce-then-broadcast of partials is the documented
+                # future optimization, DESIGN.md §12.)
+                from repro.sharding import rules as _rules
+                sm, sg, scm, sam, scr, sar = _rules.replicate_for_scales(
+                    mesh, (sm, sg, scm, sam, scr, sar))
+            tscale = kops.segment_tensor_scales(
+                self._ew_algo, sm, sg, scm, sam, scr, sar,
+                self._qmap1, self._qmap2, segments=segs, impl=self._impl,
+                **hyper)
+        if mesh is not None:
+            return self._span_update_shard_map(
+                mesh, part, arena, mb, gb, block_seeds, block_offsets,
+                tscale, hyper)
+        outs = []
+        for start, n in part.spans:
+            if n == 0:
+                continue
+            sl = slice(start, start + n)
+            outs.append(kops.fused_update(
+                self._ew_algo, mb[sl], gb[sl],
+                _slice_blocks(arena.codes_m, start, n), arena.absmax_m[sl],
+                None if arena.codes_r is None
+                else _slice_blocks(arena.codes_r, start, n),
+                None if arena.absmax_r is None else arena.absmax_r[sl],
+                self._qmap1, self._qmap2, blockwise=True,
+                stochastic=cfg.stochastic_rounding,
+                block_seeds=block_seeds[sl],
+                block_offsets=block_offsets[sl],
+                tensor_scale_blocks=None if tscale is None else tscale[sl],
+                impl=self._impl, **hyper))
+        return _concat_span_results(outs)
+
+    def _span_update_shard_map(self, mesh, part: ArenaPartition,
+                               arena: QuantArena, mb, gb, block_seeds,
+                               block_offsets, tscale, hyper):
+        """shard_map execution of the owned spans: the arena's padded
+        block domain splits into one span per device on the partition
+        axis; each device runs ONE local fused_update over just its span
+        (sharding/rules.py owns the span specs)."""
+        from repro.sharding import rules as _rules
+        cfg = self.cfg
+        axis = cfg.partition_axes
+        two = arena.codes_r is not None
+        has_ts = tscale is not None
+
+        cm, bits_m, nc_m = lowbit_unwrap(arena.codes_m)
+        cr, bits_r, nc_r = lowbit_unwrap(arena.codes_r)
+        spans = [mb, gb, cm, arena.absmax_m, block_seeds, block_offsets]
+        if two:
+            spans += [cr, arena.absmax_r]
+        if has_ts:
+            spans.append(tscale)
+        static = {k: v for k, v in hyper.items()
+                  if k not in ("lr", "step", "gnorm_scale")}
+
+        def local(args, consts):
+            it = iter(args)
+            mb_, gb_, cm_, am_, seeds_, offs_ = (next(it)
+                                                 for _ in range(6))
+            cr_, ar_ = (next(it), next(it)) if two else (None, None)
+            ts_ = next(it) if has_ts else None
+            qm1, qm2, lr_, step_, gs_ = consts
+            res = kops.fused_update(
+                self._ew_algo, mb_, gb_,
+                PackedCodes(cm_, bits_m, nc_m) if nc_m is not None else cm_,
+                am_,
+                None if cr_ is None else (
+                    PackedCodes(cr_, bits_r, nc_r) if nc_r is not None
+                    else cr_),
+                ar_, qm1, qm2, lr=lr_, step=step_, gnorm_scale=gs_,
+                blockwise=True, stochastic=cfg.stochastic_rounding,
+                block_seeds=seeds_, block_offsets=offs_,
+                tensor_scale_blocks=ts_, impl=self._impl, **static)
+
+            def bare(c):
+                return c.packed if isinstance(c, PackedCodes) else c
+            out = (res.p, bare(res.codes_m), res.absmax_m)
+            if two:
+                out += (bare(res.codes_r), res.absmax_r)
+            return out
+
+        consts = (self._qmap1, self._qmap2 if two else self._qmap1,
+                  hyper["lr"], hyper["step"], hyper["gnorm_scale"])
+        outs = _rules.shard_map_over_spans(
+            mesh, axis, part, local, spans, consts)
+        p2, cm2, am2 = outs[0], outs[1], outs[2]
+        if nc_m is not None:
+            cm2 = PackedCodes(cm2, bits_m, nc_m)
+        cr2 = ar2 = None
+        if two:
+            cr2, ar2 = outs[3], outs[4]
+            if nc_r is not None:
+                cr2 = PackedCodes(cr2, bits_r, nc_r)
+        return kfu.FusedUpdateResult(p2, cm2, am2, cr2, ar2)
+
+    def _route_matrix_leaf(self, owner: int, leaf: Quant8Leaf, g, lr,
+                           step_f, seed, gnorm_scale):
+        """Whole-leaf owner routing for muon matrix leaves under the
+        partitioned dispatch (DESIGN.md §12): on a matching mesh, only the
+        owner device runs the Newton–Schulz update; the result broadcasts
+        to the replicas (exact — codes are small integers in f32).
+        Without a mesh every device computes it, identically."""
+        part_shards = max(self.cfg.partition_shards, 1)
+        mesh = self._partition_mesh(part_shards)
+        fn = self._apply_quant8
+        if mesh is None:
+            return fn(leaf, g, lr, step_f, seed, gnorm_scale)
+        from repro.sharding import rules as _rules
+        return _rules.owner_routed(
+            mesh, self.cfg.partition_axes, owner, fn,
+            (leaf, g, lr, step_f, seed, gnorm_scale))
 
     def _apply_pooled(self, grads: Pytree, state: OptState, lr, step_f,
                       base_seed, gnorm_scale):
@@ -406,18 +617,23 @@ class Block8bitOptimizer:
                 offs.append(np.arange(leaf.n_blocks, dtype=np.int32))
             gb = _constrain(jnp.concatenate(gbs), "all", None)
             mb = _constrain(jnp.concatenate(mbs), "all", None)
-            res = kops.fused_update(
-                self._ew_algo, mb, gb, arena.codes_m, arena.absmax_m,
-                arena.codes_r, arena.absmax_r, self._qmap1, self._qmap2,
-                lr=lr, beta1=cfg.beta1, beta2=cfg.beta2, eps=cfg.eps,
-                weight_decay=cfg.weight_decay, step=step_f,
-                trust_coeff=cfg.trust_coeff, gnorm_scale=gnorm_scale,
-                blockwise=True, stochastic=cfg.stochastic_rounding,
-                block_seeds=jnp.concatenate(seeds),
-                block_offsets=jnp.asarray(np.concatenate(offs)),
-                segments=tuple((s.offset, s.n_blocks)
-                               for s in arena.segments),
-                impl=self._impl)
+            block_seeds = jnp.concatenate(seeds)
+            block_offsets = jnp.asarray(np.concatenate(offs))
+            segs = tuple((s.offset, s.n_blocks) for s in arena.segments)
+            if arena.partition is not None and cfg.partition_active:
+                res = self._fused_update_partitioned(
+                    arena, mb, gb, block_seeds, block_offsets, segs, lr,
+                    step_f, gnorm_scale)
+            else:
+                res = kops.fused_update(
+                    self._ew_algo, mb, gb, arena.codes_m, arena.absmax_m,
+                    arena.codes_r, arena.absmax_r, self._qmap1, self._qmap2,
+                    lr=lr, beta1=cfg.beta1, beta2=cfg.beta2, eps=cfg.eps,
+                    weight_decay=cfg.weight_decay, step=step_f,
+                    trust_coeff=cfg.trust_coeff, gnorm_scale=gnorm_scale,
+                    blockwise=True, stochastic=cfg.stochastic_rounding,
+                    block_seeds=block_seeds, block_offsets=block_offsets,
+                    segments=segs, impl=self._impl)
             new_arena = dataclasses.replace(
                 arena, codes_m=res.codes_m, absmax_m=res.absmax_m,
                 codes_r=res.codes_r if res.codes_r is not None
@@ -440,6 +656,7 @@ class Block8bitOptimizer:
         # ride-along leaf recovers its flatten index i — per-leaf seeds
         # (base + i*7919) therefore match the per-leaf dispatch bit-exactly.
         ent = iter(entries)
+        mk = [0]   # matrix-leaf counter: k-th matrix leaf -> owner k % D
 
         def upd(leaf, g):
             _, _, i = next(ent)
@@ -452,10 +669,16 @@ class Block8bitOptimizer:
             if isinstance(leaf, Quant8Leaf):
                 # matrix-class (muon) leaves stay per-leaf under the pooled
                 # dispatch: each is its own Newton–Schulz problem
-                # (DESIGN.md §11).
-                return self._apply_quant8(
-                    leaf, g, lr, step_f, base_seed + jnp.int32(i * 7919),
-                    gnorm_scale)
+                # (DESIGN.md §11).  Partitioned, each is routed whole-leaf
+                # to its owner (DESIGN.md §12) — same math, same seed.
+                seed = base_seed + jnp.int32(i * 7919)
+                if cfg.partition_active:
+                    owner = mk[0] % max(cfg.partition_shards, 1)
+                    mk[0] += 1
+                    return self._route_matrix_leaf(owner, leaf, g, lr,
+                                                   step_f, seed, gnorm_scale)
+                return self._apply_quant8(leaf, g, lr, step_f, seed,
+                                          gnorm_scale)
             return self._apply_full32(leaf, g, lr, step_f, gnorm_scale)
 
         new_leaves = jax.tree_util.tree_map(upd, state.leaves, grads,
@@ -567,8 +790,81 @@ class Block8bitOptimizer:
                                         if pool.r is not None else 0)
             master += pool.master.size * 4
             n_params += pool.master.size
-        return {"state_bytes": int(stats), "master_bytes": int(master),
-                "n_params": int(n_params)}
+        out = {"state_bytes": int(stats), "master_bytes": int(master),
+               "n_params": int(n_params)}
+        owned = self._owned_state_bytes(state)
+        if owned is not None:
+            out.update(owned)
+        return out
+
+    def _owned_state_bytes(self, state: OptState) -> Optional[dict]:
+        """Partitioned (ZeRO-1) per-device accounting (DESIGN.md §12):
+        the largest owner's share of the quantized statistics — its arena
+        block span plus the matrix leaves it owns — with the (replicated,
+        tiny) fp32 pool and any per-leaf Full32 override counted in full.
+        None when partitioning is inactive."""
+        arena = getattr(state, "arena", None)
+        part = getattr(arena, "partition", None) if arena is not None else None
+        if part is None or not self.cfg.partition_active:
+            return None
+
+        def codes_bytes_per_block(c):
+            if isinstance(c, PackedCodes):
+                return c.nbytes() // c.packed.shape[0]
+            return int(np.prod(c.shape[1:])) or 1
+
+        per_block = codes_bytes_per_block(arena.codes_m) + 4
+        if arena.codes_r is not None:
+            per_block += codes_bytes_per_block(arena.codes_r) + 4
+        owner_bytes = [n * per_block for _, n in part.spans]
+        # muon matrix leaves: whole-leaf ownership, k-th leaf -> k % D
+        matrix = [l for l in jax.tree_util.tree_leaves(
+            state.leaves, is_leaf=_is_state_leaf)
+            if isinstance(l, Quant8Leaf)]
+        for k, leaf in enumerate(matrix):
+            b = (leaf.codes_m.nbytes()
+                 if isinstance(leaf.codes_m, PackedCodes)
+                 else leaf.codes_m.size) + leaf.absmax_m.size * 4
+            if leaf.codes_r is not None:
+                b += (leaf.codes_r.nbytes()
+                      if isinstance(leaf.codes_r, PackedCodes)
+                      else leaf.codes_r.size) + leaf.absmax_r.size * 4
+            owner_bytes[k % part.n_shards] += b
+        # replicated remainder: fp32 pool + per-leaf Full32 overrides
+        rep = 0
+        pool = getattr(state, "pool32", None)
+        if pool is not None:
+            rep += pool.m.size * 4 + (pool.r.size * 4
+                                      if pool.r is not None else 0)
+        for leaf in jax.tree_util.tree_leaves(state.leaves,
+                                              is_leaf=_is_state_leaf):
+            if isinstance(leaf, Full32Leaf):
+                rep += leaf.m.size * 4 + (leaf.r.size * 4
+                                          if leaf.r is not None else 0)
+        return {"partition_shards": part.n_shards,
+                "owned_blocks": part.max_owned,
+                "owned_state_bytes": int(max(owner_bytes) + rep)}
+
+
+def _concat_span_results(outs):
+    """Stitch per-span FusedUpdateResults back into the arena layout
+    (device-side concat along the block dim, PackedCodes-aware)."""
+    assert outs, "no non-empty spans"
+    if len(outs) == 1:
+        return outs[0]
+
+    def cat(field):
+        parts = [getattr(o, field) for o in outs]
+        if parts[0] is None:
+            return None
+        if isinstance(parts[0], PackedCodes):
+            return PackedCodes(
+                jnp.concatenate([p.packed for p in parts]),
+                parts[0].bits, parts[0].n_codes)
+        return jnp.concatenate(parts)
+
+    return kfu.FusedUpdateResult(*(cat(f)
+                                   for f in kfu.FusedUpdateResult._fields))
 
 
 # ------------------------------------------------ pooled <-> per-leaf views
@@ -674,7 +970,7 @@ def repool_like(per_leaf: OptState, template: OptState) -> OptState:
             absmax_r=None if t_arena.absmax_r is None
             else _concat_rows([p.absmax_r for p in parts],
                               t_arena.absmax_r),
-            segments=t_arena.segments)
+            segments=t_arena.segments, partition=t_arena.partition)
     pool = None
     if t_pool is not None:
         parts = [by_flat[s.offset] for s in t_pool.segments]
@@ -686,7 +982,7 @@ def repool_like(per_leaf: OptState, template: OptState) -> OptState:
             master=flat([p.master for p in parts]),
             m=flat([p.m for p in parts]),
             r=None if t_pool.r is None else flat([p.r for p in parts]),
-            segments=t_pool.segments)
+            segments=t_pool.segments, partition=t_pool.partition)
     return OptState(step=per_leaf.step, leaves=leaves,
                     gnorm_vec=per_leaf.gnorm_vec, arena=arena, pool32=pool)
 

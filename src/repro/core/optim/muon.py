@@ -54,13 +54,14 @@ class MuonOptimizer(Block8bitOptimizer):
     (quantized) momentum updates; all other leaves run fused adamw."""
 
     def __init__(self, config: OptimConfig,
-                 override_32bit: Optional[Callable[[str], bool]] = None):
+                 override_32bit: Optional[Callable[[str], bool]] = None,
+                 mesh=None):
         assert config.algo == "muon", config.algo
         if not config.blockwise_norm:
             raise ValueError(
                 "muon serves block-wise quantization only; the tensor-wise "
                 "ablation is element-wise (DESIGN.md §11)")
-        super().__init__(config, override_32bit=override_32bit)
+        super().__init__(config, override_32bit=override_32bit, mesh=mesh)
 
     # ------------------------------------------------------------- routing
     def _elementwise_algo(self, algo: str) -> str:

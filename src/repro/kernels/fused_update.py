@@ -335,6 +335,93 @@ def _make_norm_kernel(spec: AlgoSpec, rows: int, bsz: int,
     return kernel
 
 
+def _norm_partials_pallas(spec: AlgoSpec, p, g, codes_m, absmax_m, codes_r,
+                          absmax_r, qm1, qm2, scalars, *, rows: int,
+                          bits_m: int, bits_r: int, interpret: bool):
+    """Run the norm prologue over the whole input: per-block partial
+    squared norms, (n_blocks, N_SCALARS) f32.  Shared by the fused update
+    and the standalone segment-scale pass of the partitioned dispatch
+    (DESIGN.md §12) — one implementation, so both produce bit-identical
+    partials."""
+    n_blocks, bsz = p.shape
+    w1 = packed_width(bsz, bits_m)
+    row_spec = pl.BlockSpec((rows, bsz), lambda i: (i, 0))
+    code1_spec = pl.BlockSpec((rows, w1), lambda i: (i, 0))
+    one_spec = pl.BlockSpec((rows, 1), lambda i: (i, 0))
+    const_spec = pl.BlockSpec((1, common.CODEBOOK_SIZE), lambda i: (0, 0))
+    scal_spec = pl.BlockSpec((1, N_SCALARS), lambda i: (0, 0))
+
+    norm_kernel = _make_norm_kernel(spec, rows, bsz, bits_m, bits_r)
+    in_specs = [scal_spec]
+    args = [scalars.reshape(1, N_SCALARS)]
+    if spec.norm_kind == "lamb":
+        in_specs += [const_spec, const_spec]
+        args += [qm1, qm2]
+    in_specs += [row_spec, row_spec]
+    args += [p, g]
+    if spec.norm_kind == "lamb":
+        w2 = packed_width(bsz, bits_r)
+        code2_spec = pl.BlockSpec((rows, w2), lambda i: (i, 0))
+        in_specs += [code1_spec, one_spec, code2_spec, one_spec]
+        args += [codes_m, absmax_m[:, None], codes_r, absmax_r[:, None]]
+    return pl.pallas_call(
+        norm_kernel,
+        grid=(n_blocks // rows,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((rows, N_SCALARS), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_blocks, N_SCALARS), jnp.float32),
+        interpret=interpret,
+    )(*args)
+
+
+def segment_scales_from_partials(spec: AlgoSpec, partials, segments,
+                                 n_blocks: int, weight_decay, trust_coeff):
+    """Finalize per-block norm partials into the per-block tensor_scale
+    vector: a (nb_s,) sum per segment — identical in shape (hence in f32
+    reduction order) to the per-leaf dispatch, the pooled/per-leaf AND
+    partitioned/unpartitioned trust-ratio bit-exactness contract."""
+    def seg_scale(i, off, nb):
+        sums = jnp.sum(partials[off:off + nb], axis=0)
+        return tensor_scale_from_norms(
+            spec, sums[0], sums[1], sums[2],
+            weight_decay=weight_decay, trust_coeff=trust_coeff)
+
+    return segment_scale_vector(segments, n_blocks, seg_scale)
+
+
+@functools.partial(jax.jit, static_argnames=("algo", "rows", "stochastic",
+                                             "interpret", "bits_m", "bits_r",
+                                             "segments"))
+def segment_scales_pallas(
+    p, g, codes_m, absmax_m, codes_r, absmax_r, qmap_m, qmap_r, scalars,
+    *, algo: str, rows: int = common.DEFAULT_ROWS, stochastic: bool = False,
+    interpret: bool = True, bits_m: int = 8, bits_r: int = 8,
+    segments: tuple = (),
+) -> jax.Array:
+    """Standalone norm-prologue pass -> (n_blocks,) per-block tensor_scale,
+    exactly the vector ``fused_update_pallas`` would derive internally.
+    The partitioned dispatch (DESIGN.md §12) runs this once over the whole
+    arena, then feeds per-span slices to the main kernel via
+    ``tensor_scale_blocks`` — segment norms are global reductions and a
+    leaf may straddle owned-span boundaries."""
+    del stochastic
+    spec = ALGO_SPECS[algo]
+    n_blocks = p.shape[0]
+    assert n_blocks % rows == 0, (n_blocks, rows)
+    if not segments:
+        segments = ((0, n_blocks),)
+    if not spec.needs_norms:
+        return jnp.ones((n_blocks,), jnp.float32)
+    scalars = scalars.astype(jnp.float32)
+    qm1 = common.padded_qmap(qmap_m)
+    qm2 = common.padded_qmap(qmap_r) if spec.norm_kind == "lamb" else None
+    partials = _norm_partials_pallas(
+        spec, p, g, codes_m, absmax_m, codes_r, absmax_r, qm1, qm2, scalars,
+        rows=rows, bits_m=bits_m, bits_r=bits_r, interpret=interpret)
+    return segment_scales_from_partials(spec, partials, segments, n_blocks,
+                                        scalars[4], scalars[7])
+
+
 # ------------------------------------------------------------- public entry
 @functools.partial(jax.jit, static_argnames=("algo", "rows", "stochastic",
                                              "interpret", "bits_m", "bits_r",
@@ -351,6 +438,7 @@ def fused_update_pallas(
     scalars: jax.Array,            # (N_SCALARS,) f32 (tensor_scale slot unused)
     block_seeds: jax.Array,        # (n_blocks,) int32 per-block rounding seeds
     block_offsets: jax.Array,      # (n_blocks,) int32 leaf-local block index
+    tensor_scale_blocks: Optional[jax.Array] = None,  # (n_blocks,) f32
     *,
     algo: str,
     rows: int = common.DEFAULT_ROWS,
@@ -372,8 +460,13 @@ def fused_update_pallas(
     ``segments`` lists the contiguous per-tensor block ranges the lamb/lars
     norm prologue is finalized over (empty = one segment spanning the
     input); blocks outside every segment get tensor_scale 1.0.
-    Sub-byte state slots (``bits_m``/``bits_r`` < 8) stream bit-packed
-    uint8 words and unpack/re-pack inside the kernel (DESIGN.md §9).
+    ``tensor_scale_blocks`` short-circuits the norm prologue with an
+    externally computed per-block vector — the partitioned dispatch
+    (DESIGN.md §12) computes it globally (``segment_scales_pallas``) and
+    feeds each owned span its slice, since a segment may straddle span
+    boundaries.  Sub-byte state slots (``bits_m``/``bits_r`` < 8) stream
+    bit-packed uint8 words and unpack/re-pack inside the kernel
+    (DESIGN.md §9).
     """
     spec = ALGO_SPECS[algo]
     two = spec.n_states == 2
@@ -402,36 +495,20 @@ def fused_update_pallas(
     scalars = scalars.astype(jnp.float32)
     tscale_blocks = None
     if spec.needs_norms:
-        norm_kernel = _make_norm_kernel(spec, rows, bsz, bits_m, bits_r)
-        in_specs = [scal_spec]
-        args = [scalars.reshape(1, N_SCALARS)]
-        if spec.norm_kind == "lamb":
-            in_specs += [const_spec, const_spec]
-            args += [qm1, qm2]
-        in_specs += [row_spec, row_spec]
-        args += [p, g]
-        if spec.norm_kind == "lamb":
-            in_specs += [code1_spec, one_spec, code2_spec, one_spec]
-            args += [codes_m, absmax_m[:, None], codes_r, absmax_r[:, None]]
-        partials = pl.pallas_call(
-            norm_kernel,
-            grid=grid,
-            in_specs=in_specs,
-            out_specs=pl.BlockSpec((rows, N_SCALARS), lambda i: (i, 0)),
-            out_shape=jax.ShapeDtypeStruct((n_blocks, N_SCALARS), jnp.float32),
-            interpret=interpret,
-        )(*args)
-        # Finalize per segment: a (nb_s,) sum per tensor, identical in
-        # shape (hence in f32 reduction order) to the per-leaf dispatch —
-        # the pooled/per-leaf trust-ratio bit-exactness contract.
-        def seg_scale(i, off, nb):
-            sums = jnp.sum(partials[off:off + nb], axis=0)
-            return tensor_scale_from_norms(
-                spec, sums[0], sums[1], sums[2],
-                weight_decay=scalars[4], trust_coeff=scalars[7])
-
-        tscale_blocks = segment_scale_vector(segments, n_blocks,
-                                             seg_scale)[:, None]
+        if tensor_scale_blocks is not None:
+            # Externally finalized scales (partitioned dispatch): the
+            # caller ran the prologue globally; this span consumes its
+            # slice directly.
+            tscale_blocks = tensor_scale_blocks.astype(jnp.float32)[:, None]
+        else:
+            partials = _norm_partials_pallas(
+                spec, p, g, codes_m, absmax_m, codes_r, absmax_r, qm1,
+                qm2 if spec.norm_kind == "lamb" else None, scalars,
+                rows=rows, bits_m=bits_m, bits_r=bits_r,
+                interpret=interpret)
+            tscale_blocks = segment_scales_from_partials(
+                spec, partials, segments, n_blocks, scalars[4],
+                scalars[7])[:, None]
     scalars = scalars.at[7].set(1.0)
 
     kernel = _make_update_kernel(spec, rows, bsz, stochastic, bits_m, bits_r)

@@ -33,12 +33,14 @@ dequantize and requantize.
 """
 from __future__ import annotations
 
+import contextlib
 from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.lowbit import PackedCodes, pack_codes, unpack_codes
+from repro.core.lowbit import (PackedCodes, pack_codes, unpack_codes,
+                               unwrap_codes)
 from repro.kernels import common, ref
 from repro.kernels import fused_update as _fu
 from repro.kernels import newton_schulz as _ns
@@ -110,6 +112,18 @@ def fused_update_count() -> int:
     return _FUSED_UPDATE_CALLS[0]
 
 
+@contextlib.contextmanager
+def dispatch_count_paused():
+    """Suspend the dispatch counter for shape-only traces (e.g. the
+    eval_shape out-spec inference in sharding/rules.py): fused_update
+    calls made inside the block do not count as launches."""
+    n0 = _FUSED_UPDATE_CALLS[0]
+    try:
+        yield
+    finally:
+        _FUSED_UPDATE_CALLS[0] = n0
+
+
 def register(algo: str, impl: str, fn: Callable) -> None:
     """Register a fused-update backend under ``(algo, impl)``.  ``fn`` takes
     (p, g, codes_m, absmax_m, codes_r, absmax_r, qmap_m, qmap_r, **hyper)
@@ -122,18 +136,23 @@ def registered(algo: str | None = None) -> list[tuple[str, str]]:
     return sorted(k for k in _REGISTRY if algo is None or k[0] == algo)
 
 
+def _scalars_vec(lr, beta1, beta2, eps, weight_decay, step, gnorm_scale,
+                 trust_coeff) -> jax.Array:
+    """The (N_SCALARS,) f32 hyperparameter vector in the kernel's fixed
+    slot order (fused_update.N_SCALARS layout)."""
+    return jnp.stack([jnp.asarray(x, jnp.float32)
+                      for x in (lr, beta1, beta2, eps, weight_decay, step,
+                                gnorm_scale, trust_coeff)])
+
+
 def _pallas_entry(algo: str, interpret: bool) -> Callable:
     def run(p, g, cm, am, cr, ar, qmap_m, qmap_r, *,
             lr, beta1, beta2, eps, weight_decay, step, trust_coeff,
             gnorm_scale, stochastic, seed, rows, bits_m=8, bits_r=8,
-            block_seeds=None, block_offsets=None, segments=None):
-        scalars = jnp.stack([
-            jnp.asarray(lr, jnp.float32), jnp.asarray(beta1, jnp.float32),
-            jnp.asarray(beta2, jnp.float32), jnp.asarray(eps, jnp.float32),
-            jnp.asarray(weight_decay, jnp.float32),
-            jnp.asarray(step, jnp.float32),
-            jnp.asarray(gnorm_scale, jnp.float32),
-            jnp.asarray(trust_coeff, jnp.float32)])
+            block_seeds=None, block_offsets=None, segments=None,
+            tensor_scale_blocks=None):
+        scalars = _scalars_vec(lr, beta1, beta2, eps, weight_decay, step,
+                               gnorm_scale, trust_coeff)
         two = _fu.ALGO_SPECS[algo].n_states == 2
         nb = p.shape[0]
         # Single-tensor defaults: one segment, a shared seed, arange block
@@ -149,10 +168,13 @@ def _pallas_entry(algo: str, interpret: bool) -> Callable:
         arrs, _ = _pad_rows(arrs, nb, rows)
         p, g, cm, am, block_seeds, block_offsets = arrs[:6]
         cr, ar = (arrs[6], arrs[7]) if two else (None, None)
+        if tensor_scale_blocks is not None:
+            (tensor_scale_blocks,), _ = _pad_rows(
+                [tensor_scale_blocks], nb, rows)
         res = _fu.fused_update_pallas(
             p, g, cm, am, cr, ar, qmap_m, qmap_r if two else None, scalars,
-            block_seeds, block_offsets, algo=algo, rows=rows,
-            stochastic=stochastic, interpret=interpret,
+            block_seeds, block_offsets, tensor_scale_blocks, algo=algo,
+            rows=rows, stochastic=stochastic, interpret=interpret,
             bits_m=bits_m, bits_r=bits_r, segments=segments)
         return _fu.FusedUpdateResult(
             res.p[:nb], res.codes_m[:nb], res.absmax_m[:nb],
@@ -250,6 +272,7 @@ def fused_update(
     block_seeds=None,
     block_offsets=None,
     segments=None,
+    tensor_scale_blocks=None,
     ns_steps: int = _ns.DEFAULT_NS_STEPS,
     impl: Optional[str] = None,
     rows: int = DEFAULT_ROWS,
@@ -271,7 +294,10 @@ def fused_update(
     ``segments`` (contiguous ``(block_offset, n_blocks)`` per-tensor
     ranges, used by the lamb/lars per-tensor norm finalization).  Left at
     None they default to the single-tensor interpretation (shared ``seed``,
-    ``arange`` offsets, one segment).  Returns a
+    ``arange`` offsets, one segment).  ``tensor_scale_blocks`` (partitioned
+    dispatch, DESIGN.md §12) bypasses the norm machinery entirely with a
+    precomputed per-block trust-ratio vector — see
+    :func:`segment_tensor_scales`.  Returns a
     :class:`~repro.kernels.fused_update.FusedUpdateResult` whose
     codes_r/absmax_r are None for one-state algorithms.
 
@@ -289,13 +315,9 @@ def fused_update(
         raise KeyError(f"no fused_update backend for (algo={algo!r}, "
                        f"impl={impl!r}); registered: {registered()}")
 
-    def unwrap(codes):
-        if isinstance(codes, PackedCodes):
-            return codes.packed, codes.bits, codes.n_codes
-        return codes, 8, None
     has_second = codes_r is not None
-    codes_m, bits_m, ncodes_m = unwrap(codes_m)
-    codes_r, bits_r, ncodes_r = unwrap(codes_r)
+    codes_m, bits_m, ncodes_m = unwrap_codes(codes_m)
+    codes_r, bits_r, ncodes_r = unwrap_codes(codes_r)
     checks = [(qmap_m, bits_m, "qmap_m")]
     if has_second:
         checks.append((qmap_r, bits_r, "qmap_r"))
@@ -310,7 +332,8 @@ def fused_update(
                  stochastic=stochastic, seed=seed, rows=rows,
                  bits_m=bits_m, bits_r=bits_r,
                  block_seeds=block_seeds, block_offsets=block_offsets,
-                 segments=None if segments is None else tuple(segments))
+                 segments=None if segments is None else tuple(segments),
+                 tensor_scale_blocks=tensor_scale_blocks)
     if _fu.ALGO_SPECS[algo].matrix:
         hyper["ns_steps"] = ns_steps
         hyper["blockwise"] = blockwise
@@ -323,3 +346,59 @@ def fused_update(
     if ncodes_r is not None and res.codes_r is not None:
         res = res._replace(codes_r=PackedCodes(res.codes_r, bits_r, ncodes_r))
     return res
+
+
+def segment_tensor_scales(
+    algo: str,
+    p, g, codes_m, absmax_m, codes_r=None, absmax_r=None,
+    qmap_m=None, qmap_r=None,
+    *,
+    lr, beta1=0.9, beta2=0.999, eps=1e-8, weight_decay=0.0, step=1.0,
+    trust_coeff=0.001, gnorm_scale=1.0,
+    segments=None,
+    impl: Optional[str] = None,
+    rows: int = DEFAULT_ROWS,
+) -> jax.Array:
+    """Global per-block tensor_scale pass for the partitioned dispatch
+    (DESIGN.md §12): the LAMB/LARS trust ratio is a whole-segment norm, and
+    a segment may straddle owned-span boundaries, so the partitioned
+    optimizer runs this ONCE over the full arena and hands each span its
+    slice via ``fused_update(..., tensor_scale_blocks=...)``.
+
+    Per ``impl`` this is exactly the computation ``fused_update`` performs
+    internally (the Pallas norm prologue + per-segment finalize, or the jnp
+    oracle's static-slice reductions), so partitioned and unpartitioned
+    dispatch consume bit-identical scales.  Returns all-ones for
+    block-local algorithms."""
+    impl = impl or default_impl()
+    spec = _fu.ALGO_SPECS[algo]
+    nb = p.shape[0]
+    if not spec.needs_norms:
+        return jnp.ones((nb,), jnp.float32)
+
+    codes_m, bits_m, _ = unwrap_codes(codes_m)
+    codes_r, bits_r, _ = unwrap_codes(codes_r)
+    segments = tuple(segments) if segments else ((0, nb),)
+    hyper = dict(lr=lr, beta1=beta1, beta2=beta2, eps=eps,
+                 weight_decay=weight_decay, step=step,
+                 trust_coeff=trust_coeff, gnorm_scale=gnorm_scale)
+    if impl == "jnp":
+        cm = unpack_codes(codes_m, bits_m).astype(jnp.uint8)
+        cr = (unpack_codes(codes_r, bits_r).astype(jnp.uint8)
+              if codes_r is not None else None)
+        return ref.segment_scales_ref(p, g, cm, absmax_m, cr, absmax_r,
+                                      qmap_m, qmap_r, algo=algo,
+                                      segments=segments, **hyper)
+    scalars = _scalars_vec(lr, beta1, beta2, eps, weight_decay, step,
+                           gnorm_scale, trust_coeff)
+    two = spec.n_states == 2
+    arrs = [p, g, codes_m, absmax_m] + ([codes_r, absmax_r] if two else [])
+    arrs, _ = _pad_rows(arrs, nb, rows)
+    p, g, codes_m, absmax_m = arrs[:4]
+    codes_r, absmax_r = (arrs[4], arrs[5]) if two else (None, None)
+    out = _fu.segment_scales_pallas(
+        p, g, codes_m, absmax_m, codes_r, absmax_r, qmap_m,
+        qmap_r if two else None, scalars, algo=algo, rows=rows,
+        interpret=(impl == "interpret"), bits_m=bits_m, bits_r=bits_r,
+        segments=segments)
+    return out[:nb]

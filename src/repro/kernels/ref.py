@@ -68,6 +68,51 @@ def _requantize(x: jax.Array, codebook: jax.Array, *, blockwise: bool,
     return codes.astype(jnp.uint8), absmax
 
 
+def _segment_scales(spec, g, p, m, r, s, trust_coeff, segments):
+    """Per-block tensor_scale vector from per-segment trust ratios, on
+    global 2-D slices — the jnp analogue of the kernels' prologue+finalize
+    (shared by ``fused_update_ref`` and ``segment_scales_ref`` so the
+    partitioned dispatch consumes bit-identical scales)."""
+    two = spec.n_states == 2
+
+    def seg_scale(i, off, nb):
+        sl = slice(off, off + nb)
+        return fu.tensor_scale_for(spec, g[sl], p[sl], m[sl],
+                                   r[sl] if two else None, s, trust_coeff)
+
+    return fu.segment_scale_vector(segments, p.shape[0], seg_scale)
+
+
+def segment_scales_ref(
+    p, g, codes_m, absmax_m, codes_r, absmax_r, qmap_m, qmap_r, *,
+    algo: str, lr, beta1=0.9, beta2=0.999, eps=1e-8, weight_decay=0.0,
+    step=1.0, trust_coeff=0.001, gnorm_scale=1.0, segments=None,
+) -> jax.Array:
+    """Standalone (n_blocks,) per-block tensor_scale pass, exactly the
+    vector ``fused_update_ref`` derives internally — run once over the
+    whole arena by the partitioned dispatch (DESIGN.md §12), which then
+    slices it per owned span (a segment may straddle span boundaries)."""
+    spec = fu.ALGO_SPECS[algo]
+    n_blocks = p.shape[0]
+    if not spec.needs_norms:
+        return jnp.ones((n_blocks,), jnp.float32)
+    two = spec.n_states == 2
+    p = p.astype(jnp.float32)
+    g = g.astype(jnp.float32) * jnp.asarray(gnorm_scale, jnp.float32)
+    s = dict(lr=jnp.asarray(lr, jnp.float32),
+             beta1=jnp.asarray(beta1, jnp.float32),
+             beta2=jnp.asarray(beta2, jnp.float32),
+             eps=jnp.asarray(eps, jnp.float32),
+             weight_decay=jnp.asarray(weight_decay, jnp.float32),
+             step=jnp.asarray(step, jnp.float32),
+             tensor_scale=jnp.float32(1.0))
+    m = dequantize_ref(codes_m, absmax_m, qmap_m)
+    r = dequantize_ref(codes_r, absmax_r, qmap_r) if two else None
+    segments = tuple(segments) if segments else ((0, n_blocks),)
+    return _segment_scales(spec, g, p, m, r, s,
+                           jnp.asarray(trust_coeff, jnp.float32), segments)
+
+
 def fused_update_ref(
     p: jax.Array,                  # (n_blocks, B) f32 master params
     g: jax.Array,                  # (n_blocks, B) grads
@@ -87,6 +132,7 @@ def fused_update_ref(
     block_seeds=None,
     block_offsets=None,
     segments=None,
+    tensor_scale_blocks=None,
 ) -> fu.FusedUpdateResult:
     """The paper's §2 procedure (dequantize -> 32-bit update -> requantize)
     for any of the six algorithms, as straight-line XLA ops.
@@ -96,6 +142,10 @@ def fused_update_ref(
     single-tensor behaviour.  Per-segment trust ratios are computed on
     static slices so each segment's reduction has exactly the shape the
     per-leaf call would use — pooled and per-leaf results stay bit-exact.
+    ``tensor_scale_blocks`` overrides the trust-ratio computation with an
+    externally finalized per-block vector (the partitioned dispatch,
+    DESIGN.md §12 — segments may straddle owned-span boundaries, so scales
+    are computed globally via ``segment_scales_ref`` and sliced per span).
     """
     spec = fu.ALGO_SPECS[algo]
     two = spec.n_states == 2
@@ -113,14 +163,11 @@ def fused_update_ref(
     r = dequantize_ref(codes_r, absmax_r, qmap_r) if two else None
 
     tc = jnp.asarray(trust_coeff, jnp.float32)
-    if spec.needs_norms and segments:
-        def seg_scale(i, off, nb):
-            sl = slice(off, off + nb)
-            return fu.tensor_scale_for(spec, g[sl], p[sl], m[sl],
-                                       r[sl] if two else None, s, tc)
-
-        s["tensor_scale"] = fu.segment_scale_vector(
-            segments, p.shape[0], seg_scale)[:, None]
+    if tensor_scale_blocks is not None:
+        s["tensor_scale"] = tensor_scale_blocks.astype(jnp.float32)[:, None]
+    elif spec.needs_norms and segments:
+        s["tensor_scale"] = _segment_scales(spec, g, p, m, r, s, tc,
+                                            segments)[:, None]
     else:
         s["tensor_scale"] = fu.tensor_scale_for(spec, g, p, m, r, s, tc)
 

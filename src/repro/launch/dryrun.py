@@ -110,7 +110,11 @@ def lower_cell(arch: str, shape_name: str, mesh_kind: str,
                 "adam8", lr=1e-4,
                 master_dtype=("bfloat16" if cfg.param_dtype == "bfloat16"
                               else "float32"),
-                shard_multiple=n_chips, weight_decay=0.1, impl="jnp")
+                shard_multiple=n_chips, weight_decay=0.1, impl="jnp",
+                # ZeRO-1 span-structured update over the data-parallel
+                # degree (DESIGN.md §12; unrolled spans — GSPMD places
+                # them, so the lowering stays mesh-shape-agnostic)
+                partition_shards=mesh_lib.data_parallel_degree(mesh))
             hyper = train_loop.TrainHyper(microbatches=micro)
             step_fn = train_loop.make_train_step(cfg, opt, hyper,
                                                  param_shardings=pshard)

@@ -31,3 +31,14 @@ def make_mesh(shape, axes):
 def make_host_mesh():
     """1-device mesh for CPU example runs."""
     return make_mesh((1, 1), ("data", "model"))
+
+
+def data_parallel_degree(mesh, axes=("pod", "data")) -> int:
+    """Product of the data-parallel axis sizes present on ``mesh`` — the
+    shard count the partitioned optimizer dispatch owns spans over
+    (``OptimConfig.partition_shards``; DESIGN.md §12)."""
+    deg = 1
+    for a in axes:
+        if a in mesh.axis_names:
+            deg *= int(mesh.shape[a])
+    return deg

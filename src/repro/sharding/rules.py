@@ -143,6 +143,129 @@ def flat_block_spec(mesh: Mesh) -> P:
     return P(tuple(mesh.axis_names), None)
 
 
+# ------------------------------------------ partitioned (ZeRO-1) plumbing
+# (DESIGN.md §12.)  The partitioned optimizer dispatch splits the pooled
+# arenas' leading dim into per-owner spans (core.optim.base.ArenaPartition)
+# and runs each span on its owner.  These helpers own the mesh mechanics:
+# the owned-span PartitionSpec, the shard_map wrapper that pads the arena
+# to the partition's padded domain and runs one local update per device
+# (grads reduce-scatter into the span layout on entry; updated master
+# slices all-gather at their use sites), and the whole-leaf owner routing
+# used for muon matrix leaves.
+
+
+def owned_span_spec(ndim: int, axes="data") -> P:
+    """Spec placing dim 0 (the block/element dim) on the partition
+    axes (a name or tuple of names, e.g. ("pod", "data")): each device
+    holds exactly its owned span of the padded arena."""
+    axes = (axes,) if isinstance(axes, str) else tuple(axes)
+    return P(axes, *([None] * (ndim - 1)))
+
+
+def shard_map_over_spans(mesh: Mesh, axes, part, fn, spans, consts=()):
+    """Run ``fn(args, consts)`` with every array in ``spans`` split into
+    per-owner spans of ``part`` (an ArenaPartition) along dim 0.
+
+    Arrays are padded from ``part.total`` to ``part.padded_total`` rows
+    (trailing owners own padding — their kernels run on zeros, discarded
+    on unpad), resharded onto the partition ``axes`` (this is the grads'
+    reduce-scatter when they arrive replicated or otherwise sharded), and
+    each device calls ``fn`` once on its local ``(span_pad, ...)`` views.
+    ``consts`` are replicated operands (codebooks, traced scalars).
+    Outputs must be span-shaped arrays; they come back unpadded to
+    ``part.total`` rows.
+    """
+    from jax.experimental.shard_map import shard_map
+    import jax.numpy as jnp
+
+    pad = part.padded_total - part.total
+
+    def padrows(a):
+        a = jnp.asarray(a)
+        if pad == 0:
+            return a
+        return jnp.pad(a, [(0, pad)] + [(0, 0)] * (a.ndim - 1))
+
+    arrays = [padrows(a) for a in spans]
+    consts = tuple(consts)
+    n_arr = len(arrays)
+
+    def inner(*flat):
+        return fn(flat[:n_arr], flat[n_arr:])
+
+    in_specs = tuple(owned_span_spec(a.ndim, axes) for a in arrays) \
+        + tuple(P() for _ in consts)
+    local_args = [jax.ShapeDtypeStruct((part.span_pad,) + a.shape[1:],
+                                       a.dtype) for a in arrays]
+    # out-spec inference must not perturb the trace-time dispatch counter
+    # (opt_fused_dispatches counts real launches only)
+    from repro.kernels import ops as _kops
+    with _kops.dispatch_count_paused():
+        out_shapes = jax.eval_shape(inner, *local_args, *consts)
+    out_specs = tuple(owned_span_spec(len(o.shape), axes)
+                      for o in out_shapes)
+    outs = shard_map(inner, mesh=mesh, in_specs=in_specs,
+                     out_specs=out_specs, check_rep=False)(*arrays, *consts)
+    return tuple(o[:part.total] for o in outs)
+
+
+def replicate_for_scales(mesh: Mesh, arrays):
+    """Constrain arrays to fully-replicated placement so a following
+    global reduction (the LAMB/LARS segment-norm pass) compiles as the
+    oracle's single-device reduction on every device — SPMD distributing
+    it would change the f32 summation order (DESIGN.md §12)."""
+    rep = NamedSharding(mesh, P())
+
+    def one(x):
+        if x is None:
+            return None
+        if isinstance(x, PackedCodes):
+            return dataclasses.replace(
+                x, packed=jax.lax.with_sharding_constraint(x.packed, rep))
+        return jax.lax.with_sharding_constraint(x, rep)
+
+    return tuple(one(a) for a in arrays)
+
+
+def owner_routed(mesh: Mesh, axes, owner: int, fn, args):
+    """Whole-leaf owner routing (muon matrix leaves, DESIGN.md §12): only
+    the device whose (major-to-minor combined) index along the partition
+    ``axes`` equals ``owner`` computes ``fn(*args)``; the result
+    broadcasts to the replicas via a psum against zeros.  All result
+    leaves round-trip through f32 (exact for uint8 codes and f32 state),
+    so the broadcast is bit-exact."""
+    from jax.experimental.shard_map import shard_map
+    import jax.numpy as jnp
+    from repro.kernels import ops as _kops
+
+    axes = (axes,) if isinstance(axes, str) else tuple(axes)
+    with _kops.dispatch_count_paused():
+        out_tree = jax.eval_shape(fn, *args)
+
+    def routed(*a):
+        def compute(ops):
+            out = fn(*ops)
+            return jax.tree_util.tree_map(
+                lambda x: x.astype(jnp.float32), out)
+
+        def zeros(ops):
+            del ops
+            return jax.tree_util.tree_map(
+                lambda sd: jnp.zeros(sd.shape, jnp.float32), out_tree)
+
+        idx = jax.lax.axis_index(axes[0])
+        for ax in axes[1:]:
+            idx = idx * mesh.shape[ax] + jax.lax.axis_index(ax)
+        outf = jax.lax.cond(idx == owner, compute, zeros, a)
+        outf = jax.lax.psum(outf, axes)
+        return jax.tree_util.tree_map(lambda x, sd: x.astype(sd.dtype),
+                                      outf, out_tree)
+
+    return shard_map(routed, mesh=mesh,
+                     in_specs=tuple(P() for _ in args),
+                     out_specs=P(), check_rep=False)(*args)
+
+
 def opt_state_shardings(abstract_opt_state, param_shard_tree, mesh: Mesh,
                         policy: ShardingPolicy):
     """Shardings for a Block8bitOptimizer / Adafactor state."""
@@ -206,14 +329,16 @@ def opt_state_shardings(abstract_opt_state, param_shard_tree, mesh: Mesh,
             codes_r=None if arena.codes_r is None
             else code_sharding(arena.codes_r),
             absmax_r=None if arena.absmax_r is None else vec,
-            segments=arena.segments)
+            segments=arena.segments,
+            partition=getattr(arena, "partition", None))
     pool32 = getattr(abstract_opt_state, "pool32", None)
     if pool32 is not None:
         # pooled small leaves: tiny by construction, replicated like the
         # per-leaf Full32 small leaves they replace
         extra["pool32"] = Pool32Arena(
             master=rep, m=rep, r=None if pool32.r is None else rep,
-            segments=pool32.segments)
+            segments=pool32.segments,
+            partition=getattr(pool32, "partition", None))
     return type(abstract_opt_state)(step=rep, leaves=leaves, **extra)
 
 

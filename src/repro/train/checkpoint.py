@@ -35,6 +35,13 @@ layout (``blockopt.unpool_state``) before writing, and ``restore``
 reassembles arenas to match the template (``blockopt.repool_like``).  The
 on-disk format is therefore independent of the pooling flag — per-leaf
 checkpoints restore into pooled states and vice versa, on any mesh.
+
+Partitioned (ZeRO-1) states (``OptimConfig.partition``, DESIGN.md §12)
+add nothing on disk: the ``ArenaPartition`` is static arena aux metadata
+that ``unpool_state`` drops on save and ``repool_like`` reattaches from
+the restore template, so partitioned ↔ pooled ↔ per-leaf interchange is
+elastic in all six directions and across shard counts
+(tests/test_partition.py interchange matrix).
 """
 from __future__ import annotations
 

@@ -174,6 +174,14 @@ def make_train_step(cfg, optimizer, hyper: TrainHyper = TrainHyper(),
             if sb.get("n_params"):
                 metrics["state_bytes_per_param"] = jnp.float32(
                     sb["state_bytes"] / sb["n_params"])
+            if "owned_state_bytes" in sb:
+                # Partitioned (ZeRO-1) dispatch (DESIGN.md §12): the
+                # largest owner's block span and its share of the
+                # statistics — what one device actually holds/updates.
+                metrics["opt_owned_blocks"] = jnp.float32(
+                    sb["owned_blocks"])
+                metrics["opt_owned_state_bytes_per_param"] = jnp.float32(
+                    sb["owned_state_bytes"] / sb["n_params"])
         if getattr(optimizer, "cfg", None) is not None and \
                 getattr(optimizer.cfg, "percentile_clipping", 100) < 100:
             # Same subgraph apply() evaluates internally -> CSE'd by XLA;

@@ -1,10 +1,23 @@
-"""Force 2 host CPU devices so mesh-placement tests (elastic restore,
-pooled<->per-leaf checkpoint interchange) exercise a real 2-device mesh.
-Must run before jax initializes its backends — conftest import time is the
-only reliable hook."""
+"""Force 4 host CPU devices so mesh-placement tests (elastic restore,
+pooled<->per-leaf checkpoint interchange, partitioned ZeRO-1 dispatch on
+{1,2,4}-device meshes) exercise real multi-device meshes.  Must run before
+jax initializes its backends — conftest import time is the only reliable
+hook.  Tests build sub-meshes via ``tests.helpers.mesh_of(n)`` rather than
+assuming the global device count.
+
+Also registers ``--regen-golden`` for tests/test_golden.py: regenerate the
+committed fixed-seed trajectory files instead of asserting against them.
+"""
 import os
 
 _flags = os.environ.get("XLA_FLAGS", "")
 if "xla_force_host_platform_device_count" not in _flags:
     os.environ["XLA_FLAGS"] = (
-        _flags + " --xla_force_host_platform_device_count=2").strip()
+        _flags + " --xla_force_host_platform_device_count=4").strip()
+
+
+def pytest_addoption(parser):
+    parser.addoption(
+        "--regen-golden", action="store_true", default=False,
+        help="rewrite tests/golden/*.json from the current code instead "
+             "of asserting against the committed trajectories")

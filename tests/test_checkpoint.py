@@ -74,13 +74,17 @@ def test_shape_mismatch_rejected(setup):
         C.restore(d, 1, bad)
 
 
-def test_elastic_restore_new_sharding(setup):
+@pytest.mark.parametrize("mesh_shape", [(1, 1), (2, 1), (4, 1), (2, 2)])
+def test_elastic_restore_new_sharding(setup, mesh_shape):
     """Checkpoints hold full logical arrays -> restoring with different
-    device placement (the 1-device degenerate mesh here; 512-dev in the
-    dryrun) must be value-identical."""
+    device placement ({1,2,4}-device meshes here; 512-dev in the dryrun)
+    must be value-identical."""
     _, _, _, state, _, d = setup
+    n = mesh_shape[0] * mesh_shape[1]
+    if jax.device_count() < n:
+        pytest.skip("needs more forced host devices")
     C.save(d, 3, state)
-    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    mesh = jax.make_mesh(mesh_shape, ("data", "model"))
     sh = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
     shardings = jax.tree_util.tree_map(lambda x: sh, state)
     state_b = C.restore(d, 3, jax.eval_shape(lambda s: s, state), shardings)

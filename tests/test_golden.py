@@ -1,0 +1,103 @@
+"""Golden-trajectory regression tests.
+
+Fixed-seed 30-step training traces (``loss``, ``pclip_scale``,
+``opt_fused_dispatches``) for three optimizer configurations are committed
+under ``tests/golden/*.json``.  Each test re-runs the trajectory through
+the shared tiny-train harness (tests/helpers.py) and asserts the new trace
+matches the committed one within tight tolerance — so kernel/dispatch
+refactors cannot silently drift training trajectories, dispatch counts or
+the percentile-clipping behaviour.
+
+Regenerating (after an INTENTIONAL numerical change — say why in the
+commit message):
+
+    PYTHONPATH=src python -m pytest tests/test_golden.py --regen-golden
+
+which rewrites the JSON files from the current code; commit the diff.
+Tolerances: ``opt_fused_dispatches`` must match exactly (it is a
+trace-time constant); ``loss``/``pclip_scale`` allow a few f32 ULP of
+cross-platform slack (rtol 2e-4) — real drift is orders of magnitude
+larger.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.optim import make_optimizer
+
+from helpers import tiny_train
+
+GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "golden")
+STEPS = 30
+TRACE = ("loss", "pclip_scale", "opt_fused_dispatches")
+
+# name -> make_optimizer kwargs.  percentile clipping is on so the
+# pclip_scale metric is exercised; stochastic rounding is on so the
+# counter-hash PRNG path is locked too (it is deterministic by design).
+GOLDEN_CONFIGS = {
+    "adamw8": dict(name="adamw8", lr=5e-3, min_8bit_size=1024,
+                   stochastic_rounding=True, percentile_clipping=90,
+                   pclip_history=10),
+    "muon8": dict(name="muon8", lr=5e-3, min_8bit_size=1024,
+                  stochastic_rounding=True, percentile_clipping=90,
+                  pclip_history=10),
+    "adam8_bits48": dict(name="adam8", lr=5e-3, min_8bit_size=1024,
+                         state_bits=(4, 8), stochastic_rounding=True,
+                         percentile_clipping=90, pclip_history=10),
+}
+
+
+def _run(cfg_key):
+    kw = dict(GOLDEN_CONFIGS[cfg_key])
+    name = kw.pop("name")
+    opt = make_optimizer(name, **kw)
+    _, _, traces = tiny_train(opt, STEPS, trace=TRACE)
+    return traces
+
+
+def _path(cfg_key):
+    return os.path.join(GOLDEN_DIR, f"{cfg_key}.json")
+
+
+@pytest.mark.parametrize("cfg_key", sorted(GOLDEN_CONFIGS))
+def test_golden_trajectory(cfg_key, request):
+    traces = _run(cfg_key)
+    path = _path(cfg_key)
+    if request.config.getoption("--regen-golden"):
+        os.makedirs(GOLDEN_DIR, exist_ok=True)
+        with open(path, "w") as f:
+            json.dump({"config": {k: v for k, v in
+                                  GOLDEN_CONFIGS[cfg_key].items()},
+                       "steps": STEPS, "traces": traces}, f, indent=1)
+        pytest.skip(f"regenerated {path}")
+    assert os.path.exists(path), \
+        f"{path} missing — run with --regen-golden to create it"
+    with open(path) as f:
+        golden = json.load(f)
+    assert golden["steps"] == STEPS
+    for name in TRACE:
+        want = np.asarray(golden["traces"][name], np.float64)
+        got = np.asarray(traces[name], np.float64)
+        assert want.shape == got.shape, name
+        if name == "opt_fused_dispatches":
+            np.testing.assert_array_equal(got, want, err_msg=name)
+        else:
+            np.testing.assert_allclose(
+                got, want, rtol=2e-4, atol=1e-6,
+                err_msg=f"{cfg_key}/{name} drifted from the golden "
+                        f"trajectory — if intentional, regen with "
+                        f"--regen-golden and explain in the commit")
+
+
+def test_golden_dispatch_counts_document_layout():
+    """The committed dispatch counts encode the dispatch architecture:
+    adamw8/adam8 pooled = 1 fused launch per step; muon8 = one per matrix
+    leaf + 1 pooled arena launch."""
+    with open(_path("adamw8")) as f:
+        adamw = json.load(f)["traces"]["opt_fused_dispatches"]
+    assert set(adamw) == {1.0}
+    with open(_path("muon8")) as f:
+        muon = json.load(f)["traces"]["opt_fused_dispatches"]
+    assert len(set(muon)) == 1 and muon[0] > 1

@@ -247,22 +247,20 @@ def test_muon_state_bytes_one_state_momentum():
 
 
 # --------------------------------------------- checkpoint + sharding (mesh)
-def _mesh2():
-    if jax.device_count() < 2:
-        pytest.skip("needs 2 devices (xla_force_host_platform_device_count)")
-    return jax.make_mesh((2,), ("data",))
+from helpers import mesh_of as _mesh_of  # noqa: E402  (shared sub-meshes)
 
 
+@pytest.mark.parametrize("n_dev", [1, 2, 4])
 @pytest.mark.parametrize("state_bits", [None, (4, 8)])
-def test_muon_checkpoint_interchange_on_mesh(tmp_path, state_bits):
-    """Save per-leaf muon -> restore pooled on the 2-device mesh (and the
-    resumed step stays bit-exact vs the uninterrupted run), incl. packed
-    momentum.  Matrix momentum leaves shard their block dim like every
-    other quantized state."""
+def test_muon_checkpoint_interchange_on_mesh(tmp_path, state_bits, n_dev):
+    """Save per-leaf muon -> restore pooled on {1,2,4}-device meshes (and
+    the resumed step stays bit-exact vs the uninterrupted run), incl.
+    packed momentum.  Matrix momentum leaves shard their block dim like
+    every other quantized state."""
     from repro.sharding import rules
-    mesh = _mesh2()
+    mesh = _mesh_of(n_dev)
     kw = dict(lr=1e-2, min_8bit_size=256, override_32bit=lambda p: False,
-              shard_multiple=2, stochastic_rounding=True)
+              shard_multiple=n_dev, stochastic_rounding=True)
     if state_bits:
         kw["state_bits"] = state_bits
     params = {"w": jnp.ones((64, 64)), "v": jax.random.normal(

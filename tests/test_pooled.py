@@ -189,25 +189,29 @@ def test_fused_update_segments_match_separate_calls_interpret():
 
 
 # --------------------------------------------- checkpoint interchange (mesh)
+from helpers import mesh_of as _mesh_of  # noqa: E402  (shared sub-meshes)
+
+
 def _mesh2():
-    if jax.device_count() < 2:
-        pytest.skip("needs 2 devices (xla_force_host_platform_device_count)")
-    return jax.make_mesh((2,), ("data",))
+    return _mesh_of(2)
 
 
+@pytest.mark.parametrize("n_dev", [1, 2, 4])
 @pytest.mark.parametrize("state_bits", [None, (4, 8)])
-def test_checkpoint_interchange_per_leaf_to_pooled(tmp_path, state_bits):
-    """Save per-leaf -> restore pooled on a 2-device mesh, bit-exact codes/
-    absmax/master (incl. PackedCodes), and the resumed pooled run matches
-    the uninterrupted per-leaf run bit-exactly."""
+def test_checkpoint_interchange_per_leaf_to_pooled(tmp_path, state_bits,
+                                                   n_dev):
+    """Save per-leaf -> restore pooled on {1,2,4}-device meshes, bit-exact
+    codes/absmax/master (incl. PackedCodes), and the resumed pooled run
+    matches the uninterrupted per-leaf run bit-exactly.  The 'u' leaf has
+    an odd element count, so block counts vary across leaves."""
     from repro.sharding import rules
-    mesh = _mesh2()
+    mesh = _mesh_of(n_dev)
     kw = dict(lr=1e-2, min_8bit_size=256, override_32bit=lambda p: False,
-              shard_multiple=2, stochastic_rounding=True)
+              shard_multiple=n_dev, stochastic_rounding=True)
     if state_bits:
         kw["state_bits"] = state_bits
     params = {"w": jnp.ones((64, 64)), "v": jnp.ones((48, 32)),
-              "b": jnp.zeros((8,))}
+              "b": jnp.zeros((8,)), "u": jnp.ones((40, 70)) * 0.1}
     opt_pl = make_optimizer("adam8", pooled=False, **kw)
     opt_po = make_optimizer("adam8", pooled=True, **kw)
     _, st = _train_with(opt_pl, params, 3)
@@ -236,17 +240,20 @@ def test_checkpoint_interchange_per_leaf_to_pooled(tmp_path, state_bits):
                         "resumed step diverged")
 
 
+@pytest.mark.parametrize("n_dev", [1, 2, 4])
 @pytest.mark.parametrize("state_bits", [None, (4, 8)])
-def test_checkpoint_interchange_pooled_to_per_leaf(tmp_path, state_bits):
-    """Save pooled -> restore per-leaf on a 2-device mesh, bit-exact."""
+def test_checkpoint_interchange_pooled_to_per_leaf(tmp_path, state_bits,
+                                                   n_dev):
+    """Save pooled -> restore per-leaf on {1,2,4}-device meshes,
+    bit-exact (incl. an odd-element leaf, so block counts are uneven)."""
     from repro.sharding import rules
-    mesh = _mesh2()
+    mesh = _mesh_of(n_dev)
     kw = dict(lr=1e-2, min_8bit_size=256, override_32bit=lambda p: False,
-              shard_multiple=2)
+              shard_multiple=n_dev)
     if state_bits:
         kw["state_bits"] = state_bits
     params = {"w": jnp.ones((64, 64)), "v": jnp.ones((48, 32)),
-              "b": jnp.zeros((8,))}
+              "b": jnp.zeros((8,)), "u": jnp.ones((40, 70)) * 0.1}
     opt_po = make_optimizer("adam8", pooled=True, **kw)
     opt_pl = make_optimizer("adam8", pooled=False, **kw)
     _, st = _train_with(opt_po, params, 3)
