@@ -23,7 +23,8 @@ ROWS: list[tuple[str, float, str]] = []
 # holds one row per (bench cell, commit) and reads as a per-PR trajectory
 # instead of an append-only log of CI reruns.
 _DEDUPE_FIELDS = ("bench", "git_sha", "smoke", "bits", "algo", "backend",
-                  "n_leaves", "qmap", "block_size")
+                  "n_leaves", "qmap", "block_size", "devices",
+                  "overlap_buckets")
 
 
 def emit(name: str, us_per_call: float, derived: str = ""):
@@ -110,7 +111,8 @@ def train_lm(cfg, pipe, opt_name, steps, lr=5e-3, seed=0, hyper=None,
     """Returns (final_loss, losses, diverged)."""
     opt = make_optimizer(opt_name, lr=lr, min_8bit_size=1024, **opt_kw)
     state, _ = L.init_train_state(cfg, opt, jax.random.PRNGKey(seed))
-    step = jax.jit(L.make_train_step(cfg, opt, hyper or L.TrainHyper()))
+    # donated step (DESIGN.md §13c) — the loop below rebinds state
+    step = L.jit_train_step(cfg, opt, hyper or L.TrainHyper())
     losses = []
     for i in range(steps):
         batch = {k: jnp.asarray(v) for k, v in pipe.batch_at(i).items()}

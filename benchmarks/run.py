@@ -21,6 +21,9 @@ SUITES = {
     "ablation": ("benchmarks.bench_ablation",
                  "Table 3 + App H/I + Fig 3 (training ablations)"),
     "roofline": ("benchmarks.bench_roofline", "Dry-run roofline table"),
+    "step_overlap": ("benchmarks.bench_step_overlap",
+                     "Optimizer-exposed ms/step: sequential vs overlapped "
+                     "ZeRO-2 (DESIGN.md §13)"),
 }
 
 # Suites a --smoke run exercises (fast enough for CI, covers the kernels).
@@ -46,6 +49,11 @@ def main() -> None:
                     help="also run the ZeRO-1 partitioned-state legs "
                          "(per-device owned bytes + span launches vs "
                          "shard count, even under --smoke; DESIGN.md §12)")
+    ap.add_argument("--overlap", action="store_true",
+                    help="also run the step_overlap suite (optimizer-"
+                         "exposed ms + ZeRO-2 peak grad bytes on a "
+                         "4-device host mesh, even under --smoke; "
+                         "DESIGN.md §13)")
     args = ap.parse_args()
     if args.only:
         names = args.only.split(",")
@@ -53,6 +61,8 @@ def main() -> None:
         names = list(SMOKE_SUITES)
     else:
         names = list(SUITES)
+    if args.overlap and "step_overlap" not in names:
+        names.append("step_overlap")
     print("name,us_per_call,derived")
     for n in names:
         mod_name, desc = SUITES[n]

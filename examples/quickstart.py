@@ -17,6 +17,12 @@ memory (more with sub-byte states).
                                   # span-partitioned optimizer state: each
                                   # of 4 owners updates only its block
                                   # span (bit-identical; DESIGN.md §12)
+    PYTHONPATH=src python examples/quickstart.py --partition 4 \
+        --shard-grads --overlap 4  # ZeRO-2 + bucketed overlap: grads
+                                  # accumulate owned-span sharded and the
+                                  # update fires bucket-by-bucket behind
+                                  # the reduce-scatter (bit-identical;
+                                  # DESIGN.md §13)
 
 ``--algo`` accepts any registered algorithm (adam/adamw/momentum/lamb/
 lars/adagrad/muon): the script compares ``<algo>32`` against ``<algo>8``
@@ -40,7 +46,8 @@ def run(opt_name: str, steps: int = 80, **opt_kw):
                                           global_batch=8))
     opt = make_optimizer(opt_name, lr=5e-3, **opt_kw)  # <- line 1 (the swap)
     state, _ = L.init_train_state(cfg, opt, jax.random.PRNGKey(0))
-    step = jax.jit(L.make_train_step(cfg, opt))  # <- line 2 (unchanged API)
+    step = L.jit_train_step(cfg, opt)  # <- line 2 (unchanged API; donates
+    #    the state in place and defers the params view — DESIGN.md §13)
     for i in range(steps):
         batch = {k: jnp.asarray(v) for k, v in pipe.batch_at(i).items()}
         state, m = step(state, batch)
@@ -74,6 +81,20 @@ if __name__ == "__main__":
                          "block span (bit-identical to the unpartitioned "
                          "run; on a data-parallel mesh the spans run one "
                          "local fused update per device — DESIGN.md §12)")
+    ap.add_argument("--shard-grads", action="store_true",
+                    help="ZeRO-2: accumulate grads in the arena's owned-"
+                         "span block domain instead of a replicated "
+                         "param-shaped pytree (bit-identical; "
+                         "DESIGN.md §13)")
+    overlap = ap.add_mutually_exclusive_group()
+    overlap.add_argument("--overlap", type=int, default=1, metavar="N",
+                         help="bucketed overlap: subdivide the partitioned "
+                              "arena update into N buckets so each "
+                              "bucket's reduce-scatter overlaps the next "
+                              "(bit-identical; DESIGN.md §13)")
+    overlap.add_argument("--no-overlap", action="store_true",
+                         help="force the sequential single-dispatch path "
+                              "(the PR-5 oracle)")
     ap.add_argument("--steps", type=int, default=80)
     args = ap.parse_args()
     opt_kw = {} if args.bits == 8 else {"state_bits": (args.bits, 8)}
@@ -84,6 +105,17 @@ if __name__ == "__main__":
             ap.error("--partition subdivides the pooled arena and cannot "
                      "combine with --no-pooled (DESIGN.md §12)")
         opt_kw.update(partition=True, partition_shards=args.partition)
+    if args.shard_grads:
+        if args.no_pooled:
+            ap.error("--shard-grads accumulates gradients in the pooled "
+                     "arena's block domain and cannot combine with "
+                     "--no-pooled (DESIGN.md §13)")
+        opt_kw["shard_grads"] = True
+    if args.overlap > 1 and not args.no_overlap:
+        if not args.partition:
+            ap.error("--overlap N buckets the span-partitioned update; it "
+                     "needs --partition N (DESIGN.md §13)")
+        opt_kw["overlap_buckets"] = args.overlap
     l32, b32 = run(f"{args.algo}32", steps=args.steps)
     l8, b8 = run(f"{args.algo}8", steps=args.steps, **opt_kw)
     print(f"\nloss diff: {abs(l8 - l32):.4f}   state memory: {b32 / b8:.1f}x smaller")

@@ -27,3 +27,11 @@ fi
 # suite mains, so this is a superset of the plain --smoke run at no
 # repeated suites.
 PYTHONPATH=src python -m benchmarks.run --smoke --bits 4 --algo muon --partition
+
+# Overlap leg (DESIGN.md §13): optimizer-exposed ms/step sequential vs
+# the bucketed ZeRO-2 path, plus the peak-grad-bytes gate, on a forced
+# 4-device host mesh (separate invocation: the device-count flag must be
+# set before jax initializes).  Records opt_exposed_ms / peak_grad_bytes
+# cells into BENCH_speed.json.
+XLA_FLAGS="--xla_force_host_platform_device_count=4 ${XLA_FLAGS:-}" \
+  PYTHONPATH=src python -m benchmarks.run --smoke --overlap --only step_overlap

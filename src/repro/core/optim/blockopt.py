@@ -73,8 +73,8 @@ from repro.core.optim.base import (ArenaPartition, FlatSegment, Full32Leaf,
                                    OptimConfig, Pool32Arena, Pool32Leaf,
                                    PooledQuantLeaf, Quant8Leaf, QuantArena,
                                    QuantSegment, blocks_to_param,
-                                   flatten_to_blocks, make_partition,
-                                   path_str)
+                                   flatten_to_blocks, make_buckets,
+                                   make_partition, path_str)
 from repro.models.constrain import constrain as _constrain
 from repro.kernels import fused_update as kfu
 from repro.kernels import ops as kops
@@ -98,6 +98,39 @@ class OptState(NamedTuple):
 def _is_state_leaf(x) -> bool:
     return isinstance(x, (Quant8Leaf, Full32Leaf, PooledQuantLeaf,
                           Pool32Leaf))
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class GradBuffer:
+    """ZeRO-2 accumulated-gradient buffer (DESIGN.md §13).
+
+    ``blocks`` holds the gradients of every pooled quantized leaf in the
+    arena's flat block domain — the same layout the fused update consumes —
+    padded to the partition's ``padded_total`` rows and, on a partition
+    mesh, sharded to the owned span: the replicated param-shaped grad
+    pytree never materializes.  ``ride`` carries the leaves that don't
+    live in the arena (Full32 overrides, muon matrix leaves, pooled small
+    leaves) as param-shaped f32 grads in flatten order.  ``layout`` is the
+    static per-leaf routing table, one entry per param leaf in flatten
+    order::
+
+        ("arena", block_offset, n_blocks, shape, n)   |   ("ride", pos, shape)
+
+    ``part`` is the arena's static ownership map (None when the arena is
+    unpartitioned or absent) — ``accumulate_grads`` needs it to slice the
+    per-bucket adds."""
+    blocks: Optional[jax.Array]     # (padded_total, B) f32 | None
+    ride: tuple                     # param-shaped f32 grads
+    layout: tuple                   # static routing table
+    part: Optional[ArenaPartition] = None
+
+    def tree_flatten(self):
+        return ((self.blocks, self.ride), (self.layout, self.part))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], tuple(children[1]), *aux)
 
 
 def _state1_signed(algo: str) -> bool:
@@ -312,14 +345,19 @@ class Block8bitOptimizer:
         gnorm history.  No-op (scale 1, vec unchanged) when disabled.  The
         history (including the current step's norm) must fill before
         clipping engages, so the first ``pclip_history - 1`` steps are
-        never clipped; a spike on the step that fills it can be."""
+        never clipped; a spike on the step that fills it can be.
+
+        ``grads`` may be the param-shaped pytree or a ZeRO-2
+        :class:`GradBuffer` — the buffer path reduces each leaf on a view
+        reshaped back to its param shape, in the same flatten order, so
+        the history is bit-identical either way (DESIGN.md §13)."""
         cfg = self.cfg
         if cfg.percentile_clipping >= 100 or state.gnorm_vec is None:
             return jnp.float32(1.0), state.gnorm_vec
         mesh = (self._partition_mesh(cfg.partition_shards)
                 if cfg.partition_active else None)
         gn2 = jnp.zeros((), jnp.float32)
-        for leaf in jax.tree_util.tree_leaves(grads):
+        for leaf in self._grad_views(grads):
             if mesh is not None:
                 # Partitioned dispatch (DESIGN.md §12): pin the global
                 # gnorm reduction to replicated compute so its f32
@@ -337,6 +375,179 @@ class Block8bitOptimizer:
             warm & (gn2 > clip2),
             jnp.sqrt(jnp.maximum(clip2, 0.0) / jnp.maximum(gn2, 1e-30)), 1.0)
         return scale.astype(jnp.float32), new_vec
+
+    # ------------------------------------------- ZeRO-2 grad buffer (§13)
+    def _grad_layout(self, state: OptState) -> tuple:
+        """Static GradBuffer routing table from a (possibly abstract)
+        pooled state: one entry per param leaf, flatten order."""
+        entries: list = []
+        pos = [0]
+
+        def walk(leaf):
+            if isinstance(leaf, PooledQuantLeaf):
+                entries.append(("arena", leaf.offset, leaf.n_blocks,
+                                tuple(leaf.shape), leaf.n))
+            else:
+                shape = (tuple(leaf.master.shape)
+                         if isinstance(leaf, Full32Leaf)
+                         else tuple(leaf.shape))
+                entries.append(("ride", pos[0], shape))
+                pos[0] += 1
+            return leaf
+
+        jax.tree_util.tree_map(walk, state.leaves, is_leaf=_is_state_leaf)
+        return tuple(entries)
+
+    def _constrain_buffer(self, blocks):
+        """Pin the grad buffer to the owned-span layout — the resharding
+        onto this constraint IS the per-bucket reduce-scatter when grads
+        arrive replicated or param-sharded (DESIGN.md §13)."""
+        if blocks is None:
+            return None
+        mesh = (self._partition_mesh(self.cfg.partition_shards)
+                if self.cfg.partition_active else None)
+        if mesh is None:
+            return blocks
+        from jax.sharding import NamedSharding
+        from repro.sharding import rules as _rules
+        spec = _rules.owned_span_spec(blocks.ndim, self.cfg.partition_axes)
+        return jax.lax.with_sharding_constraint(
+            blocks, NamedSharding(mesh, spec))
+
+    def init_grad_buffer(self, state: OptState) -> GradBuffer:
+        """Zero-initialized ZeRO-2 gradient accumulator for ``state``
+        (DESIGN.md §13): arena grads in the padded flat block domain
+        (owned-span sharded on a partition mesh), everything else as
+        param-shaped ride-along zeros."""
+        cfg = self.cfg
+        assert cfg.pooling_active, \
+            "GradBuffer accumulation needs the pooled arena layout"
+        layout = self._grad_layout(state)
+        blocks = None
+        part = None
+        if state.arena is not None:
+            part = state.arena.partition
+            segs = state.arena.segments
+            total = segs[-1].offset + segs[-1].n_blocks
+            rows = part.padded_total if part is not None else total
+            blocks = self._constrain_buffer(
+                jnp.zeros((rows, cfg.block_size), jnp.float32))
+        ride = tuple(jnp.zeros(e[2], jnp.float32)
+                     for e in layout if e[0] == "ride")
+        return GradBuffer(blocks=blocks, ride=ride, layout=layout,
+                          part=part)
+
+    def accumulate_grads(self, buf: GradBuffer, grads: Pytree) -> GradBuffer:
+        """Add one microbatch's param-shaped grads into the ZeRO-2 buffer.
+
+        Arena leaves flatten to the block domain and add bucket-by-bucket
+        (``cfg.overlap_buckets``): each bucket's add is a separate op whose
+        resharding onto the owned-span constraint — the reduce-scatter —
+        can fire as soon as that bucket's grads exist, instead of waiting
+        on the whole pytree.  Addition commutes with the (exact)
+        reshape/pad, so the accumulated values are bit-identical to
+        accumulating in param shape and flattening once (DESIGN.md §13)."""
+        cfg = self.cfg
+        gl = jax.tree_util.tree_leaves(grads)
+        assert len(gl) == len(buf.layout), (len(gl), len(buf.layout))
+        gbs = []
+        ride = list(buf.ride)
+        for g, e in zip(gl, buf.layout):
+            if e[0] == "arena":
+                gbs.append(flatten_to_blocks(g, cfg.block_size,
+                                             cfg.shard_multiple))
+            else:
+                ride[e[1]] = ride[e[1]] + g.astype(jnp.float32)
+        blocks = buf.blocks
+        if blocks is not None and gbs:
+            gb = jnp.concatenate(gbs) if len(gbs) > 1 else gbs[0]
+            pad = blocks.shape[0] - gb.shape[0]
+            if pad:
+                gb = jnp.pad(gb, ((0, pad), (0, 0)))
+            part = buf.part
+            if cfg.overlap_active and part is not None:
+                plan = make_buckets(part, cfg.overlap_buckets,
+                                    grid=max(cfg.shard_multiple, 1))
+                b3 = blocks.reshape(part.n_shards, part.span_pad, -1)
+                g3 = gb.reshape(part.n_shards, part.span_pad, -1)
+                for k0, k1 in plan.ranges:
+                    b3 = b3.at[:, k0:k1].add(g3[:, k0:k1])
+                blocks = b3.reshape(blocks.shape)
+            else:
+                blocks = blocks + gb
+            blocks = self._constrain_buffer(blocks)
+        return GradBuffer(blocks=blocks, ride=tuple(ride),
+                          layout=buf.layout, part=buf.part)
+
+    def _grad_views(self, grads):
+        """Iterate gradient leaves in flatten order as param-shaped views,
+        whether ``grads`` is the pytree or a GradBuffer.  Buffer views are
+        reshaped back to the original param shape so downstream reductions
+        (grad-clip norm, percentile clipping) run the oracle's exact
+        per-leaf shapes (DESIGN.md §13)."""
+        if not isinstance(grads, GradBuffer):
+            for leaf in jax.tree_util.tree_leaves(grads):
+                yield leaf
+            return
+        for e in grads.layout:
+            if e[0] == "arena":
+                _, off, nb, shape, n = e
+                yield grads.blocks[off:off + nb].reshape(-1)[:n].reshape(
+                    shape)
+            else:
+                yield grads.ride[e[1]]
+
+    def grad_buffer_norm(self, buf: GradBuffer) -> jax.Array:
+        """Global gradient norm from the ZeRO-2 buffer, bit-identical to
+        ``train.loop.global_norm`` on the equivalent param-shaped pytree:
+        each leaf's square-sum reduces a view reshaped to the original
+        param shape, in flatten order.  On a partition mesh the buffer is
+        transiently pinned replicated first so the f32 reduction order
+        matches the sequential oracle (the replicate_for_scales contract,
+        DESIGN.md §12)."""
+        blocks = buf.blocks
+        if blocks is not None:
+            mesh = (self._partition_mesh(self.cfg.partition_shards)
+                    if self.cfg.partition_active else None)
+            if mesh is not None:
+                from repro.sharding import rules as _rules
+                (blocks,) = _rules.replicate_for_scales(mesh, (blocks,))
+        buf = GradBuffer(blocks=blocks, ride=buf.ride, layout=buf.layout,
+                         part=buf.part)
+        sums = [jnp.sum(jnp.square(v.astype(jnp.float32)))
+                for v in self._grad_views(buf)]
+        return jnp.sqrt(jnp.sum(jnp.stack(sums)))
+
+    def grad_buffer_bytes(self, state: OptState) -> dict:
+        """Static peak-gradient accounting (DESIGN.md §13): bytes of the
+        replicated param-shaped grad pytree (what the sequential
+        accumulator holds) vs the per-device ZeRO-2 share — one owned
+        span of the block buffer plus the (replicated) ride-along grads."""
+        layout = self._grad_layout(state)
+        replicated = ride = 0
+        for e in layout:
+            if e[0] == "arena":
+                replicated += e[4] * 4
+            else:
+                n = int(np.prod(e[2])) if e[2] else 1
+                replicated += n * 4
+                ride += n * 4
+        rows = 0
+        arena = state.arena
+        part = arena.partition if arena is not None else None
+        if arena is not None:
+            segs = arena.segments
+            total = segs[-1].offset + segs[-1].n_blocks
+            rows = (part.span_pad
+                    if part is not None and self.cfg.partition_active
+                    else (part.padded_total if part is not None else total))
+        sharded = rows * self.cfg.block_size * 4 + ride
+        return {"replicated_grad_bytes": int(replicated),
+                "sharded_grad_bytes": int(sharded),
+                "grad_ride_bytes": int(ride),
+                "grad_partition_shards": (part.n_shards
+                                          if part is not None and
+                                          self.cfg.partition_active else 1)}
 
     # ---------------------------------------------------------------- update
     def _apply_quant8(self, leaf: Quant8Leaf, g: jax.Array, lr, step_f,
@@ -479,9 +690,20 @@ class Block8bitOptimizer:
             return self._span_update_shard_map(
                 mesh, part, arena, mb, gb, block_seeds, block_offsets,
                 tscale, hyper)
+        # Bucketed overlap (DESIGN.md §13): subdivide each span into the
+        # bucket chunks and fire one launch per (span, bucket) piece —
+        # block-local math on static contiguous slices, so the stitched
+        # result is bit-identical to the one-launch-per-span dispatch.
+        pieces = part.spans
+        if cfg.overlap_active:
+            plan = make_buckets(part, cfg.overlap_buckets,
+                                grid=max(cfg.shard_multiple, 1))
+            pieces = [(start + k0, min(n, k1) - k0)
+                      for start, n in part.spans
+                      for k0, k1 in plan.ranges]
         outs = []
-        for start, n in part.spans:
-            if n == 0:
+        for start, n in pieces:
+            if n <= 0:
                 continue
             sl = slice(start, start + n)
             outs.append(kops.fused_update(
@@ -549,8 +771,48 @@ class Block8bitOptimizer:
 
         consts = (self._qmap1, self._qmap2 if two else self._qmap1,
                   hyper["lr"], hyper["step"], hyper["gnorm_scale"])
-        outs = _rules.shard_map_over_spans(
-            mesh, axis, part, local, spans, consts)
+        plan = None
+        if cfg.overlap_active:
+            plan = make_buckets(part, cfg.overlap_buckets,
+                                grid=max(cfg.shard_multiple, 1))
+        if plan is None or len(plan.ranges) <= 1:
+            outs = _rules.shard_map_over_spans(
+                mesh, axis, part, local, spans, consts)
+        else:
+            # Bucketed overlap (DESIGN.md §13): bucket k covers local rows
+            # [k0, k1) of EVERY owner's span — the same static shape on
+            # each device — so each bucket dispatches as its own shard_map
+            # over a synthetic full-span partition.  Stitching the bucket
+            # outputs back along the local-row axis reconstructs the
+            # padded arena exactly (block-local math: bit-identical to
+            # the one-launch-per-span dispatch).
+            D, span_pad = part.n_shards, part.span_pad
+            pad = part.padded_total - part.total
+
+            def bucket_slice(a, k0, k1):
+                a = jnp.asarray(a)
+                if pad:
+                    a = jnp.pad(a, [(0, pad)] + [(0, 0)] * (a.ndim - 1))
+                a3 = a.reshape((D, span_pad) + a.shape[1:])
+                return a3[:, k0:k1].reshape((D * (k1 - k0),) + a.shape[1:])
+
+            per_bucket = []
+            for k0, k1 in plan.ranges:
+                ck = k1 - k0
+                bpart = ArenaPartition(
+                    n_shards=D, total=D * ck, span_pad=ck,
+                    spans=tuple((d * ck, ck) for d in range(D)))
+                per_bucket.append(_rules.shard_map_over_spans(
+                    mesh, axis, bpart, local,
+                    [bucket_slice(a, k0, k1) for a in spans], consts))
+            outs = []
+            for pos in range(len(per_bucket[0])):
+                chunks = [b[pos].reshape((D, -1) + b[pos].shape[1:])
+                          for b in per_bucket]
+                stitched = jnp.concatenate(chunks, axis=1)
+                outs.append(stitched.reshape(
+                    (part.padded_total,) + stitched.shape[2:])[:part.total])
+            outs = tuple(outs)
         p2, cm2, am2 = outs[0], outs[1], outs[2]
         if nc_m is not None:
             cm2 = PackedCodes(cm2, bits_m, nc_m)
@@ -584,11 +846,19 @@ class Block8bitOptimizer:
         the Pool32Arena; per-leaf Full32 overrides ride along unchanged.
         Seeds, element indices and trust ratios are threaded per block /
         per segment so the result is bit-identical to the per-leaf
-        dispatch (tests/test_pooled.py)."""
+        dispatch (tests/test_pooled.py).
+
+        ``grads`` is either the param-shaped grad pytree or a
+        :class:`GradBuffer` (ZeRO-2, DESIGN.md §13) — the buffer already
+        holds the arena leaves' grads in the flat block domain, so the
+        per-leaf flatten/concat (and its replicated materialization) is
+        skipped entirely; ride-along leaves read their param-shaped grads
+        from ``buf.ride``."""
         cfg = self.cfg
         mdt = jnp.dtype(cfg.master_dtype)
+        buf = grads if isinstance(grads, GradBuffer) else None
 
-        # Walk leaves+grads once, in flatten order — the same order the
+        # Walk the leaves once, in flatten order — the same order the
         # per-leaf dispatch numbers its leaves, so seed i matches.
         entries: list = []
         idx = [0]
@@ -598,25 +868,43 @@ class Block8bitOptimizer:
             idx[0] += 1
             return leaf
 
-        jax.tree_util.tree_map(collect, state.leaves, grads,
-                               is_leaf=_is_state_leaf)
+        if buf is None:
+            jax.tree_util.tree_map(collect, state.leaves, grads,
+                                   is_leaf=_is_state_leaf)
+        else:
+            layout = iter(buf.layout)
+
+            def collect_buf(leaf):
+                ent = next(layout)
+                g = buf.ride[ent[1]] if ent[0] == "ride" else None
+                return collect(leaf, g)
+
+            jax.tree_util.tree_map(collect_buf, state.leaves,
+                                   is_leaf=_is_state_leaf)
 
         new_arena, res_p = state.arena, None
         if state.arena is not None:
             arena = state.arena
             quant = [(l, g, i) for l, g, i in entries
                      if isinstance(l, PooledQuantLeaf)]
-            gbs, mbs, seeds, offs = [], [], [], []
+            mbs, seeds, offs = [], [], []
+            gbs = [] if buf is None else None
             for leaf, g, i in quant:
-                gbs.append(flatten_to_blocks(g, cfg.block_size,
-                                             cfg.shard_multiple))
+                if gbs is not None:
+                    gbs.append(flatten_to_blocks(g, cfg.block_size,
+                                                 cfg.shard_multiple))
                 mbs.append(flatten_to_blocks(leaf.master, cfg.block_size,
                                              cfg.shard_multiple))
                 seeds.append(jnp.broadcast_to(
                     base_seed + jnp.int32(i * 7919), (leaf.n_blocks,)))
                 offs.append(np.arange(leaf.n_blocks, dtype=np.int32))
-            gb = _constrain(jnp.concatenate(gbs), "all", None)
             mb = _constrain(jnp.concatenate(mbs), "all", None)
+            if buf is None:
+                gb = _constrain(jnp.concatenate(gbs), "all", None)
+            else:
+                # already in arena layout, owned-span sharded — never
+                # rebuilt replicated (the ZeRO-2 point)
+                gb = buf.blocks[:mb.shape[0]]
             block_seeds = jnp.concatenate(seeds)
             block_offsets = jnp.asarray(np.concatenate(offs))
             segs = tuple((s.offset, s.n_blocks) for s in arena.segments)
@@ -655,11 +943,13 @@ class Block8bitOptimizer:
         # Second walk re-plays the same flatten order as `collect`, so each
         # ride-along leaf recovers its flatten index i — per-leaf seeds
         # (base + i*7919) therefore match the per-leaf dispatch bit-exactly.
+        # Grads come from the entries (works for both pytree and GradBuffer
+        # input — the walk is over the leaves alone).
         ent = iter(entries)
         mk = [0]   # matrix-leaf counter: k-th matrix leaf -> owner k % D
 
-        def upd(leaf, g):
-            _, _, i = next(ent)
+        def upd(leaf):
+            _, g, i = next(ent)
             if isinstance(leaf, PooledQuantLeaf):
                 sl = res_p[leaf.offset:leaf.offset + leaf.n_blocks]
                 return dataclasses.replace(
@@ -681,14 +971,15 @@ class Block8bitOptimizer:
                                           gnorm_scale)
             return self._apply_full32(leaf, g, lr, step_f, gnorm_scale)
 
-        new_leaves = jax.tree_util.tree_map(upd, state.leaves, grads,
+        new_leaves = jax.tree_util.tree_map(upd, state.leaves,
                                             is_leaf=_is_state_leaf)
         return new_leaves, new_arena, new_pool
 
     def apply(self, grads: Pytree, state: OptState, *,
               lr: Optional[jax.Array] = None,
               param_dtype=jnp.float32,
-              key: Optional[jax.Array] = None) -> tuple[Pytree, OptState]:
+              key: Optional[jax.Array] = None,
+              materialize_params: bool = True) -> tuple[Pytree, OptState]:
         """One optimizer step. Returns (new model-shape params, new state).
 
         ``lr`` overrides cfg.lr (schedules); ``param_dtype`` is the dtype of
@@ -696,8 +987,19 @@ class Block8bitOptimizer:
         ``key`` optionally seeds stochastic rounding; when omitted the seed
         is derived from ``state.step``, so restarts from a checkpoint replay
         the same rounding decisions bit-exactly.
+
+        ``grads`` may be a :class:`GradBuffer` (ZeRO-2, DESIGN.md §13;
+        pooled layouts only).  ``materialize_params=False`` skips the
+        model-shape params reconstruction and returns ``(None, state)`` —
+        the deferred-all-gather path: the caller reconstructs via
+        :meth:`params_view` at first use (top of the next step), so the
+        masters' all-gather overlaps the next forward instead of extending
+        this step's tail.
         """
         cfg = self.cfg
+        if isinstance(grads, GradBuffer):
+            assert cfg.pooling_active, \
+                "GradBuffer input requires the pooled layout (shard_grads)"
         lr = jnp.asarray(cfg.lr if lr is None else lr, jnp.float32)
         step_f = (state.step + 1).astype(jnp.float32)
         gnorm_scale, new_vec = self.percentile_clip(grads, state)
@@ -731,6 +1033,8 @@ class Block8bitOptimizer:
         new_state = OptState(step=state.step + 1, leaves=new_leaves,
                              gnorm_vec=new_vec, arena=new_arena,
                              pool32=new_pool)
+        if not materialize_params:
+            return None, new_state
         return self.params_view(new_state, param_dtype), new_state
 
     def params_view(self, state: OptState, param_dtype=jnp.float32) -> Pytree:

@@ -54,6 +54,13 @@ def main(argv=None):
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=100)
     ap.add_argument("--out", default=None, help="metrics JSONL path")
+    ap.add_argument("--shard-grads", action="store_true",
+                    help="ZeRO-2: accumulate grads owned-span sharded "
+                         "(DESIGN.md §13)")
+    ap.add_argument("--overlap-buckets", type=int, default=1,
+                    help="subdivide the partitioned arena update into N "
+                         "buckets overlapping the reduce-scatter "
+                         "(DESIGN.md §13)")
     args = ap.parse_args(argv)
 
     cfg = cfgs.get_config(args.arch)
@@ -83,13 +90,18 @@ def main(argv=None):
             opt_kw["state_bits"] = parts[0] if len(parts) == 1 else tuple(parts)
         if args.no_32bit_embed_override:
             opt_kw["override_32bit"] = lambda p: False
+    if args.shard_grads:
+        opt_kw["shard_grads"] = True
+    if args.overlap_buckets > 1:
+        opt_kw["overlap_buckets"] = args.overlap_buckets
     opt = make_optimizer(args.optimizer, lr=args.lr, weight_decay=0.0,
                          **opt_kw)
     hyper = train_loop.TrainHyper(
         microbatches=args.microbatches,
         lr_schedule=train_loop.warmup_cosine(args.lr, args.warmup,
                                              args.steps))
-    step_fn = jax.jit(train_loop.make_train_step(cfg, opt, hyper))
+    # donated state (DESIGN.md §13c); the loop below rebinds state
+    step_fn = train_loop.jit_train_step(cfg, opt, hyper)
     state, _ = train_loop.init_train_state(cfg, opt, jax.random.PRNGKey(args.seed))
 
     start = 0
@@ -110,6 +122,7 @@ def main(argv=None):
 
     out_f = open(args.out, "a") if args.out else None
     times = []
+    compile_s = None   # first-step wall time = compile + run (reported apart)
     n_params = cfgs.get_config(args.arch)  # for log only
     for i in range(start, args.steps):
         t0 = time.perf_counter()
@@ -117,7 +130,14 @@ def main(argv=None):
         state, metrics = step_fn(state, batch)
         loss = float(metrics["loss"])
         dt = time.perf_counter() - t0
-        times.append(dt)
+        if compile_s is None:
+            # the first executed step pays jit tracing + XLA compilation;
+            # keeping it out of `times` stops it skewing steady-state
+            # ms/step (and the straggler z-scores) in metrics/BENCH rows
+            compile_s = dt
+            print(f"[compile] first step {dt:.2f}s (excluded from ms/step)")
+        else:
+            times.append(dt)
         # straggler detection: z-score of step time over trailing window
         if len(times) > 20:
             w = np.array(times[-20:-1])
@@ -126,6 +146,8 @@ def main(argv=None):
                 print(f"[straggler] step {i}: {dt:.3f}s z={z:.1f}")
         rec = {"step": i, "loss": loss, "t": round(dt, 4),
                "grad_norm": float(metrics["grad_norm"])}
+        if i == start:
+            rec["compile_s"] = round(compile_s, 4)
         if out_f:
             out_f.write(json.dumps(rec) + "\n")
             out_f.flush()
@@ -140,8 +162,10 @@ def main(argv=None):
             print("[diverged]")
             return 2
     sb = opt.state_bytes(state.opt_state) if hasattr(opt, "state_bytes") else {}
+    steady_ms = 1e3 * float(np.mean(times)) if times else float("nan")
     print(f"done. final loss {loss:.4f}; entropy floor "
-          f"{pipe.bigram_entropy():.4f}; optimizer state bytes {sb}")
+          f"{pipe.bigram_entropy():.4f}; compile {compile_s:.2f}s; "
+          f"steady {steady_ms:.1f} ms/step; optimizer state bytes {sb}")
     return 0
 
 

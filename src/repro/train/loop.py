@@ -8,6 +8,7 @@ repro/launch/train.py).
 from __future__ import annotations
 
 import dataclasses
+import inspect
 from typing import Any, Callable, NamedTuple, Optional
 
 import jax
@@ -113,6 +114,19 @@ def make_train_step(cfg, optimizer, hyper: TrainHyper = TrainHyper(),
     """
     loss_fn = make_loss_fn(cfg, hyper)
     param_dtype = jnp.dtype(cfg.param_dtype)
+    # ZeRO-2 (DESIGN.md §13): accumulate straight into the optimizer's
+    # owned-span GradBuffer instead of a replicated param-shaped pytree.
+    shard_grads = bool(
+        getattr(getattr(optimizer, "cfg", None), "shard_grads_active", False)
+        and hasattr(optimizer, "init_grad_buffer"))
+    # Deferred all-gather (§13d): apply() skips the model-shape params
+    # reconstruction when it supports the kwarg — train_step discards that
+    # output anyway; params re-materialize at their first use, the
+    # params_view call at the top of the NEXT step.
+    defer_kw = {}
+    if "materialize_params" in inspect.signature(
+            optimizer.apply).parameters:
+        defer_kw["materialize_params"] = False
 
     def compute_grads(params, batch):
         if hyper.microbatches <= 1:
@@ -146,18 +160,60 @@ def make_train_step(cfg, optimizer, hyper: TrainHyper = TrainHyper(),
         mx = {k: jnp.mean(v) for k, v in mxs.items()}
         return loss_sum / n, mx, grads
 
+    def compute_grad_buffer(params, batch, opt_state):
+        """ZeRO-2 accumulation (DESIGN.md §13): each microbatch's grads
+        flatten into the owned-span GradBuffer bucket-by-bucket as they
+        are produced — the replicated grad pytree never outlives one
+        microbatch, and each bucket's reduce-scatter overlaps the next
+        microbatch's backward.  Addition commutes with the (exact)
+        flatten, so the accumulated values are bit-identical to the
+        param-shaped accumulator above."""
+        buf0 = optimizer.init_grad_buffer(opt_state)
+        if hyper.microbatches <= 1:
+            (loss, mx), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+            return loss, mx, optimizer.accumulate_grads(buf0, grads)
+
+        n = hyper.microbatches
+
+        def micro(carry, mb):
+            buf, loss_acc = carry
+            (loss, mx), g = jax.value_and_grad(loss_fn, has_aux=True)(params,
+                                                                      mb)
+            return (optimizer.accumulate_grads(buf, g), loss_acc + loss), mx
+
+        def split(x):
+            b = x.shape[0]
+            return x.reshape(n, b // n, *x.shape[1:])
+
+        mbs = jax.tree_util.tree_map(split, batch)
+        (buf, loss_sum), mxs = jax.lax.scan(micro, (buf0, 0.0), mbs)
+        buf = jax.tree_util.tree_map(lambda g: g / n, buf)
+        mx = {k: jnp.mean(v) for k, v in mxs.items()}
+        return loss_sum / n, mx, buf
+
     def train_step(state: TrainState, batch):
         params = optimizer.params_view(state.opt_state, param_dtype)
         if param_shardings is not None:
             params = jax.tree_util.tree_map(
                 jax.lax.with_sharding_constraint, params, param_shardings)
-        loss, mx, grads = compute_grads(params, batch)
-        grads, gnorm = clip_by_global_norm(grads, hyper.grad_clip)
+        if shard_grads:
+            loss, mx, grads = compute_grad_buffer(params, batch,
+                                                  state.opt_state)
+            # same clip formula as clip_by_global_norm, with the norm
+            # taken from the buffer (bit-identical per-leaf reductions)
+            gnorm = optimizer.grad_buffer_norm(grads)
+            scale = jnp.minimum(1.0, hyper.grad_clip /
+                                jnp.maximum(gnorm, 1e-12))
+            grads = jax.tree_util.tree_map(lambda x: x * scale, grads)
+        else:
+            loss, mx, grads = compute_grads(params, batch)
+            grads, gnorm = clip_by_global_norm(grads, hyper.grad_clip)
         lr = hyper.lr_schedule(state.step) if hyper.lr_schedule else None
         from repro.kernels import ops as kops
         dispatch0 = kops.fused_update_count()
         _, new_opt = optimizer.apply(grads, state.opt_state, lr=lr,
-                                     param_dtype=param_dtype)
+                                     param_dtype=param_dtype, **defer_kw)
         metrics = {"loss": loss, "grad_norm": gnorm, **mx}
         # Counted at trace time => a constant under jit: how many fused
         # optimizer dispatches the compiled step bakes in.  1 per state-
@@ -182,6 +238,14 @@ def make_train_step(cfg, optimizer, hyper: TrainHyper = TrainHyper(),
                     sb["owned_blocks"])
                 metrics["opt_owned_state_bytes_per_param"] = jnp.float32(
                     sb["owned_state_bytes"] / sb["n_params"])
+        if shard_grads and hasattr(optimizer, "grad_buffer_bytes"):
+            # ZeRO-2 accounting (DESIGN.md §13): what one device holds of
+            # the accumulated grads vs the replicated pytree it replaces.
+            gbb = optimizer.grad_buffer_bytes(state.opt_state)
+            metrics["peak_grad_bytes"] = jnp.float32(
+                gbb["sharded_grad_bytes"])
+            metrics["replicated_grad_bytes"] = jnp.float32(
+                gbb["replicated_grad_bytes"])
         if getattr(optimizer, "cfg", None) is not None and \
                 getattr(optimizer.cfg, "percentile_clipping", 100) < 100:
             # Same subgraph apply() evaluates internally -> CSE'd by XLA;
@@ -191,6 +255,27 @@ def make_train_step(cfg, optimizer, hyper: TrainHyper = TrainHyper(),
         return TrainState(opt_state=new_opt, step=state.step + 1), metrics
 
     return train_step
+
+
+def jit_train_step(cfg, optimizer, hyper: TrainHyper = TrainHyper(),
+                   param_shardings=None, *, donate: bool = True,
+                   **jit_kwargs):
+    """``jax.jit(make_train_step(...))`` with the TrainState donated
+    (DESIGN.md §13c): the optimizer state's codes/absmax/masters alias
+    their output buffers in place instead of round-tripping HBM twice.
+    Callers must rebind ``state`` each step (every in-repo loop does);
+    pass ``donate=False`` to keep the old state alive (A/B comparisons).
+    """
+    step = make_train_step(cfg, optimizer, hyper, param_shardings)
+    donate_argnums = (0,) if donate else ()
+    return jax.jit(step, donate_argnums=donate_argnums, **jit_kwargs)
+
+
+def donation_aliases(lowered) -> int:
+    """Number of donated-input/output buffer aliasings a ``.lower()``-ed
+    step actually established (the ``tf.aliasing_output`` markers in the
+    StableHLO) — the donation-aliasing audit hook (DESIGN.md §13c)."""
+    return lowered.as_text().count("tf.aliasing_output")
 
 
 def init_train_state(cfg, optimizer, key) -> tuple[TrainState, Pytree]:

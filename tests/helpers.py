@@ -46,7 +46,8 @@ def tiny_train(opt, steps: int, *, cfg=None, pipe=None, seed=0, trace=()):
     cfg = cfg or tiny_cfg()
     pipe = pipe or tiny_pipe(vocab_size=cfg.vocab_size)
     state, _ = L.init_train_state(cfg, opt, jax.random.PRNGKey(seed))
-    step = jax.jit(L.make_train_step(cfg, opt))
+    # donated step (DESIGN.md §13c) — the loop below rebinds state
+    step = L.jit_train_step(cfg, opt)
     traces = {name: [] for name in trace}
     m = {}
     for i in range(steps):
