@@ -351,6 +351,122 @@ def bench_muon(smoke: bool = False):
     return results
 
 
+def bench_telemetry_overhead(smoke: bool = False):
+    """Telemetry cost gates (DESIGN.md §14) on a real jitted train step.
+
+    Three legs over the same tiny LM:
+
+      * ``baseline`` — telemetry fully off (the default build);
+      * ``off`` — phase-tracing annotations compiled into the step
+        (``set_phase_tracing(True)`` before tracing) and
+        ``telemetry_every`` set in the config, but no probes and no sinks.
+        The annotations are named scopes, not ops, so the computation is
+        unchanged (tests/test_telemetry.py pins the telemetry-off StableHLO
+        byte-identical); gate: min step time <= 1.01x baseline.
+      * ``on`` — registry sink attached, per-step scalars recorded, and
+        qhealth probes every 10 steps (a separate jitted executable on the
+        host schedule, pre-warmed off the clock); gate: mean step time
+        <= 1.05x baseline, the probe cost amortized over the window.
+
+    A small absolute guard (0.2/0.5 ms) rides on each gate so timer
+    granularity on the tiny CPU step can't flake the ratio.  Appends
+    telemetry_overhead to BENCH_speed.json."""
+    import numpy as np
+
+    from benchmarks.common import small_lm
+    from repro import telemetry as tel
+    from repro.core.optim import make_optimizer
+    from repro.telemetry import tracing
+    from repro.train import loop as L
+
+    steps = 20 if smoke else 40
+    every = 10
+    reps = 3
+
+    def make_leg(trace: bool, probes: bool):
+        """Compile one leg (off the clock) and return a window runner.
+        The three runners are then INTERLEAVED window-by-window, so host
+        drift (CPU frequency, cache state) hits every leg equally instead
+        of biasing whichever ran last."""
+        tracing.set_phase_tracing(trace)
+        tracing.reset_trace_events()
+        try:
+            cfg, pipe = small_lm(d_model=64, n_layers=2, seq=32, batch=8)
+            kw = {"telemetry_every": every} if (trace or probes) else {}
+            opt = make_optimizer("adam8", lr=1e-3, min_8bit_size=1024, **kw)
+            state, _ = L.init_train_state(cfg, opt, jax.random.PRNGKey(0))
+            step = L.jit_train_step(cfg, opt)
+            reg = probe = None
+            if probes:
+                reg = tel.MetricRegistry()
+                reg.add_sink(tel.InMemorySink())
+                probe = tel.QHealthProbe(opt)
+            # compile warm-up: first step (and first probe) off the clock
+            batch = {k: jnp.asarray(v) for k, v in pipe.batch_at(0).items()}
+            state, m = step(state, batch)
+            jax.block_until_ready(m["loss"])
+            if probe is not None:
+                probe.probe(state.opt_state, step=0)
+        finally:
+            tracing.set_phase_tracing(False)
+        box = {"state": state, "i": 1}
+
+        def window():
+            times = []
+            st = box["state"]
+            for k in range(steps):
+                batch = {k2: jnp.asarray(v) for k2, v in
+                         pipe.batch_at(box["i"]).items()}
+                box["i"] += 1
+                t0 = time.perf_counter()
+                st, m = step(st, batch)
+                if probes:
+                    reg.record_scalars(k, m, prefix="train/")
+                    if (k + 1) % every == 0:
+                        for ev in probe.probe(st.opt_state, step=k):
+                            reg.emit_event(ev)
+                jax.block_until_ready(m["loss"])
+                times.append(time.perf_counter() - t0)
+            box["state"] = st
+            return times
+
+        return window
+
+    legs = {"base": make_leg(trace=False, probes=False),
+            "off": make_leg(trace=True, probes=False),
+            "on": make_leg(trace=True, probes=True)}
+    times: dict[str, list] = {k: [] for k in legs}
+    for _ in range(reps):
+        for name, w in legs.items():
+            times[name] += w()
+    base_mean, base_min = (float(np.mean(times["base"])) * 1e3,
+                           float(np.min(times["base"])) * 1e3)
+    off_mean, off_min = (float(np.mean(times["off"])) * 1e3,
+                         float(np.min(times["off"])) * 1e3)
+    on_mean, on_min = (float(np.mean(times["on"])) * 1e3,
+                       float(np.min(times["on"])) * 1e3)
+    off_ratio = off_min / max(base_min, 1e-9)
+    on_ratio = on_mean / max(base_mean, 1e-9)
+    emit("telemetry/baseline_ms_per_step", base_min * 1e3, "min, no telemetry")
+    emit("telemetry/off_ms_per_step", off_min * 1e3,
+         f"{off_ratio:.3f}x baseline (gate 1.01x): traced-in annotations")
+    emit("telemetry/on_ms_per_step", on_mean * 1e3,
+         f"{on_ratio:.3f}x baseline (gate 1.05x): probes every {every}")
+    assert off_min <= base_min * 1.01 + 0.2, (off_min, base_min)
+    assert on_mean <= base_mean * 1.05 + 0.5, (on_mean, base_mean)
+    _append_bench_json({
+        "bench": "telemetry_overhead",
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "smoke": smoke, "backend": jax.default_backend(),
+        "telemetry_every": every, "steps_per_window": steps,
+        "baseline_ms": {"mean": base_mean, "min": base_min},
+        "off_ms": {"mean": off_mean, "min": off_min},
+        "on_ms": {"mean": on_mean, "min": on_min},
+        "off_ratio_min": off_ratio, "on_ratio_mean": on_ratio,
+    }, label="telemetry/overhead_json")
+    return {"off_ratio": off_ratio, "on_ratio": on_ratio}
+
+
 def bench_quantize_throughput():
     qs = jnp.asarray(qmap.get_qmap("dynamic", True))
     x = jax.random.normal(jax.random.PRNGKey(0), (512, 2048))
@@ -366,7 +482,8 @@ def bench_quantize_throughput():
 
 
 def main(smoke: bool = False, bits: int | None = None,
-         algo: str | None = None, partition: bool = False):
+         algo: str | None = None, partition: bool = False,
+         telemetry: bool = False):
     if not smoke:
         bench_table5_update_speed()
         bench_quantize_throughput()
@@ -378,6 +495,8 @@ def main(smoke: bool = False, bits: int | None = None,
         bench_muon(smoke=smoke)
     if partition or not smoke:
         bench_partition(smoke=smoke)
+    if telemetry or not smoke:
+        bench_telemetry_overhead(smoke=smoke)
 
 
 if __name__ == "__main__":

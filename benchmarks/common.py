@@ -55,35 +55,26 @@ def git_sha() -> str:
         return "unknown"
 
 
-def _dedupe_key(entry: dict) -> tuple:
-    return tuple(repr(entry.get(k)) for k in _DEDUPE_FIELDS)
-
-
 def append_bench_json(path: str, entry: dict) -> str:
     """Record one entry in a BENCH_*.json trajectory file and return the
     absolute path.  Every entry is stamped with the current ``git_sha``;
     an existing entry for the same bench cell at the same commit (see
     ``_DEDUPE_FIELDS``) is *replaced*, so repeat runs don't pile up and
     the file stays a comparable per-PR trajectory.  Tolerates a missing
-    or corrupt file."""
-    path = os.path.abspath(path)
-    entry = dict(entry)
-    entry.setdefault("git_sha", git_sha())
-    data = {"entries": []}
-    if os.path.exists(path):
-        try:
-            with open(path) as f:
-                data = json.load(f)
-        except (json.JSONDecodeError, OSError):
-            data = {"entries": []}
-    entries = data.setdefault("entries", [])
-    key = _dedupe_key(entry)
-    data["entries"] = [e for e in entries
-                       if not (isinstance(e, dict) and _dedupe_key(e) == key)]
-    data["entries"].append(entry)
-    with open(path, "w") as f:
-        json.dump(data, f, indent=2)
-    return path
+    or corrupt file.  Delegates to the telemetry trajectory writer
+    (``repro.telemetry.export.append_json_trajectory``), so BENCH files
+    and telemetry share one writer (DESIGN.md §14)."""
+    from repro.telemetry.export import append_json_trajectory
+    return append_json_trajectory(path, entry, _DEDUPE_FIELDS,
+                                  defaults={"git_sha": git_sha()})
+
+
+def bench_sink(path: str):
+    """A registry sink routing telemetry events into ``path`` as BENCH
+    trajectory entries (dedupe per cell+commit, like append_bench_json)."""
+    from repro.telemetry.export import BenchJsonSink
+    return BenchJsonSink(path, _DEDUPE_FIELDS,
+                         defaults={"git_sha": git_sha()})
 
 
 def time_fn(fn, *args, iters=5, warmup=2):

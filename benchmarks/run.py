@@ -24,6 +24,8 @@ SUITES = {
     "step_overlap": ("benchmarks.bench_step_overlap",
                      "Optimizer-exposed ms/step: sequential vs overlapped "
                      "ZeRO-2 (DESIGN.md §13)"),
+    "telemetry": ("benchmarks.bench_telemetry",
+                  "Telemetry JSONL + qhealth probe smoke (DESIGN.md §14)"),
 }
 
 # Suites a --smoke run exercises (fast enough for CI, covers the kernels).
@@ -54,6 +56,12 @@ def main() -> None:
                          "exposed ms + ZeRO-2 peak grad bytes on a "
                          "4-device host mesh, even under --smoke; "
                          "DESIGN.md §13)")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="also run the telemetry legs: the JSONL/qhealth "
+                         "smoke suite (schema-validated probe artifact, "
+                         "4-device mesh when forced) and the speed "
+                         "suite's telemetry-overhead gates, even under "
+                         "--smoke (DESIGN.md §14)")
     args = ap.parse_args()
     if args.only:
         names = args.only.split(",")
@@ -63,6 +71,8 @@ def main() -> None:
         names = list(SUITES)
     if args.overlap and "step_overlap" not in names:
         names.append("step_overlap")
+    if args.telemetry and "telemetry" not in names:
+        names.append("telemetry")
     print("name,us_per_call,derived")
     for n in names:
         mod_name, desc = SUITES[n]
@@ -78,6 +88,8 @@ def main() -> None:
             kwargs["algo"] = args.algo
         if args.partition and "partition" in params:
             kwargs["partition"] = True
+        if args.telemetry and "telemetry" in params:
+            kwargs["telemetry"] = True
         try:
             mod.main(**kwargs)
         except Exception as e:  # keep the harness running

@@ -29,6 +29,7 @@ lars/adagrad/muon): the script compares ``<algo>32`` against ``<algo>8``
 through the same ``make_optimizer`` entry point.
 """
 import argparse
+import os
 
 import jax
 import jax.numpy as jnp
@@ -36,21 +37,74 @@ import jax.numpy as jnp
 from repro.configs import base
 from repro.core.optim import ALGOS, make_optimizer
 from repro.data.pipeline import DataConfig, SyntheticLMPipeline
+from repro import telemetry as tel
+from repro.telemetry import tracing
 from repro.train import loop as L
 
+# Registry gauges surfaced in the final summary table, in display order:
+# (metric name, row label, format)
+SUMMARY_ROWS = (
+    ("train/loss", "final loss", "{:.4f}"),
+    ("train/pclip_scale", "pclip scale", "{:.4f}"),
+    ("train/state_bytes_per_param", "state bytes/param", "{:.3f}"),
+    ("train/opt_owned_state_bytes_per_param", "owned bytes/param (ZeRO-1)",
+     "{:.3f}"),
+    ("train/opt_fused_dispatches", "fused dispatches/step", "{:.0f}"),
+    ("train/steady_ms", "steady ms/step", "{:.1f}"),
+)
 
-def run(opt_name: str, steps: int = 80, **opt_kw):
+
+def run(opt_name: str, steps: int = 80, registry=None, telemetry_dir=None,
+        telemetry_every: int = 0, **opt_kw):
     cfg = base.reduced(base.get_config("paper-lm-209m"),
                        d_model=128, n_layers=2, vocab_size=256)
     pipe = SyntheticLMPipeline(DataConfig(vocab_size=256, seq_len=64,
                                           global_batch=8))
+    if telemetry_every:
+        opt_kw["telemetry_every"] = telemetry_every
     opt = make_optimizer(opt_name, lr=5e-3, **opt_kw)  # <- line 1 (the swap)
-    state, _ = L.init_train_state(cfg, opt, jax.random.PRNGKey(0))
-    step = L.jit_train_step(cfg, opt)  # <- line 2 (unchanged API; donates
-    #    the state in place and defers the params view — DESIGN.md §13)
-    for i in range(steps):
-        batch = {k: jnp.asarray(v) for k, v in pipe.batch_at(i).items()}
-        state, m = step(state, batch)
+    reg = registry if registry is not None else tel.MetricRegistry()
+    # Telemetry (DESIGN.md §14): JSONL sink + phase tracing enabled BEFORE
+    # the step is traced; without --telemetry-dir the step lowers exactly
+    # as before (zero-overhead contract).
+    probe = None
+    prev_tracing = tracing.phase_tracing_enabled()
+    if telemetry_dir:
+        reg.add_sink(tel.JsonlSink(
+            os.path.join(telemetry_dir, f"{opt_name}.jsonl")))
+        tracing.set_phase_tracing(True)
+        tracing.reset_trace_events()
+        if telemetry_every and getattr(opt, "_qmap1", None) is not None:
+            probe = tel.QHealthProbe(opt)
+    try:
+        state, _ = L.init_train_state(cfg, opt, jax.random.PRNGKey(0))
+        step = L.jit_train_step(cfg, opt)  # <- line 2 (unchanged API;
+        #    donates the state in place and defers the params view — §13)
+        timer = tracing.StepTimer()  # ms/step + compile_s (DESIGN.md §14)
+        for i in range(steps):
+            with timer.step():
+                batch = {k: jnp.asarray(v)
+                         for k, v in pipe.batch_at(i).items()}
+                state, m = step(state, batch)
+            if telemetry_dir:
+                if i == 0:   # per-phase dispatch accounting of the compile
+                    reg.emit_event(tracing.trace_event_dict(i))
+                    tracing.reset_trace_events()
+                reg.record_scalars(i, m, prefix="train/")
+                reg.emit_event({"kind": "phase", "step": i, "phase": "step",
+                                "wall_s": timer.last_dt})
+                if probe is not None and (i + 1) % telemetry_every == 0:
+                    with tracing.host_phase("qhealth_probe", step=i):
+                        for ev in probe.probe(state.opt_state, step=i):
+                            reg.emit_event(ev)
+                    for ev in tracing.drain_phase_events():
+                        reg.emit_event(ev)
+    finally:
+        tracing.set_phase_tracing(prev_tracing)
+    reg.record_scalars(steps - 1, m, prefix="train/")
+    reg.gauge("train/steady_ms").set(timer.steady_ms())
+    if telemetry_dir:
+        reg.flush(step=steps - 1)
     sb = opt.state_bytes(state.opt_state)
     bytes_ = sb["state_bytes"]
     extra = ""
@@ -59,7 +113,23 @@ def run(opt_name: str, steps: int = 80, **opt_kw):
                  f"over {sb['partition_shards']} owners)")
     print(f"{opt_name:8s} final loss {float(m['loss']):.4f}  "
           f"optimizer statistics: {bytes_ / 1e6:.2f} MB{extra}")
-    return float(m["loss"]), bytes_
+    return float(m["loss"]), bytes_, reg
+
+
+def summary_table(runs) -> str:
+    """Health-at-a-glance table from the per-run registries: one column
+    per run, one row per SUMMARY_ROWS gauge present in any registry."""
+    names = [n for n, _ in runs]
+    width = max(12, *(len(n) for n in names))
+    lines = [" " * 28 + "  ".join(f"{n:>{width}}" for n in names)]
+    for key, label, fmt in SUMMARY_ROWS:
+        vals = [reg.get(key) for _, reg in runs]
+        if all(v is None for v in vals):
+            continue
+        cells = [fmt.format(v) if v is not None else "-" for v in vals]
+        lines.append(f"{label:<28}" + "  ".join(f"{c:>{width}}"
+                                                for c in cells))
+    return "\n".join(lines)
 
 
 if __name__ == "__main__":
@@ -96,6 +166,13 @@ if __name__ == "__main__":
                          help="force the sequential single-dispatch path "
                               "(the PR-5 oracle)")
     ap.add_argument("--steps", type=int, default=80)
+    ap.add_argument("--telemetry-dir", default=None, metavar="DIR",
+                    help="emit telemetry JSONL per run (metrics, step "
+                         "phases, qhealth probes) into DIR/<run>.jsonl "
+                         "(DESIGN.md §14)")
+    ap.add_argument("--telemetry-every", type=int, default=0, metavar="N",
+                    help="quantization-health probe every N steps "
+                         "(0 = off; probes need --telemetry-dir)")
     args = ap.parse_args()
     opt_kw = {} if args.bits == 8 else {"state_bits": (args.bits, 8)}
     if args.no_pooled:
@@ -116,6 +193,11 @@ if __name__ == "__main__":
             ap.error("--overlap N buckets the span-partitioned update; it "
                      "needs --partition N (DESIGN.md §13)")
         opt_kw["overlap_buckets"] = args.overlap
-    l32, b32 = run(f"{args.algo}32", steps=args.steps)
-    l8, b8 = run(f"{args.algo}8", steps=args.steps, **opt_kw)
+    tel_kw = dict(telemetry_dir=args.telemetry_dir,
+                  telemetry_every=args.telemetry_every)
+    l32, b32, reg32 = run(f"{args.algo}32", steps=args.steps, **tel_kw)
+    l8, b8, reg8 = run(f"{args.algo}8", steps=args.steps, **tel_kw,
+                       **opt_kw)
     print(f"\nloss diff: {abs(l8 - l32):.4f}   state memory: {b32 / b8:.1f}x smaller")
+    print("\n" + summary_table(((f"{args.algo}32", reg32),
+                                (f"{args.algo}8", reg8))))

@@ -25,8 +25,11 @@ fi
 # §11) plus the partition leg (ZeRO-1 owned bytes + span launches vs shard
 # count, DESIGN.md §12).  One invocation: the flags forward to the same
 # suite mains, so this is a superset of the plain --smoke run at no
-# repeated suites.
-PYTHONPATH=src python -m benchmarks.run --smoke --bits 4 --algo muon --partition
+# repeated suites.  --telemetry adds the speed suite's telemetry-overhead
+# gates (telemetry-off <= 1.01x, probes-on <= 1.05x of baseline ms/step)
+# plus a single-device run of the telemetry JSONL suite (DESIGN.md §14).
+PYTHONPATH=src python -m benchmarks.run --smoke --bits 4 --algo muon \
+  --partition --telemetry
 
 # Overlap leg (DESIGN.md §13): optimizer-exposed ms/step sequential vs
 # the bucketed ZeRO-2 path, plus the peak-grad-bytes gate, on a forced
@@ -35,3 +38,11 @@ PYTHONPATH=src python -m benchmarks.run --smoke --bits 4 --algo muon --partition
 # cells into BENCH_speed.json.
 XLA_FLAGS="--xla_force_host_platform_device_count=4 ${XLA_FLAGS:-}" \
   PYTHONPATH=src python -m benchmarks.run --smoke --overlap --only step_overlap
+
+# Telemetry leg (DESIGN.md §14), forced 4-device host mesh: 10 muon8
+# steps on the ZeRO-1 partitioned arena with qhealth probes every 2
+# steps; schema-validates the emitted JSONL and asserts saturation/
+# utilization fields for both the pooled QuantArena and a muon matrix
+# leaf.
+XLA_FLAGS="--xla_force_host_platform_device_count=4 ${XLA_FLAGS:-}" \
+  PYTHONPATH=src python -m benchmarks.run --smoke --only telemetry

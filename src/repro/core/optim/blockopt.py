@@ -76,6 +76,7 @@ from repro.core.optim.base import (ArenaPartition, FlatSegment, Full32Leaf,
                                    flatten_to_blocks, make_buckets,
                                    make_partition, path_str)
 from repro.models.constrain import constrain as _constrain
+from repro.telemetry import tracing as _tracing
 from repro.kernels import fused_update as kfu
 from repro.kernels import ops as kops
 
@@ -470,12 +471,17 @@ class Block8bitOptimizer:
                                     grid=max(cfg.shard_multiple, 1))
                 b3 = blocks.reshape(part.n_shards, part.span_pad, -1)
                 g3 = gb.reshape(part.n_shards, part.span_pad, -1)
-                for k0, k1 in plan.ranges:
-                    b3 = b3.at[:, k0:k1].add(g3[:, k0:k1])
+                for i, (k0, k1) in enumerate(plan.ranges):
+                    with _tracing.annotate(f"grad_bucket{i}"):
+                        b3 = b3.at[:, k0:k1].add(g3[:, k0:k1])
                 blocks = b3.reshape(blocks.shape)
             else:
                 blocks = blocks + gb
-            blocks = self._constrain_buffer(blocks)
+            # the owned-span constraint IS the reduce-scatter entry point
+            # (DESIGN.md §13): resharding the accumulated buffer onto the
+            # partition axes scatters each bucket's sum to its owner
+            with _tracing.annotate("reduce_scatter"):
+                blocks = self._constrain_buffer(blocks)
         return GradBuffer(blocks=blocks, ride=tuple(ride),
                           layout=buf.layout, part=buf.part)
 
@@ -702,22 +708,25 @@ class Block8bitOptimizer:
                       for start, n in part.spans
                       for k0, k1 in plan.ranges]
         outs = []
-        for start, n in pieces:
+        for i, (start, n) in enumerate(pieces):
             if n <= 0:
                 continue
             sl = slice(start, start + n)
-            outs.append(kops.fused_update(
-                self._ew_algo, mb[sl], gb[sl],
-                _slice_blocks(arena.codes_m, start, n), arena.absmax_m[sl],
-                None if arena.codes_r is None
-                else _slice_blocks(arena.codes_r, start, n),
-                None if arena.absmax_r is None else arena.absmax_r[sl],
-                self._qmap1, self._qmap2, blockwise=True,
-                stochastic=cfg.stochastic_rounding,
-                block_seeds=block_seeds[sl],
-                block_offsets=block_offsets[sl],
-                tensor_scale_blocks=None if tscale is None else tscale[sl],
-                impl=self._impl, **hyper))
+            with _tracing.annotate(f"bucket{i}"):
+                outs.append(kops.fused_update(
+                    self._ew_algo, mb[sl], gb[sl],
+                    _slice_blocks(arena.codes_m, start, n),
+                    arena.absmax_m[sl],
+                    None if arena.codes_r is None
+                    else _slice_blocks(arena.codes_r, start, n),
+                    None if arena.absmax_r is None else arena.absmax_r[sl],
+                    self._qmap1, self._qmap2, blockwise=True,
+                    stochastic=cfg.stochastic_rounding,
+                    block_seeds=block_seeds[sl],
+                    block_offsets=block_offsets[sl],
+                    tensor_scale_blocks=None if tscale is None
+                    else tscale[sl],
+                    impl=self._impl, **hyper))
         return _concat_span_results(outs)
 
     def _span_update_shard_map(self, mesh, part: ArenaPartition,
@@ -776,8 +785,9 @@ class Block8bitOptimizer:
             plan = make_buckets(part, cfg.overlap_buckets,
                                 grid=max(cfg.shard_multiple, 1))
         if plan is None or len(plan.ranges) <= 1:
-            outs = _rules.shard_map_over_spans(
-                mesh, axis, part, local, spans, consts)
+            with _tracing.annotate("span_update"):
+                outs = _rules.shard_map_over_spans(
+                    mesh, axis, part, local, spans, consts)
         else:
             # Bucketed overlap (DESIGN.md §13): bucket k covers local rows
             # [k0, k1) of EVERY owner's span — the same static shape on
@@ -797,14 +807,15 @@ class Block8bitOptimizer:
                 return a3[:, k0:k1].reshape((D * (k1 - k0),) + a.shape[1:])
 
             per_bucket = []
-            for k0, k1 in plan.ranges:
+            for i, (k0, k1) in enumerate(plan.ranges):
                 ck = k1 - k0
                 bpart = ArenaPartition(
                     n_shards=D, total=D * ck, span_pad=ck,
                     spans=tuple((d * ck, ck) for d in range(D)))
-                per_bucket.append(_rules.shard_map_over_spans(
-                    mesh, axis, bpart, local,
-                    [bucket_slice(a, k0, k1) for a in spans], consts))
+                with _tracing.annotate(f"bucket{i}"):
+                    per_bucket.append(_rules.shard_map_over_spans(
+                        mesh, axis, bpart, local,
+                        [bucket_slice(a, k0, k1) for a in spans], consts))
             outs = []
             for pos in range(len(per_bucket[0])):
                 chunks = [b[pos].reshape((D, -1) + b[pos].shape[1:])
@@ -1050,8 +1061,11 @@ class Block8bitOptimizer:
                 return sl.reshape(leaf.shape).astype(param_dtype)
             return leaf.master.astype(param_dtype)
 
-        return jax.tree_util.tree_map(to_param, state.leaves,
-                                      is_leaf=_is_state_leaf)
+        # the deferred all-gather site (DESIGN.md §13d): reconstructing
+        # the model-shape view is where sharded masters re-materialize
+        with _tracing.annotate("params_allgather"):
+            return jax.tree_util.tree_map(to_param, state.leaves,
+                                          is_leaf=_is_state_leaf)
 
     # ------------------------------------------------------------- utilities
     def state_bytes(self, state: OptState) -> dict:

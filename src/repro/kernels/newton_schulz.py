@@ -50,6 +50,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.telemetry import tracing as _tracing
+
 # Muon quintic coefficients (Jordan et al. 2024).
 NS_COEFFS = (3.4445, -4.7750, 2.0315)
 DEFAULT_NS_STEPS = 5
@@ -156,12 +158,14 @@ def newton_schulz(x: jax.Array, *, steps: int = DEFAULT_NS_STEPS,
     x = x / (jnp.sqrt(jnp.sum(x * x)) + jnp.float32(eps))
     x = _pad_matrix(x, tile_n)
     for _ in range(steps):
-        g = _gram(x, tile_n, impl)
-        # Finalize the quintic's small m×m factor at the XLA level, like
-        # the LAMB norm finalization (§3): B = b·A + c·A·A.
-        b_mat = b * g + c * jax.lax.dot(g, g,
-                                        preferred_element_type=jnp.float32)
-        x = _ns_apply(x, b_mat, a, tile_n, impl)
+        with _tracing.annotate("ns.gram"):
+            g = _gram(x, tile_n, impl)
+            # Finalize the quintic's small m×m factor at the XLA level,
+            # like the LAMB norm finalization (§3): B = b·A + c·A·A.
+            b_mat = b * g + c * jax.lax.dot(
+                g, g, preferred_element_type=jnp.float32)
+        with _tracing.annotate("ns.apply"):
+            x = _ns_apply(x, b_mat, a, tile_n, impl)
     out = x[:shape[0], :shape[1]]
     return out.T if transpose else out
 

@@ -41,6 +41,7 @@ import jax.numpy as jnp
 
 from repro.core.lowbit import (PackedCodes, pack_codes, unpack_codes,
                                unwrap_codes)
+from repro.telemetry import tracing as _tracing
 from repro.kernels import common, ref
 from repro.kernels import fused_update as _fu
 from repro.kernels import newton_schulz as _ns
@@ -71,26 +72,28 @@ def _pad_rows(arrs, n_blocks: int, rows: int):
 
 def quantize_blockwise(x, codebook, *, impl: str | None = None,
                        rows: int = DEFAULT_ROWS):
-    impl = impl or default_impl()
-    if impl == "jnp":
-        return ref.quantize_ref(x, codebook)
-    nb = x.shape[0]
-    (x,), _ = _pad_rows([x], nb, rows)
-    codes, absmax = _quant_pallas(x, codebook, rows=rows,
-                                  interpret=(impl == "interpret"))
-    return codes[:nb], absmax[:nb]
+    with _tracing.annotate("quantize"):
+        impl = impl or default_impl()
+        if impl == "jnp":
+            return ref.quantize_ref(x, codebook)
+        nb = x.shape[0]
+        (x,), _ = _pad_rows([x], nb, rows)
+        codes, absmax = _quant_pallas(x, codebook, rows=rows,
+                                      interpret=(impl == "interpret"))
+        return codes[:nb], absmax[:nb]
 
 
 def dequantize_blockwise(codes, absmax, codebook, *, impl: str | None = None,
                          rows: int = DEFAULT_ROWS, dtype=jnp.float32):
-    impl = impl or default_impl()
-    if impl == "jnp":
-        return ref.dequantize_ref(codes, absmax, codebook, dtype)
-    nb = codes.shape[0]
-    (codes, absmax), _ = _pad_rows([codes, absmax], nb, rows)
-    out = _dequant_pallas(codes, absmax, codebook, rows=rows,
-                          interpret=(impl == "interpret"), dtype=dtype)
-    return out[:nb]
+    with _tracing.annotate("dequantize"):
+        impl = impl or default_impl()
+        if impl == "jnp":
+            return ref.dequantize_ref(codes, absmax, codebook, dtype)
+        nb = codes.shape[0]
+        (codes, absmax), _ = _pad_rows([codes, absmax], nb, rows)
+        out = _dequant_pallas(codes, absmax, codebook, rows=rows,
+                              interpret=(impl == "interpret"), dtype=dtype)
+        return out[:nb]
 
 
 # ----------------------------------------------------- fused-update registry
@@ -307,7 +310,6 @@ def fused_update(
     iteration count and is ignored by element-wise algorithms.
     """
     impl = impl or default_impl()
-    _FUSED_UPDATE_CALLS[0] += 1
     if not blockwise:
         impl = "jnp"
     fn = _REGISTRY.get((algo, impl))
@@ -339,8 +341,10 @@ def fused_update(
         hyper["blockwise"] = blockwise
     elif impl == "jnp":
         hyper["blockwise"] = blockwise
-    res = fn(p, g, codes_m, absmax_m, codes_r, absmax_r, qmap_m, qmap_r,
-             **hyper)
+    with _tracing.annotate(f"fused_update.{algo}"):
+        _FUSED_UPDATE_CALLS[0] += 1
+        res = fn(p, g, codes_m, absmax_m, codes_r, absmax_r, qmap_m, qmap_r,
+                 **hyper)
     if ncodes_m is not None:
         res = res._replace(codes_m=PackedCodes(res.codes_m, bits_m, ncodes_m))
     if ncodes_r is not None and res.codes_r is not None:

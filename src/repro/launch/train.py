@@ -17,7 +17,6 @@ import dataclasses
 import json
 import os
 import signal
-import time
 
 import jax
 import jax.numpy as jnp
@@ -26,6 +25,8 @@ import numpy as np
 from repro.configs import base as cfgs
 from repro.core.optim import make_optimizer
 from repro.data.pipeline import DataConfig, SyntheticLMPipeline
+from repro import telemetry as tel
+from repro.telemetry import tracing
 from repro.train import checkpoint as ckpt
 from repro.train import loop as train_loop
 
@@ -61,6 +62,13 @@ def main(argv=None):
                     help="subdivide the partitioned arena update into N "
                          "buckets overlapping the reduce-scatter "
                          "(DESIGN.md §13)")
+    ap.add_argument("--telemetry-dir", default=None,
+                    help="emit telemetry JSONL (metrics, step phases, "
+                         "qhealth probes) into this directory "
+                         "(DESIGN.md §14)")
+    ap.add_argument("--telemetry-every", type=int, default=0,
+                    help="run quantization-health probes every N steps "
+                         "(0 = off; requires --telemetry-dir)")
     args = ap.parse_args(argv)
 
     cfg = cfgs.get_config(args.arch)
@@ -94,12 +102,28 @@ def main(argv=None):
         opt_kw["shard_grads"] = True
     if args.overlap_buckets > 1:
         opt_kw["overlap_buckets"] = args.overlap_buckets
+    if args.telemetry_every:
+        opt_kw["telemetry_every"] = args.telemetry_every
     opt = make_optimizer(args.optimizer, lr=args.lr, weight_decay=0.0,
                          **opt_kw)
     hyper = train_loop.TrainHyper(
         microbatches=args.microbatches,
         lr_schedule=train_loop.warmup_cosine(args.lr, args.warmup,
                                              args.steps))
+
+    # Telemetry (DESIGN.md §14): a typed registry over a JSONL sink, with
+    # trace-time phase annotations enabled BEFORE the step is traced so the
+    # compiled executable carries the phase scopes.  Without --telemetry-dir
+    # nothing is enabled and the step lowers exactly as before.
+    reg = probe = None
+    if args.telemetry_dir:
+        reg = tel.MetricRegistry()
+        reg.add_sink(tel.JsonlSink(
+            os.path.join(args.telemetry_dir, "telemetry.jsonl")))
+        tracing.set_phase_tracing(True)
+        tracing.reset_trace_events()
+        probe = tel.QHealthProbe(opt)
+
     # donated state (DESIGN.md §13c); the loop below rebinds state
     step_fn = train_loop.jit_train_step(cfg, opt, hyper)
     state, _ = train_loop.init_train_state(cfg, opt, jax.random.PRNGKey(args.seed))
@@ -121,36 +145,43 @@ def main(argv=None):
     signal.signal(signal.SIGINT, _sig)
 
     out_f = open(args.out, "a") if args.out else None
-    times = []
-    compile_s = None   # first-step wall time = compile + run (reported apart)
-    n_params = cfgs.get_config(args.arch)  # for log only
+    # single ms/step + compile_s definition (telemetry.tracing.StepTimer,
+    # DESIGN.md §14) — the first executed step is the compile step and is
+    # excluded from steady-state times and straggler z-scores
+    timer = tracing.StepTimer()
     for i in range(start, args.steps):
-        t0 = time.perf_counter()
-        batch = {k: jnp.asarray(v) for k, v in pipe.batch_at(i).items()}
-        state, metrics = step_fn(state, batch)
-        loss = float(metrics["loss"])
-        dt = time.perf_counter() - t0
-        if compile_s is None:
-            # the first executed step pays jit tracing + XLA compilation;
-            # keeping it out of `times` stops it skewing steady-state
-            # ms/step (and the straggler z-scores) in metrics/BENCH rows
-            compile_s = dt
+        with timer.step():
+            batch = {k: jnp.asarray(v) for k, v in pipe.batch_at(i).items()}
+            state, metrics = step_fn(state, batch)
+            loss = float(metrics["loss"])
+        dt = timer.last_dt
+        if i == start:
             print(f"[compile] first step {dt:.2f}s (excluded from ms/step)")
-        else:
-            times.append(dt)
-        # straggler detection: z-score of step time over trailing window
-        if len(times) > 20:
-            w = np.array(times[-20:-1])
-            z = (dt - w.mean()) / (w.std() + 1e-9)
-            if z > 4:
-                print(f"[straggler] step {i}: {dt:.3f}s z={z:.1f}")
+            if reg is not None:
+                # per-phase dispatch accounting recorded while tracing the
+                # step (one "trace" event per compile; DESIGN.md §14)
+                reg.emit_event(tracing.trace_event_dict(i))
+                tracing.reset_trace_events()
+        if timer.is_straggler:
+            print(f"[straggler] step {i}: {dt:.3f}s z={timer.straggler_z:.1f}")
         rec = {"step": i, "loss": loss, "t": round(dt, 4),
                "grad_norm": float(metrics["grad_norm"])}
         if i == start:
-            rec["compile_s"] = round(compile_s, 4)
+            rec["compile_s"] = round(timer.compile_s, 4)
         if out_f:
             out_f.write(json.dumps(rec) + "\n")
             out_f.flush()
+        if reg is not None:
+            reg.record_scalars(i, metrics, prefix="train/")
+            reg.emit_event({"kind": "phase", "step": i, "phase": "step",
+                            "wall_s": dt})
+            if probe is not None and args.telemetry_every and \
+                    (i + 1) % args.telemetry_every == 0:
+                with tracing.host_phase("qhealth_probe", step=i):
+                    for ev in probe.probe(state.opt_state, step=i):
+                        reg.emit_event(ev)
+                for ev in tracing.drain_phase_events():
+                    reg.emit_event(ev)
         if i % 20 == 0 or i == args.steps - 1:
             print(f"step {i:5d} loss {loss:.4f} ({dt:.2f}s)", flush=True)
         if args.ckpt_dir and ((i + 1) % args.ckpt_every == 0 or stop["now"]):
@@ -162,9 +193,15 @@ def main(argv=None):
             print("[diverged]")
             return 2
     sb = opt.state_bytes(state.opt_state) if hasattr(opt, "state_bytes") else {}
-    steady_ms = 1e3 * float(np.mean(times)) if times else float("nan")
+    steady_ms = timer.steady_ms()
+    if reg is not None:
+        reg.gauge("train/steady_ms").set(steady_ms)
+        reg.gauge("train/compile_s").set(timer.compile_s)
+        reg.flush(step=args.steps - 1)
+        reg.close()
+        tracing.set_phase_tracing(False)
     print(f"done. final loss {loss:.4f}; entropy floor "
-          f"{pipe.bigram_entropy():.4f}; compile {compile_s:.2f}s; "
+          f"{pipe.bigram_entropy():.4f}; compile {timer.compile_s:.2f}s; "
           f"steady {steady_ms:.1f} ms/step; optimizer state bytes {sb}")
     return 0
 

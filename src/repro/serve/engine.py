@@ -24,10 +24,15 @@ class ServeConfig:
 
 
 class ServeEngine:
-    def __init__(self, cfg, params, serve_cfg: ServeConfig = ServeConfig()):
+    def __init__(self, cfg, params, serve_cfg: ServeConfig = ServeConfig(),
+                 registry=None):
         self.cfg = cfg
         self.params = params
         self.scfg = serve_cfg
+        # Optional telemetry (DESIGN.md §14): request / prompt-token /
+        # generated-token counters on the serving surface.  None = no
+        # telemetry, no overhead.
+        self.registry = registry
 
         def _prefill(params, tokens):
             return M.prefill(cfg, params, tokens, max_len=serve_cfg.max_len)
@@ -57,6 +62,9 @@ class ServeEngine:
             raise ValueError(
                 f"prompt length {P} + max_new_tokens {max_new_tokens} "
                 f"exceeds max_len {self.scfg.max_len}")
+        if self.registry is not None:
+            self.registry.counter("serve/requests").inc(B)
+            self.registry.counter("serve/prompt_tokens").inc(B * P)
         if max_new_tokens == 0:
             # the prefill-sampled token belongs to position P; emitting it
             # would return shape (B, 1) for a 0-token request
@@ -73,4 +81,7 @@ class ServeEngine:
                                           jnp.asarray(P + i, jnp.int32))
             tok = self._sample(logits[:, 0], k)
             out.append(tok)
+        if self.registry is not None:
+            self.registry.counter("serve/generated_tokens").inc(
+                B * max_new_tokens)
         return np.asarray(jnp.stack(out, axis=1))

@@ -1,0 +1,34 @@
+"""Observability for the 8-bit stack (DESIGN.md §14).
+
+Three pillars:
+  * :mod:`repro.telemetry.qhealth` — scheduled quantization-health probes
+    (saturation, codebook utilization, absmax drift, round-trip RMS);
+  * :mod:`repro.telemetry.tracing` — step-phase annotations, trace-time
+    dispatch accounting, and the shared ``StepTimer`` (ms/step +
+    compile_s single definition);
+  * :mod:`repro.telemetry.registry` / :mod:`repro.telemetry.export` —
+    typed metrics (counter/gauge/histogram) and the JSONL / in-memory /
+    BENCH-trajectory sinks behind them.
+
+All of it is off by default and adds nothing to the jitted step when off
+(pinned by tests/test_telemetry.py's zero-overhead guard).
+"""
+from repro.telemetry.export import (BenchJsonSink, InMemorySink, JsonlSink,
+                                    SCHEMA, append_json_trajectory,
+                                    validate_event, validate_jsonl)
+from repro.telemetry.qhealth import QHealthProbe
+from repro.telemetry.registry import MetricRegistry
+from repro.telemetry.tracing import (StepTimer, annotate, drain_phase_events,
+                                     host_phase, phase_tracing,
+                                     phase_tracing_enabled,
+                                     reset_trace_events, set_phase_tracing,
+                                     trace_event_dict, trace_events)
+
+__all__ = [
+    "SCHEMA", "BenchJsonSink", "InMemorySink", "JsonlSink",
+    "append_json_trajectory", "validate_event", "validate_jsonl",
+    "QHealthProbe", "MetricRegistry", "StepTimer", "annotate",
+    "drain_phase_events", "host_phase", "phase_tracing",
+    "phase_tracing_enabled", "reset_trace_events", "set_phase_tracing",
+    "trace_event_dict", "trace_events",
+]

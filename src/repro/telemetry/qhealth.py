@@ -1,0 +1,273 @@
+"""Quantization-health probes (DESIGN.md §14).
+
+The paper's central risk is *silent* quantization failure: saturated
+absmax blocks, dead codebook regions, EMA dynamics drifting outside the
+dynamic qmap's precise range (the 4-bit ``r`` failure mode, DESIGN.md §9).
+:class:`QHealthProbe` measures all of it online, from state already on
+device, on the host's probe schedule (``OptimConfig.telemetry_every``) —
+never inside the jitted train step, so the step stays bit-identical with
+probing on or off and the only host sync is at the scheduled step.
+
+Per quantized segment (every ``QuantSegment`` of the pooled
+:class:`~repro.core.optim.base.QuantArena`, and every per-leaf
+:class:`~repro.core.optim.base.Quant8Leaf` — muon matrix leaves ride
+per-leaf inside the pooled layout) and per state slot (``m``/``r``):
+
+  * ``saturation_fraction`` — fraction of the segment's live blocks with
+    at least one code on the codebook edge (|q| == max|q|): the block's
+    max landed on the format's last level, so growth is being clipped.
+  * ``edge_code_fraction`` — the same signal at element granularity.
+  * ``util_hist`` — codebook-utilization histogram over the segment's
+    codes (``2^bits`` bins: 256 at 8-bit, 16 at 4-bit); sub-byte
+    ``PackedCodes`` unpack through the lowbit path on device first, then
+    the codes are fetched and binned host-side with ``np.bincount`` (an
+    XLA scatter would cost more on CPU than the train step; the counts
+    are exact integers either way).  ``util_fraction`` = fraction of
+    levels with nonzero count (dead regions show up as util < 1).
+  * ``absmax_mean`` + ``absmax_drift`` — mean per-block absmax and its
+    ratio to a host-side EMA baseline (decay ``ema_decay``): dynamic-range
+    drift over training, the SOLO divergence precursor.
+  * ``rms_error`` — sampled quantize→dequantize round-trip RMS (relative)
+    of the leaf's f32 master in the slot-m format: the measured
+    representation error the ROADMAP's adaptive-format direction
+    (STQuant-style bitwidth/block-size choice) consumes as input.
+
+Padding is masked throughout: elements past a segment's logical ``n``
+(block tail + ``shard_multiple`` rows) are excluded from every histogram
+and fraction, so zero-padding can't fake a healthy zero-code population.
+
+Partition-awareness: under a ZeRO-1/2 mesh the arena arrays are pinned
+fully-replicated via ``rules.replicate_for_scales`` before the probe's
+reductions — the §12 mechanism that compiles a global reduction as the
+single-device oracle's, keeping probe results identical on 1- and
+N-device meshes (the f32 summation order never depends on placement).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import blockwise
+from repro.core.lowbit import unpack_codes, unwrap_codes
+from repro.core.optim.base import (Full32Leaf, Pool32Leaf, PooledQuantLeaf,
+                                   Quant8Leaf, path_str)
+
+DEFAULT_SAMPLE_BLOCKS = 32
+
+
+def _segment_stats(codes, qmap, absmax, segments):
+    """Per-segment health reductions over unpacked int codes (nb, B).
+
+    ``segments`` is a static tuple of ``(offset, n_blocks, n)``; returns
+    (sat (S,), edge_frac (S,), absmax_mean (S,)).  Padding elements (past
+    each segment's logical n) are masked out of every reduction; blocks
+    past the last live one (shard_multiple padding) are excluded from the
+    block-level fractions.  The codebook-utilization histogram is NOT
+    computed here: an XLA scatter over the arena costs more on CPU than
+    the train step itself, so the caller fetches the unpacked codes and
+    bins them host-side with ``np.bincount`` (exact integer counts either
+    way — see ``_segment_hists``)."""
+    bsz = codes.shape[1]
+    q = jnp.abs(qmap)[codes]                    # |dequant value| per code
+    edge = jnp.max(jnp.abs(qmap))
+    is_edge = q >= edge                         # exact: same-codebook lookup
+    sats, fracs, ameans = [], [], []
+    for off, nb, n in segments:
+        nvb = max(min(-(-n // bsz), nb), 1)     # live blocks (static)
+        e = jax.lax.slice_in_dim(is_edge, off, off + nvb)
+        am = jax.lax.slice_in_dim(absmax, off, off + nvb)
+        valid = (jnp.arange(nvb * bsz).reshape(nvb, bsz) < n)
+        n_valid = jnp.maximum(jnp.sum(valid), 1)
+        blk_edge = jnp.any(e & valid, axis=1)
+        sats.append(jnp.sum(blk_edge) / nvb)
+        fracs.append(jnp.sum(e & valid) / n_valid)
+        ameans.append(jnp.mean(am))
+    return jnp.stack(sats), jnp.stack(fracs), jnp.stack(ameans)
+
+
+def _segment_hists(codes, segments, n_bins):
+    """Host-side per-segment codebook-utilization histograms over unpacked
+    uint8 codes (numpy array, (nb, B)).  Exact counts, padding masked —
+    identical to a ``jnp.bincount`` with validity weights, at C speed."""
+    bsz = codes.shape[1]
+    hists = []
+    for off, nb, n in segments:
+        nvb = max(min(-(-n // bsz), nb), 1)
+        c = codes[off:off + nvb].reshape(-1)
+        valid = np.arange(nvb * bsz) < n
+        h = np.bincount(c[valid], minlength=n_bins).astype(np.int64)
+        hists.append(h[:n_bins])
+    return np.stack(hists)
+
+
+def _roundtrip_rms(blocks, qmap):
+    """Relative RMS error of one quantize→dequantize round trip of f32
+    blocks in the codebook's format (the online analogue of
+    bench_qerror's offline measurement)."""
+    codes, absmax = blockwise.quantize_blocks(blocks, qmap)
+    deq = blockwise.dequantize_blocks(codes, absmax, qmap)
+    num = jnp.sqrt(jnp.mean(jnp.square(blocks - deq)))
+    den = jnp.sqrt(jnp.mean(jnp.square(blocks)))
+    return num / (den + 1e-12)
+
+
+class QHealthProbe:
+    """Scheduled quantization-health probe over one optimizer's state.
+
+    One instance per run (it owns the host-side absmax EMA baselines and
+    the jitted probe executables).  ``probe(state, step)`` returns a list
+    of "qhealth" event dicts ready for the telemetry sinks; the only host
+    sync is fetching the probe results themselves.
+    """
+
+    def __init__(self, opt, mesh=None,
+                 sample_blocks: int = DEFAULT_SAMPLE_BLOCKS,
+                 ema_decay: float = 0.9):
+        self.opt = opt
+        self.mesh = mesh
+        self.sample_blocks = int(sample_blocks)
+        self.ema_decay = float(ema_decay)
+        self._ema: Dict[tuple, float] = {}
+        # Codebooks per slot from the optimizer's code formats (the probe
+        # must judge codes against the exact map that produced them).
+        self._qmaps = {"m": opt._qmap1, "r": opt._qmap2}
+        self._bits = dict(zip(("m", "r"), opt.cfg.state_bits_pair))
+
+        mesh_local = mesh
+
+        @functools.partial(jax.jit, static_argnames=("bits", "segments"))
+        def stats(codes_raw, absmax, qmap, *, bits, segments):
+            if mesh_local is not None:
+                from repro.sharding import rules
+                codes_raw, absmax = rules.replicate_for_scales(
+                    mesh_local, (codes_raw, absmax))
+            codes = unpack_codes(codes_raw, bits).astype(jnp.uint8)
+            return (_segment_stats(codes.astype(jnp.int32), qmap, absmax,
+                                   segments), codes)
+
+        self._stats = stats
+
+        # All segments' round-trip RMS in ONE dispatch: a probe that issued
+        # one tiny jitted call per segment would cost more in dispatch
+        # overhead than the train step itself (the 1.05x overhead gate in
+        # bench_telemetry_overhead pins this).
+        @jax.jit
+        def rms_many(blocks_tuple, qmap):
+            return jnp.stack([_roundtrip_rms(b, qmap)
+                              for b in blocks_tuple])
+
+        self._rms_many = rms_many
+
+    # ----------------------------------------------------------- internals
+    def _drift(self, key: tuple, mean: float) -> float:
+        """Current/EMA absmax ratio; the EMA updates after the read, so the
+        first probe reports drift 1.0 and later probes measure movement
+        against the trailing baseline."""
+        ema = self._ema.get(key)
+        drift = 1.0 if not ema else mean / ema
+        d = self.ema_decay
+        self._ema[key] = mean if ema is None else d * ema + (1 - d) * mean
+        return drift
+
+    def _slot_events(self, target, slot, codes, absmax, segs, step,
+                     masters=None):
+        """qhealth events for one state slot of one arena/leaf.  ``segs``
+        is ((path, offset, n_blocks, n), ...); ``masters`` optionally maps
+        path -> f32 blocks for the round-trip RMS sample."""
+        qmap = self._qmaps[slot]
+        bits = self._bits[slot]
+        raw, rbits, _ = unwrap_codes(codes)
+        bits = rbits if rbits is not None else bits
+        n_bins = int(qmap.shape[-1])
+        static = tuple((off, nb, n) for _, off, nb, n in segs)
+        # one device round-trip for this slot's stats + unpacked codes
+        (sat, frac, amean), codes_u8 = jax.device_get(self._stats(
+            raw, absmax, qmap, bits=bits, segments=static))
+        hist = _segment_hists(codes_u8, static, n_bins)
+        rms = {}
+        if masters is not None and slot == "m":
+            paths = [p for p, _, _, _ in segs if p in masters]
+            if paths:
+                blocks = tuple(masters[p][:self.sample_blocks]
+                               for p in paths)
+                vals = np.asarray(self._rms_many(blocks, qmap))
+                rms = {p: (float(v), int(b.shape[0]))
+                       for p, v, b in zip(paths, vals, blocks)}
+        events = []
+        for i, (path, off, nb, n) in enumerate(segs):
+            mean = float(amean[i])
+            ev = {
+                "kind": "qhealth", "step": int(step),
+                "target": target, "segment": path, "slot": slot,
+                "bits": int(bits), "n_bins": n_bins,
+                "n_blocks": int(nb),
+                "saturation_fraction": float(sat[i]),
+                "edge_code_fraction": float(frac[i]),
+                "util_hist": hist[i].tolist(),
+                "util_fraction": float(np.mean(hist[i] > 0)),
+                "absmax_mean": mean,
+                "absmax_drift": self._drift((target, path, slot), mean),
+            }
+            if path in rms:
+                ev["rms_error"], ev["rms_sample_blocks"] = rms[path]
+            events.append(ev)
+        return events
+
+    def _master_blocks(self, leaf) -> Optional[Any]:
+        """Leaf master as f32 blocks, if the leaf carries one."""
+        if isinstance(leaf, Quant8Leaf):
+            return leaf.master
+        if isinstance(leaf, PooledQuantLeaf):
+            bsz = self.opt.cfg.block_size
+            flat = leaf.master.reshape(-1).astype(jnp.float32)
+            pad = leaf.n_blocks * bsz - flat.shape[0]
+            return jnp.pad(flat, (0, pad)).reshape(leaf.n_blocks, bsz)
+        return None
+
+    # -------------------------------------------------------------- probe
+    def probe(self, state, step: int = -1) -> List[dict]:
+        """Health events for every quantized segment of ``state`` (a
+        Block8bitOptimizer ``OptState``): the pooled arena's segments plus
+        every per-leaf Quant8Leaf (muon matrix leaves / unpooled layout).
+        """
+        events: List[dict] = []
+        leaves = jax.tree_util.tree_flatten_with_path(
+            state.leaves,
+            is_leaf=lambda x: isinstance(
+                x, (Quant8Leaf, Full32Leaf, PooledQuantLeaf, Pool32Leaf))
+        )[0]
+
+        arena = getattr(state, "arena", None)
+        if arena is not None:
+            masters = {}
+            for path, leaf in leaves:
+                if isinstance(leaf, PooledQuantLeaf):
+                    blocks = self._master_blocks(leaf)
+                    if blocks is not None:
+                        masters[path_str(path)] = blocks
+            segs = tuple((s.path, s.offset, s.n_blocks, s.n)
+                         for s in arena.segments)
+            if segs:
+                events += self._slot_events("arena", "m", arena.codes_m,
+                                            arena.absmax_m, segs, step,
+                                            masters)
+                if arena.codes_r is not None:
+                    events += self._slot_events("arena", "r", arena.codes_r,
+                                                arena.absmax_r, segs, step)
+
+        for path, leaf in leaves:
+            if not isinstance(leaf, Quant8Leaf):
+                continue
+            p = path_str(path)
+            segs = ((p, 0, int(leaf.absmax_m.shape[0]), leaf.n),)
+            masters = {p: self._master_blocks(leaf)}
+            events += self._slot_events("leaf", "m", leaf.codes_m,
+                                        leaf.absmax_m, segs, step, masters)
+            if leaf.codes_r is not None:
+                events += self._slot_events("leaf", "r", leaf.codes_r,
+                                            leaf.absmax_r, segs, step)
+        return events

@@ -1,0 +1,190 @@
+"""Typed metric registry (DESIGN.md §14).
+
+Metrics are *named and typed* — a name is registered once as a counter,
+gauge or histogram, and re-registering it as a different type is an error
+(the failure mode of ad-hoc metric dicts: the same key meaning different
+things in different call sites).  The registry is host-side state: values
+are plain Python/numpy scalars, and emission to sinks happens explicitly
+(``record_scalars`` per step, or ``flush`` for a point-in-time snapshot),
+so nothing here ever touches a jitted computation.
+
+    reg = MetricRegistry(step_offset_sink...)
+    reg.add_sink(JsonlSink(path))
+    reg.counter("serve/requests").inc()
+    reg.gauge("train/loss").set(2.3)
+    reg.histogram("qhealth/util", n_bins=256).observe_counts(counts)
+    reg.flush(step=7)           # one "metric" event per registered metric
+
+``record_scalars(step, mapping)`` is the train-loop adapter: every entry
+of the step's metric dict becomes a gauge sample (created on first use),
+emitted immediately — the existing ``train/loop.py`` metrics
+(``loss``, ``pclip_scale``, ``opt_fused_dispatches``, ...) route through
+it unchanged.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import numpy as np
+
+from repro.telemetry.export import SCHEMA
+
+
+def _scalar(v: Any) -> float:
+    """Host float from a python/numpy/jax scalar (no-op for floats)."""
+    return float(np.asarray(v))
+
+
+class Counter:
+    """Monotonically increasing count (requests, tokens, events)."""
+
+    mtype = "counter"
+
+    def __init__(self, name: str):
+        self.name = name
+        self.value = 0
+
+    def inc(self, n: int = 1) -> int:
+        assert n >= 0, f"counter {self.name} cannot decrease (got {n})"
+        self.value += int(n)
+        return self.value
+
+
+class Gauge:
+    """Last-value metric (loss, bytes/param, saturation fraction)."""
+
+    mtype = "gauge"
+
+    def __init__(self, name: str):
+        self.name = name
+        self.value: Optional[float] = None
+
+    def set(self, v: Any) -> float:
+        self.value = _scalar(v)
+        return self.value
+
+
+class Histogram:
+    """Binned counts (codebook utilization).  The repo's histograms arrive
+    *pre-binned* (``jnp.bincount`` on device), so the API takes counts
+    directly instead of streaming observations."""
+
+    mtype = "histogram"
+
+    def __init__(self, name: str, n_bins: int):
+        self.name = name
+        self.n_bins = int(n_bins)
+        self.value = np.zeros((self.n_bins,), np.int64)
+
+    def observe_counts(self, counts: Any) -> np.ndarray:
+        c = np.asarray(counts, np.int64).reshape(-1)
+        assert c.shape[0] == self.n_bins, (self.name, c.shape, self.n_bins)
+        self.value = c
+        return self.value
+
+
+class MetricRegistry:
+    """Named, typed metrics plus the sinks they emit to."""
+
+    def __init__(self):
+        self._metrics: Dict[str, Any] = {}
+        self._sinks: list = []
+
+    # ------------------------------------------------------------- metrics
+    def _get(self, name: str, cls, *args):
+        m = self._metrics.get(name)
+        if m is None:
+            m = cls(name, *args)
+            self._metrics[name] = m
+        elif not isinstance(m, cls):
+            raise TypeError(f"metric {name!r} is a {m.mtype}, not a "
+                            f"{cls.mtype}")
+        return m
+
+    def counter(self, name: str) -> Counter:
+        return self._get(name, Counter)
+
+    def gauge(self, name: str) -> Gauge:
+        return self._get(name, Gauge)
+
+    def histogram(self, name: str, n_bins: int) -> Histogram:
+        h = self._get(name, Histogram, n_bins)
+        if h.n_bins != int(n_bins):
+            raise TypeError(f"histogram {name!r} has {h.n_bins} bins, "
+                            f"not {n_bins}")
+        return h
+
+    def metrics(self) -> dict:
+        """Snapshot {name: current value} (histograms as lists)."""
+        out = {}
+        for name, m in self._metrics.items():
+            v = m.value
+            out[name] = v.tolist() if isinstance(v, np.ndarray) else v
+        return out
+
+    def get(self, name: str):
+        """Current value of ``name`` (None if never set/registered)."""
+        m = self._metrics.get(name)
+        if m is None:
+            return None
+        v = m.value
+        return v.tolist() if isinstance(v, np.ndarray) else v
+
+    # --------------------------------------------------------------- sinks
+    def add_sink(self, sink) -> None:
+        self._sinks.append(sink)
+
+    def emit_event(self, event: dict) -> None:
+        """Stamp the schema version and write to every sink."""
+        event = dict(event)
+        event.setdefault("schema", SCHEMA)
+        event.setdefault("step", -1)
+        for s in self._sinks:
+            s.write(event)
+
+    def _metric_event(self, m, step: int) -> dict:
+        v = m.value
+        if isinstance(v, np.ndarray):
+            v = v.tolist()
+        ev = {"kind": "metric", "step": int(step), "name": m.name,
+              "type": m.mtype, "value": v}
+        if isinstance(m, Histogram):
+            ev["n_bins"] = m.n_bins
+        return ev
+
+    def flush(self, step: int = -1) -> None:
+        """Emit one "metric" event per registered metric (current values)
+        and flush the sinks."""
+        for m in self._metrics.values():
+            if m.value is None:
+                continue
+            self.emit_event(self._metric_event(m, step))
+        for s in self._sinks:
+            s.flush()
+
+    def record_scalars(self, step: int, mapping: dict,
+                       prefix: str = "") -> None:
+        """Route one step's scalar metric dict through gauges and emit
+        each immediately — the ``train/loop.py`` metrics adapter.  Values
+        may be python/numpy/jax scalars (converted on the host; the train
+        loop already syncs them for logging, so this adds no new device
+        round-trip)."""
+        mapping = dict(mapping)
+        try:                      # one bulk transfer instead of one per
+            import jax            # metric; registry itself stays jax-free
+            mapping = jax.device_get(mapping)
+        except ImportError:
+            pass
+        for name, v in mapping.items():
+            a = np.asarray(v)
+            if a.ndim != 0:
+                continue            # scalar metrics only
+            g = self.gauge(prefix + name)
+            g.set(a)
+            self.emit_event(self._metric_event(g, step))
+        for s in self._sinks:
+            s.flush()
+
+    def close(self) -> None:
+        for s in self._sinks:
+            s.close()

@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models import model as M
+from repro.telemetry import tracing as _tracing
 
 Pytree = Any
 
@@ -197,23 +198,25 @@ def make_train_step(cfg, optimizer, hyper: TrainHyper = TrainHyper(),
         if param_shardings is not None:
             params = jax.tree_util.tree_map(
                 jax.lax.with_sharding_constraint, params, param_shardings)
-        if shard_grads:
-            loss, mx, grads = compute_grad_buffer(params, batch,
-                                                  state.opt_state)
-            # same clip formula as clip_by_global_norm, with the norm
-            # taken from the buffer (bit-identical per-leaf reductions)
-            gnorm = optimizer.grad_buffer_norm(grads)
-            scale = jnp.minimum(1.0, hyper.grad_clip /
-                                jnp.maximum(gnorm, 1e-12))
-            grads = jax.tree_util.tree_map(lambda x: x * scale, grads)
-        else:
-            loss, mx, grads = compute_grads(params, batch)
-            grads, gnorm = clip_by_global_norm(grads, hyper.grad_clip)
+        with _tracing.annotate("forward_backward"):
+            if shard_grads:
+                loss, mx, grads = compute_grad_buffer(params, batch,
+                                                      state.opt_state)
+                # same clip formula as clip_by_global_norm, with the norm
+                # taken from the buffer (bit-identical per-leaf reductions)
+                gnorm = optimizer.grad_buffer_norm(grads)
+                scale = jnp.minimum(1.0, hyper.grad_clip /
+                                    jnp.maximum(gnorm, 1e-12))
+                grads = jax.tree_util.tree_map(lambda x: x * scale, grads)
+            else:
+                loss, mx, grads = compute_grads(params, batch)
+                grads, gnorm = clip_by_global_norm(grads, hyper.grad_clip)
         lr = hyper.lr_schedule(state.step) if hyper.lr_schedule else None
         from repro.kernels import ops as kops
         dispatch0 = kops.fused_update_count()
-        _, new_opt = optimizer.apply(grads, state.opt_state, lr=lr,
-                                     param_dtype=param_dtype, **defer_kw)
+        with _tracing.annotate("optimizer_update"):
+            _, new_opt = optimizer.apply(grads, state.opt_state, lr=lr,
+                                         param_dtype=param_dtype, **defer_kw)
         metrics = {"loss": loss, "grad_norm": gnorm, **mx}
         # Counted at trace time => a constant under jit: how many fused
         # optimizer dispatches the compiled step bakes in.  1 per state-
