@@ -1,0 +1,51 @@
+"""Static-analysis suite for the benchmark harness (DESIGN.md §15).
+
+Records the Pallas VMEM budget table (per-kernel tile bytes + headroom
+against the TPU budget) into BENCH_speed.json so headroom regressions
+show up in the same trajectory file as the timing sweeps, and runs the
+kernel-budget audit as a pass/fail leg.  The heavier compile-contract
+matrix stays in ``python -m repro.analysis`` (the CI gate); this suite
+is the artifact-producing slice.
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import append_bench_json, emit
+from benchmarks.bench_speed import BENCH_JSON
+
+
+def main(smoke: bool = False):
+    from repro.analysis import kernel_budget as kb
+
+    table = kb.budget_table()
+    worst = min((row for row in table if row["fits"]),
+                key=lambda r: r["headroom_bytes"])
+    emit("analyze/vmem_rows", 0.0, f"{len(table)}rows")
+    emit("analyze/vmem_min_headroom_bytes",
+         float(worst["headroom_bytes"]),
+         f"{worst['kernel']}")
+    emit("analyze/ns_max_m", float(kb.ns_max_m()), "vmem-resident NS dim")
+
+    results = kb.audit()
+    bad = [r for r in results if not r[1]]
+    emit("analyze/kernel_budget_failures", float(len(bad)),
+         "PASS" if not bad else "; ".join(n for n, _, _ in bad))
+
+    path = append_bench_json(BENCH_JSON, {
+        "bench": "kernel_budget",
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "smoke": smoke,
+        "budget_bytes": kb.VMEM_BUDGET_BYTES[kb.DEFAULT_BACKEND],
+        "ns_max_m": kb.ns_max_m(),
+        "min_headroom_bytes": worst["headroom_bytes"],
+        "table": table,
+    })
+    emit("analyze/json", 0.0, path)
+    if bad:
+        raise SystemExit(f"kernel budget audit failed: "
+                         f"{[n for n, _, _ in bad]}")
+
+
+if __name__ == "__main__":
+    main()

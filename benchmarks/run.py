@@ -26,6 +26,9 @@ SUITES = {
                      "ZeRO-2 (DESIGN.md §13)"),
     "telemetry": ("benchmarks.bench_telemetry",
                   "Telemetry JSONL + qhealth probe smoke (DESIGN.md §14)"),
+    "analyze": ("benchmarks.bench_analyze",
+                "Static VMEM budget table -> BENCH_speed.json "
+                "(DESIGN.md §15)"),
 }
 
 # Suites a --smoke run exercises (fast enough for CI, covers the kernels).
@@ -56,6 +59,11 @@ def main() -> None:
                          "exposed ms + ZeRO-2 peak grad bytes on a "
                          "4-device host mesh, even under --smoke; "
                          "DESIGN.md §13)")
+    ap.add_argument("--analyze", action="store_true",
+                    help="also run the static-analysis suite: the Pallas "
+                         "VMEM budget table recorded to BENCH_speed.json "
+                         "(headroom per kernel config), even under "
+                         "--smoke (DESIGN.md §15)")
     ap.add_argument("--telemetry", action="store_true",
                     help="also run the telemetry legs: the JSONL/qhealth "
                          "smoke suite (schema-validated probe artifact, "
@@ -73,6 +81,8 @@ def main() -> None:
         names.append("step_overlap")
     if args.telemetry and "telemetry" not in names:
         names.append("telemetry")
+    if args.analyze and "analyze" not in names:
+        names.append("analyze")
     print("name,us_per_call,derived")
     for n in names:
         mod_name, desc = SUITES[n]

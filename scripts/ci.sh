@@ -5,6 +5,17 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
+# --analyze: the static-analysis gate only (DESIGN.md §15) — compile
+# contracts over the config matrix, the Pallas VMEM/grid budget audit,
+# and the repo lint baseline.  Runs as its own blocking CI job; no
+# training step executes, so it needs no install beyond the base deps.
+if [[ "${1:-}" == "--analyze" ]]; then
+  python -m pip install -e .
+  PYTHONPATH=src python -m repro.analysis
+  PYTHONPATH=src python -m benchmarks.run --only analyze --analyze
+  exit 0
+fi
+
 python -m pip install -e '.[test]'
 
 # Tier-1 tests with a coverage gate (floor set conservatively below the

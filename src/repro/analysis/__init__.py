@@ -1,0 +1,28 @@
+"""Static-analysis subsystem (DESIGN.md §15): compile-contract auditors,
+the Pallas VMEM/grid resource analyzer, and the repo lint gate.
+
+Three auditors, one CLI (``python -m repro.analysis``, a blocking CI leg):
+
+  * :mod:`repro.analysis.contracts` — declarative invariant checks over
+    ``jax.jit(...).lower(...)`` StableHLO text (donation aliasing, dtype
+    bans, f32 accumulation, collective ordering, replication pins, and
+    knob-invariant lowering), registered next to the code they protect
+    and evaluated over a config matrix without running a training step.
+  * :mod:`repro.analysis.kernel_budget` — per-tile VMEM byte model derived
+    from the kernels' BlockSpec/grid layouts, checked against a
+    per-backend budget, plus grid alignment vs ArenaPartition/BucketPlan.
+  * :mod:`repro.analysis.lint` — AST rules encoding repo conventions
+    (no bare assert on user-reachable paths, no host syncs in jit, no
+    trace-time env reads, no duplicate imports) with a burn-down baseline.
+
+This ``__init__`` stays import-light on purpose: production modules
+(kernels/ops.py, train/loop.py, sharding/rules.py) import
+``repro.analysis.contracts`` / ``.mutations`` at module level to register
+their contracts, so nothing here may pull in jax or the heavy subsystems.
+``runner`` / ``kernel_budget`` / ``lint`` are imported explicitly by the
+CLI and tests.
+"""
+from repro.analysis import contracts, dtypes, mutations
+from repro.analysis.dtypes import DTYPE_BYTES, dtype_bytes
+
+__all__ = ["contracts", "dtypes", "mutations", "DTYPE_BYTES", "dtype_bytes"]

@@ -1,0 +1,89 @@
+"""CLI for the static-analysis gate: ``python -m repro.analysis``.
+
+Subcommands (default: all three, any failure exits non-zero):
+
+  contracts   evaluate registered compile contracts over the config matrix
+  kernels     Pallas VMEM budget + grid-alignment audit
+  lint        AST lint gate against the committed baseline
+              (``--write-baseline`` rewrites it)
+
+The contract matrix includes 4-way partitioned cells, so the CLI forces
+4 host platform devices before jax is imported — run it as a module, not
+via an already-jax-initialized interpreter.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+# Must happen before any jax import (runner lowers on a 4-device mesh).
+if "jax" not in sys.modules:
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            flags + " --xla_force_host_platform_device_count=4").strip()
+
+
+def _run_contracts(args) -> int:
+    from repro.analysis import runner
+    from repro.analysis.contracts import AnalysisError
+    try:
+        results = runner.run_contracts(allow_skips=args.allow_skips)
+    except AnalysisError as e:
+        print(f"contracts: {e}")
+        return 1
+    bad = runner.failures(results)
+    print(f"contracts: {len(results) - len(bad)}/{len(results)} passed")
+    return 1 if bad else 0
+
+
+def _run_kernels(args) -> int:
+    del args
+    from repro.analysis import kernel_budget
+    results = kernel_budget.audit()
+    bad = [r for r in results if not r[1]]
+    for name, ok, detail in results:
+        print(f"[{'PASS' if ok else 'FAIL'}] {name} — {detail}")
+    print(f"kernels: {len(results) - len(bad)}/{len(results)} passed")
+    return 1 if bad else 0
+
+
+def _run_lint(args) -> int:
+    from repro.analysis import lint
+    root = args.root or os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    ok, lines = lint.run(root, update_baseline=args.write_baseline)
+    for ln in lines:
+        print(ln)
+    return 0 if ok else 1
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="compile contracts + kernel budgets + repo lint")
+    ap.add_argument("what", nargs="?", default="all",
+                    choices=("all", "contracts", "kernels", "lint"))
+    ap.add_argument("--allow-skips", action="store_true",
+                    help="tolerate matrix cells skipped for lack of devices")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="lint: rewrite the baseline instead of checking")
+    ap.add_argument("--root", default=None,
+                    help="lint: tree to lint (default: the repro package)")
+    args = ap.parse_args(argv)
+
+    legs = {"contracts": _run_contracts, "kernels": _run_kernels,
+            "lint": _run_lint}
+    picked = legs.items() if args.what == "all" else \
+        [(args.what, legs[args.what])]
+    rc = 0
+    for name, fn in picked:
+        print(f"=== {name} ===")
+        rc |= fn(args)
+    print("ANALYSIS " + ("PASS" if rc == 0 else "FAIL"))
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,40 @@
+"""The one HLO/StableHLO dtype-size table (DESIGN.md §15).
+
+Three consumers previously carried private copies that had already drifted
+(``roofline/analysis.py`` was missing the 4-bit and most f8 entries its
+sibling ``roofline/hlo_cost.py`` had): the HLO cost model, the roofline
+collective parser, and now the Pallas VMEM analyzer.  All three import
+this table; tests/test_analysis.py pins that they stay the same object.
+
+Keys are the dtype names as they appear in HLO/StableHLO shape strings
+(``f32[8,128]`` / ``tensor<8x128xf32>``).  Sub-byte types (s4/u4) round up
+to one byte — that is how XLA stores them in HBM buffers today, and the
+conservative choice for a *budget* model.  Packed sub-byte optimizer
+states (DESIGN.md §9) do NOT go through this table: they are uint8 words
+whose per-parameter cost is ``bits/8`` by construction
+(``core.lowbit.packing.packed_width``).
+"""
+from __future__ import annotations
+
+DTYPE_BYTES: dict[str, int] = {
+    "pred": 1,
+    "s4": 1, "u4": 1,
+    "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8,
+    "f16": 2, "bf16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1, "f8e5m2fnuz": 1,
+    "f8e4m3fnuz": 1,
+}
+
+
+def dtype_bytes(name: str) -> int:
+    """Bytes per element of HLO dtype ``name``; raises KeyError with the
+    known names listed (a new XLA dtype should be added here, once)."""
+    try:
+        return DTYPE_BYTES[name]
+    except KeyError:
+        raise KeyError(f"unknown HLO dtype {name!r}; known: "
+                       f"{sorted(DTYPE_BYTES)}") from None

@@ -1,0 +1,224 @@
+"""Repo lint gate: AST rules encoding repo conventions (DESIGN.md §15c).
+
+Four rules, each encoding a convention the repo learned the hard way:
+
+  * ``bare-assert`` — ``assert`` statements in library code.  Asserts
+    vanish under ``python -O`` (serve/engine.py already documents this),
+    so user-reachable validation must raise typed exceptions
+    (:mod:`repro.errors`).  Internal kernel-invariant asserts are being
+    burned down via the baseline.
+  * ``host-sync-in-jit`` — ``.item()`` / ``jax.device_get`` inside a
+    jit-decorated function: a silent device->host sync that serializes
+    the step (the §14 telemetry work exists precisely to avoid these).
+  * ``env-read-at-trace`` — ``os.environ`` / ``os.getenv`` inside a
+    function body: config must be read at import or passed explicitly;
+    a trace-time env read bakes the value into the compiled step
+    invisibly (the sanctioned pattern is a module-level flag like
+    ``tracing._PHASE_TRACING``).
+  * ``duplicate-import`` — the same module imported twice in one file.
+
+Violations are compared against a committed baseline
+(``lint_baseline.json``: per (file, rule) counts).  New violations fail;
+existing ones burn down — shrinking a count below baseline auto-shrinks
+the baseline on the next ``--write-baseline``.  Stdlib-only on purpose.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+import os
+
+BASELINE_FILE = os.path.join(os.path.dirname(__file__),
+                             "lint_baseline.json")
+RULES = ("bare-assert", "host-sync-in-jit", "env-read-at-trace",
+         "duplicate-import")
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    file: str
+    line: int
+    rule: str
+    msg: str
+
+    def __str__(self):
+        return f"{self.file}:{self.line}: [{self.rule}] {self.msg}"
+
+
+def _decorator_names(fn: ast.AST) -> list:
+    """Dotted-name text of each decorator (partial(jax.jit, ...) included)."""
+    out = []
+    for d in getattr(fn, "decorator_list", []):
+        for node in ast.walk(d):
+            if isinstance(node, ast.Attribute):
+                out.append(node.attr)
+            elif isinstance(node, ast.Name):
+                out.append(node.id)
+    return out
+
+
+def _is_jitted(fn: ast.AST) -> bool:
+    return any(n in ("jit", "pjit") for n in _decorator_names(fn))
+
+
+def _dotted(node: ast.AST) -> str:
+    """'jax.device_get' for an Attribute/Name chain, '' otherwise."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def _check_file(path: str, rel: str) -> list:
+    with open(path, encoding="utf-8") as f:
+        src = f.read()
+    tree = ast.parse(src, filename=path)
+    out = []
+
+    # bare-assert: every assert statement in library code
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assert):
+            out.append(Violation(rel, node.lineno, "bare-assert",
+                                 "assert vanishes under -O; raise a typed "
+                                 "exception (repro.errors) instead"))
+
+    # host-sync-in-jit: .item() / jax.device_get inside jit-decorated fns
+    for fn in ast.walk(tree):
+        if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        if not _is_jitted(fn):
+            continue
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            dn = _dotted(node.func)
+            # .item() on any expression (x.item(), x.sum().item(), ...):
+            # _dotted can't name a chain rooted in a call, so match the
+            # attribute itself.
+            is_item = (isinstance(node.func, ast.Attribute)
+                       and node.func.attr == "item")
+            if is_item or dn in ("jax.device_get", "device_get"):
+                out.append(Violation(
+                    rel, node.lineno, "host-sync-in-jit",
+                    f"{dn or '.item'}() inside jit-decorated {fn.name}() "
+                    f"forces a device->host sync at trace/run time"))
+
+    # env-read-at-trace: os.environ/os.getenv inside any function body
+    for fn in ast.walk(tree):
+        if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        for node in ast.walk(fn):
+            dn = ""
+            if isinstance(node, ast.Call):
+                dn = _dotted(node.func)
+            elif isinstance(node, ast.Attribute):
+                dn = _dotted(node)
+            if dn in ("os.getenv", "os.environ"):
+                out.append(Violation(
+                    rel, node.lineno, "env-read-at-trace",
+                    f"{dn} read inside {fn.name}(): read config at import "
+                    f"(module-level flag) or pass it explicitly"))
+
+    # duplicate-import: same module bound twice at module level
+    seen: dict = {}
+    for node in tree.body:
+        names = []
+        if isinstance(node, ast.Import):
+            names = [(a.name, a.asname or a.name) for a in node.names]
+        elif isinstance(node, ast.ImportFrom):
+            mod = "." * node.level + (node.module or "")
+            names = [(f"{mod}:{a.name}", a.asname or a.name)
+                     for a in node.names]
+        for key, _ in names:
+            if key in seen:
+                out.append(Violation(
+                    rel, node.lineno, "duplicate-import",
+                    f"{key} already imported at line {seen[key]}"))
+            else:
+                seen[key] = node.lineno
+    return out
+
+
+def lint_paths(root: str) -> list:
+    """Lint every .py file under ``root`` (the src/repro tree)."""
+    out = []
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames[:] = sorted(d for d in dirnames
+                             if d not in ("__pycache__",))
+        for fn in sorted(filenames):
+            if not fn.endswith(".py"):
+                continue
+            path = os.path.join(dirpath, fn)
+            rel = os.path.relpath(path, root).replace(os.sep, "/")
+            out.extend(_check_file(path, rel))
+    return sorted(out, key=lambda v: (v.file, v.line, v.rule))
+
+
+def counts(violations: list) -> dict:
+    """Per ``"file::rule"`` violation counts (the baseline unit)."""
+    out: dict = {}
+    for v in violations:
+        key = f"{v.file}::{v.rule}"
+        out[key] = out.get(key, 0) + 1
+    return out
+
+
+def load_baseline(path: str = BASELINE_FILE) -> dict:
+    if not os.path.exists(path):
+        return {}
+    with open(path, encoding="utf-8") as f:
+        return json.load(f)
+
+
+def write_baseline(violations: list, path: str = BASELINE_FILE) -> dict:
+    c = counts(violations)
+    with open(path, "w", encoding="utf-8") as f:
+        json.dump(c, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return c
+
+
+def compare(violations: list, baseline: dict) -> tuple:
+    """(new, fixed): violations beyond the per-(file, rule) baseline
+    count, and baseline entries whose count shrank (candidates for a
+    ``--write-baseline`` refresh)."""
+    cur = counts(violations)
+    new = {k: (n, baseline.get(k, 0)) for k, n in cur.items()
+           if n > baseline.get(k, 0)}
+    fixed = {k: (cur.get(k, 0), n) for k, n in baseline.items()
+             if cur.get(k, 0) < n}
+    return new, fixed
+
+
+def run(root: str, *, baseline_path: str = BASELINE_FILE,
+        update_baseline: bool = False) -> tuple:
+    """Full lint gate: returns (ok, report_lines)."""
+    violations = lint_paths(root)
+    if update_baseline:
+        c = write_baseline(violations, baseline_path)
+        return True, [f"baseline rewritten: {sum(c.values())} violation(s) "
+                      f"across {len(c)} (file, rule) pair(s)"]
+    baseline = load_baseline(baseline_path)
+    new, fixed = compare(violations, baseline)
+    lines = []
+    if new:
+        by_key = {}
+        for v in violations:
+            by_key.setdefault(f"{v.file}::{v.rule}", []).append(v)
+        for k, (n, base) in sorted(new.items()):
+            lines.append(f"NEW {k}: {n} violation(s), baseline {base}")
+            for v in by_key[k]:
+                lines.append(f"  {v}")
+    if fixed:
+        for k, (n, base) in sorted(fixed.items()):
+            lines.append(f"improved {k}: {n} (baseline {base}) — run "
+                         f"--write-baseline to ratchet down")
+    lines.append(f"{len(violations)} violation(s) total, baseline "
+                 f"{sum(baseline.values())}, {len(new)} regressing "
+                 f"(file, rule) pair(s)")
+    return not new, lines

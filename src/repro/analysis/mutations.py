@@ -1,0 +1,46 @@
+"""Test-only mutation toggles for the contract auditors (DESIGN.md §15).
+
+An auditor that cannot fail is decoration, so tests/test_analysis.py
+seeds one deliberate violation per contract class and asserts the
+matching auditor fires.  The violations live *in the production code
+paths* behind these toggles — e.g. ``kernels/ops.py`` promotes the
+fused-update gradient to f64 under ``promote_f64``, and
+``sharding/rules.py`` drops the §12 replication pin under
+``drop_replication_pin`` — because a violation grafted into test-only
+code would not prove the auditors watch the real dispatch.
+
+Every toggle is read at *trace time* only (the sanctioned trace-time
+flag pattern, like ``tracing._PHASE_TRACING``): flipping one never
+changes an already-compiled executable, and with every toggle off (the
+only production state) the guarded branches are dead code.
+
+    with mutations.seeded("promote_f64"):
+        lowered = jax.jit(step).lower(...)   # now violates no_dtype(f64)
+"""
+from __future__ import annotations
+
+import contextlib
+
+KNOWN = (
+    "promote_f64",          # ops.fused_update: g -> f64 (needs x64 mode)
+    "drop_replication_pin",  # rules.replicate_for_scales: identity
+)
+
+_ACTIVE: set = set()
+
+
+def active(name: str) -> bool:
+    """Whether mutation ``name`` is currently seeded (trace-time read)."""
+    return name in _ACTIVE
+
+
+@contextlib.contextmanager
+def seeded(name: str):
+    """Seed mutation ``name`` for the duration of the block (tests only)."""
+    if name not in KNOWN:
+        raise ValueError(f"unknown mutation {name!r}; known: {KNOWN}")
+    _ACTIVE.add(name)
+    try:
+        yield
+    finally:
+        _ACTIVE.discard(name)

@@ -18,6 +18,7 @@ import numpy as np
 
 from repro.core import qmap as qmap_lib
 from repro.core.lowbit.packing import SUPPORTED_BITS, PackedCodes
+from repro.errors import FormatError
 
 
 @dataclasses.dataclass(frozen=True)
@@ -29,7 +30,9 @@ class CodeFormat:
     qmap_name: str = "dynamic"
 
     def __post_init__(self):
-        assert self.bits in SUPPORTED_BITS, self.bits
+        if self.bits not in SUPPORTED_BITS:
+            raise FormatError(f"bits={self.bits} unsupported; choose from "
+                              f"{SUPPORTED_BITS}")
 
     @property
     def n_levels(self) -> int:

@@ -23,13 +23,19 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
+from repro.errors import FormatError
+
 SUPPORTED_BITS = (4, 5, 6, 8)
 
 
 def packed_width(n_codes: int, bits: int) -> int:
     """Bytes per row of ``n_codes`` b-bit codes (exact, no slack)."""
-    assert bits in SUPPORTED_BITS, bits
-    assert (n_codes * bits) % 8 == 0, (n_codes, bits)
+    if bits not in SUPPORTED_BITS:
+        raise FormatError(f"bits={bits} unsupported; choose from "
+                          f"{SUPPORTED_BITS}")
+    if (n_codes * bits) % 8 != 0:
+        raise FormatError(f"{n_codes} codes of {bits} bits do not fill "
+                          f"whole bytes")
     return (n_codes * bits) // 8
 
 
@@ -53,7 +59,9 @@ def unpack_codes(packed: jax.Array, bits: int) -> jax.Array:
     """(..., W) uint8 words -> (..., W*8/bits) int32 codes in [0, 2^bits)."""
     if bits == 8:
         return packed.astype(jnp.int32)
-    assert bits in SUPPORTED_BITS, bits
+    if bits not in SUPPORTED_BITS:
+        raise FormatError(f"bits={bits} unsupported; choose from "
+                          f"{SUPPORTED_BITS}")
     *lead, w = packed.shape
     n = (w * 8) // bits
     b = packed.astype(jnp.int32)

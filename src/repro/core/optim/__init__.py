@@ -27,6 +27,7 @@ from repro.core.optim.base import (ALGOS, ArenaPartition, FlatSegment,
 from repro.core.optim.blockopt import (Block8bitOptimizer, OptState,
                                        repool_like, unpool_state)
 from repro.core.optim.muon import MuonOptimizer
+from repro.errors import ConfigError
 
 # name: (algo, bits) — every registered algorithm gets an "<algo>8" and an
 # "<algo>32" name, so new algorithms are CLI-runnable without extra wiring.
@@ -42,7 +43,9 @@ def _from_config(cfg, override_32bit=None, mesh=None):
     """Config object -> engine instance (the one dispatch point)."""
     if isinstance(cfg, AdafactorConfig):
         return Adafactor(cfg)
-    assert isinstance(cfg, OptimConfig), type(cfg)
+    if not isinstance(cfg, OptimConfig):
+        raise ConfigError(f"expected OptimConfig or AdafactorConfig, got "
+                          f"{type(cfg).__name__}")
     if cfg.algo == "muon":
         return MuonOptimizer(cfg, override_32bit=override_32bit, mesh=mesh)
     return Block8bitOptimizer(cfg, override_32bit=override_32bit, mesh=mesh)

@@ -75,6 +75,7 @@ from repro.core.optim.base import (ArenaPartition, FlatSegment, Full32Leaf,
                                    QuantSegment, blocks_to_param,
                                    flatten_to_blocks, make_buckets,
                                    make_partition, path_str)
+from repro.errors import ConfigError, FormatError
 from repro.models.constrain import constrain as _constrain
 from repro.telemetry import tracing as _tracing
 from repro.kernels import fused_update as kfu
@@ -421,8 +422,9 @@ class Block8bitOptimizer:
         (owned-span sharded on a partition mesh), everything else as
         param-shaped ride-along zeros."""
         cfg = self.cfg
-        assert cfg.pooling_active, \
-            "GradBuffer accumulation needs the pooled arena layout"
+        if not cfg.pooling_active:
+            raise ConfigError(
+                "GradBuffer accumulation needs the pooled arena layout")
         layout = self._grad_layout(state)
         blocks = None
         part = None
@@ -450,7 +452,9 @@ class Block8bitOptimizer:
         accumulating in param shape and flattening once (DESIGN.md §13)."""
         cfg = self.cfg
         gl = jax.tree_util.tree_leaves(grads)
-        assert len(gl) == len(buf.layout), (len(gl), len(buf.layout))
+        if len(gl) != len(buf.layout):
+            raise FormatError(f"gradient tree has {len(gl)} leaves but the "
+                              f"GradBuffer layout has {len(buf.layout)}")
         gbs = []
         ride = list(buf.ride)
         for g, e in zip(gl, buf.layout):
@@ -1008,9 +1012,9 @@ class Block8bitOptimizer:
         this step's tail.
         """
         cfg = self.cfg
-        if isinstance(grads, GradBuffer):
-            assert cfg.pooling_active, \
-                "GradBuffer input requires the pooled layout (shard_grads)"
+        if isinstance(grads, GradBuffer) and not cfg.pooling_active:
+            raise ConfigError(
+                "GradBuffer input requires the pooled layout (shard_grads)")
         lr = jnp.asarray(cfg.lr if lr is None else lr, jnp.float32)
         step_f = (state.step + 1).astype(jnp.float32)
         gnorm_scale, new_vec = self.percentile_clip(grads, state)
@@ -1167,7 +1171,8 @@ class Block8bitOptimizer:
 def _concat_span_results(outs):
     """Stitch per-span FusedUpdateResults back into the arena layout
     (device-side concat along the block dim, PackedCodes-aware)."""
-    assert outs, "no non-empty spans"
+    if not outs:
+        raise FormatError("no non-empty spans to stitch")
     if len(outs) == 1:
         return outs[0]
 

@@ -44,6 +44,7 @@ import jax.numpy as jnp
 
 from repro.core.optim import base
 from repro.core.optim.base import Full32Leaf, OptimConfig, Quant8Leaf
+from repro.errors import ConfigError
 from repro.core.optim.blockopt import Block8bitOptimizer
 from repro.kernels import newton_schulz as kns
 from repro.kernels import ops as kops
@@ -56,7 +57,9 @@ class MuonOptimizer(Block8bitOptimizer):
     def __init__(self, config: OptimConfig,
                  override_32bit: Optional[Callable[[str], bool]] = None,
                  mesh=None):
-        assert config.algo == "muon", config.algo
+        if config.algo != "muon":
+            raise ConfigError(f"MuonOptimizer requires algo='muon', got "
+                              f"{config.algo!r}")
         if not config.blockwise_norm:
             raise ValueError(
                 "muon serves block-wise quantization only; the tensor-wise "

@@ -26,6 +26,8 @@ import functools
 
 import numpy as np
 
+from repro.errors import ConfigError, FormatError
+
 # Bit layout used by the reference implementation: for b total bits, b - 1
 # dynamic-exponent levels (7 for the 8-bit maps).
 
@@ -58,12 +60,16 @@ def _finalize(values: list[float], bits: int) -> np.ndarray:
     values.append(0.0)
     values.append(1.0)
     target = 2 ** bits
-    assert len(values) <= target, (len(values), bits)
+    if len(values) > target:
+        raise ConfigError(f"codebook construction produced {len(values)} "
+                          f"levels for {bits}-bit storage (max {target})")
     # Pad (never needed for the standard configs, kept for safety/parity with
     # the reference implementation which pads with zeros).
     values += [0.0] * (target - len(values))
     out = np.sort(np.asarray(values, dtype=np.float32))
-    assert out.shape == (target,)
+    if out.shape != (target,):
+        raise FormatError(f"finalized codebook shape {out.shape} != "
+                          f"({target},)")
     return out
 
 

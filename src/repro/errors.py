@@ -1,0 +1,22 @@
+"""Typed exceptions for user-reachable validation (DESIGN.md §15c).
+
+Library validation must not ride ``assert``: asserts vanish under
+``python -O`` (serve/engine.py documents the incident), and an
+AssertionError tells the caller nothing about which knob to fix.  The
+lint gate (``repro.analysis.lint``, rule ``bare-assert``) enforces the
+burn-down; config- and data-shape validation raises these instead.
+
+Both derive from ValueError so existing ``except ValueError`` callers
+(and pytest.raises(ValueError) tests) keep working.
+"""
+from __future__ import annotations
+
+
+class ConfigError(ValueError):
+    """An invalid optimizer / training configuration value — wrong knob
+    combination, unsupported bit-width, out-of-range hyperparameter."""
+
+
+class FormatError(ValueError):
+    """Malformed quantized-state data — shape/dtype/packing mismatches in
+    codes, absmax, codebooks, or serialized state containers."""

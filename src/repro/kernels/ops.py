@@ -39,6 +39,8 @@ from typing import Callable, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.analysis import contracts as _contracts
+from repro.analysis import mutations as _mutations
 from repro.core.lowbit import (PackedCodes, pack_codes, unpack_codes,
                                unwrap_codes)
 from repro.telemetry import tracing as _tracing
@@ -341,6 +343,10 @@ def fused_update(
         hyper["blockwise"] = blockwise
     elif impl == "jnp":
         hyper["blockwise"] = blockwise
+    if _mutations.active("promote_f64"):
+        # Seeded violation for the no_dtype(f64) auditor (analysis §15):
+        # promote the gradient so the whole update chain lowers in f64.
+        g = g.astype(jnp.float64)
     with _tracing.annotate(f"fused_update.{algo}"):
         _FUSED_UPDATE_CALLS[0] += 1
         res = fn(p, g, codes_m, absmax_m, codes_r, absmax_r, qmap_m, qmap_r,
@@ -350,6 +356,21 @@ def fused_update(
     if ncodes_r is not None and res.codes_r is not None:
         res = res._replace(codes_r=PackedCodes(res.codes_r, bits_r, ncodes_r))
     return res
+
+
+# ------------------------------------------------- compile contracts (§15)
+# The fused-update chain is where a silent promotion or a low-precision
+# accumulation would hide: every algo routes through fused_update, so the
+# contracts bind to the bare update lowering per (algo, bits) matrix cell.
+_contracts.register(
+    "fused_update.no_f64", "update",
+    lambda low, cell: _contracts.check_no_dtype(low.text, "f64"),
+    doc="the update chain never promotes past f32 (§6 master-dtype policy)")
+_contracts.register(
+    "fused_update.accumulates_in_f32", "update",
+    lambda low, cell: _contracts.check_accumulates_in(low.text, "f32"),
+    doc="every matmul/additive reduction in the update (LAMB/LARS norms, "
+        "NS gram chain) accumulates in f32 (§11)")
 
 
 def segment_tensor_scales(

@@ -21,11 +21,9 @@ PEAK_FLOPS = 197e12        # bf16 FLOP/s per chip
 HBM_BW = 819e9             # bytes/s per chip
 ICI_BW = 50e9              # bytes/s per link
 
-_DTYPE_BYTES = {
-    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
-    "s64": 8, "u64": 8, "f16": 2, "bf16": 2, "f32": 4, "f64": 8,
-    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
-}
+# One shared dtype-size table for every HLO-text consumer (DESIGN.md §15);
+# this module's private copy had drifted (no s4/u4, fewer f8 variants).
+from repro.analysis.dtypes import DTYPE_BYTES as _DTYPE_BYTES
 
 _COLL_RE = re.compile(
     r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"

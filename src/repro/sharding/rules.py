@@ -37,10 +37,14 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from repro.analysis import contracts as _contracts
+from repro.analysis import mutations as _mutations
 from repro.core.lowbit import PackedCodes
 from repro.core.optim.base import (Full32Leaf, Pool32Arena, Pool32Leaf,
                                    PooledQuantLeaf, Quant8Leaf, QuantArena)
 from repro.core.optim.adafactor import AdafactorLeaf
+from repro.errors import ConfigError
+from repro.kernels import common as _kernels_common
 
 Pytree = Any
 
@@ -88,7 +92,9 @@ def resolve_spec(logical: tuple, shape: tuple, mesh: Mesh,
                  policy: ShardingPolicy) -> P:
     """Greedy TP + FSDP resolution for one param."""
     rules = policy.rules()
-    assert len(logical) == len(shape), (logical, shape)
+    if len(logical) != len(shape):
+        raise ConfigError(f"logical axes {logical} do not match param "
+                          f"shape {shape}")
     assign: list[list[str]] = [[] for _ in shape]
     used: set[str] = set()
     avail = set(mesh.axis_names)
@@ -214,6 +220,10 @@ def replicate_for_scales(mesh: Mesh, arrays):
     global reduction (the LAMB/LARS segment-norm pass) compiles as the
     oracle's single-device reduction on every device — SPMD distributing
     it would change the f32 summation order (DESIGN.md §12)."""
+    if _mutations.active("drop_replication_pin"):
+        # Seeded violation for the replicated(...) auditor (analysis §15):
+        # skip the pin so the partitioned lowering loses its §12 guarantee.
+        return tuple(arrays)
     rep = NamedSharding(mesh, P())
 
     def one(x):
@@ -390,3 +400,41 @@ def cache_shardings(abstract_cache, cfg, mesh: Mesh, policy: ShardingPolicy):
         return NamedSharding(mesh, P(*spec))
 
     return jax.tree_util.tree_map(one, abstract_cache)
+
+
+# ------------------------------------------------- compile contracts (§15)
+# replicate_for_scales is a with_sharding_constraint, so dropping it never
+# changes numerics on one device — only the *lowering* betrays the loss.
+# These contracts pin the §12 guarantee at the StableHLO level.
+
+def _check_replicated_scales(low, cell):
+    if getattr(cell, "partition", 1) <= 1:
+        return None  # no mesh, no pins to check
+    # Count only vector pins and skip the (256,) codebook constants: those
+    # are pinned by the arena layout regardless of replicate_for_scales,
+    # so a lost scale pin must not hide behind them.
+    return _contracts.check_replicated(
+        low.text, min_pins=1, vectors_only=True,
+        exclude_shapes=((_kernels_common.CODEBOOK_SIZE,),))
+
+
+def _check_partition_pins(pair, cell):
+    """pair:partition — the partitioned lowering must carry the §12
+    replication pins its unpartitioned twin has no reason to emit."""
+    pins = {k: _contracts.replicated_pins(low.text)
+            for k, low in pair.items()}
+    on = max(pins.values())
+    off = min(pins.values())
+    ok = on >= 1 and on > off
+    return ok, f"replicated pins per partition setting: {pins}"
+
+
+_contracts.register(
+    "partitioned_step.replicated_scales", "step", _check_replicated_scales,
+    doc="partitioned lowering pins tensor scales / gnorm reductions "
+        "fully replicated (§12 bit-exactness)")
+_contracts.register(
+    "partitioned_step.partition_pins", "pair:partition",
+    _check_partition_pins,
+    doc="turning partitioning on introduces replication pins; turning it "
+        "off removes them (the pin is partition-conditional, §12)")

@@ -27,6 +27,7 @@ from typing import Any, Dict, Optional
 
 import numpy as np
 
+from repro.errors import FormatError
 from repro.telemetry.export import SCHEMA
 
 
@@ -45,7 +46,9 @@ class Counter:
         self.value = 0
 
     def inc(self, n: int = 1) -> int:
-        assert n >= 0, f"counter {self.name} cannot decrease (got {n})"
+        if n < 0:
+            raise ValueError(f"counter {self.name} cannot decrease "
+                             f"(got {n})")
         self.value += int(n)
         return self.value
 
@@ -78,7 +81,9 @@ class Histogram:
 
     def observe_counts(self, counts: Any) -> np.ndarray:
         c = np.asarray(counts, np.int64).reshape(-1)
-        assert c.shape[0] == self.n_bins, (self.name, c.shape, self.n_bins)
+        if c.shape[0] != self.n_bins:
+            raise FormatError(f"histogram {self.name}: got {c.shape[0]} "
+                              f"bins, expected {self.n_bins}")
         self.value = c
         return self.value
 

@@ -14,6 +14,7 @@ from typing import Any, Callable, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.analysis import contracts as _contracts
 from repro.models import model as M
 from repro.telemetry import tracing as _tracing
 
@@ -277,8 +278,55 @@ def jit_train_step(cfg, optimizer, hyper: TrainHyper = TrainHyper(),
 def donation_aliases(lowered) -> int:
     """Number of donated-input/output buffer aliasings a ``.lower()``-ed
     step actually established (the ``tf.aliasing_output`` markers in the
-    StableHLO) — the donation-aliasing audit hook (DESIGN.md §13c)."""
-    return lowered.as_text().count("tf.aliasing_output")
+    StableHLO) — the donation-aliasing audit hook (DESIGN.md §13c), now
+    delegating to the contract checker (``repro.analysis.contracts``)."""
+    return _contracts.donation_aliases(lowered.as_text())
+
+
+# ------------------------------------------------- compile contracts (§15)
+# Registered here, next to the step construction they protect; evaluated
+# over the config matrix by `python -m repro.analysis` (analysis/runner.py).
+
+def _telemetry_invariant(pair, cell):
+    """telemetry_every is host-schedule only (§14): every knob value must
+    lower the step to byte-identical StableHLO, with no tel.* scope names
+    leaking into the default trace."""
+    ok, detail = _contracts.lowering_invariant(
+        {k: low.text for k, low in pair.items()})
+    if ok and any("tel." in low.text for low in pair.values()):
+        return False, "tel.* scope names leaked into the default lowering"
+    return ok, detail
+
+
+_contracts.register(
+    "train_step.donates", "step",
+    lambda low, cell: _contracts.check_donates(low.text, min_aliases=1),
+    doc="donated TrainState marks >=1 in-place alias/donor (§13c)")
+_contracts.register(
+    "train_step.no_f64", "step",
+    lambda low, cell: _contracts.check_no_dtype(low.text, "f64"),
+    doc="no f64 anywhere in the jitted step (§6 master-dtype policy)")
+_contracts.register(
+    "train_step.collective_order", "step",
+    lambda low, cell: (_contracts.check_collective_order(
+        low.text,
+        "{devices=",                # grads pinned into the owned-span layout
+        "@SPMDFullToShardShape",    # reduce-scatter boundary: span entry
+        "@SPMDShardToFullShape")    # all-gather boundary: span exit
+        if getattr(cell, "shard_grads", False) else None),
+    doc="ZeRO-2 step shape (§13): grad scatter pin -> span-local fused "
+        "update (shard_map body) -> span exit; the implicit collectives "
+        "ride these SPMD boundaries, so their order IS the "
+        "reduce_scatter -> fused_update -> all_gather order")
+_contracts.register(
+    "train_step.telemetry_invariant", "pair:telemetry", _telemetry_invariant,
+    doc="telemetry_every 0 vs N lower byte-identically (§14, ex-PR-7 test)")
+_contracts.register(
+    "train_step.overlap_donation_invariant", "pair:overlap",
+    lambda pair, cell: _contracts.lowering_invariant(
+        {k: low.text for k, low in pair.items()}, compare_aliases_only=True),
+    doc="overlap_buckets 1 vs K restructures dispatch but must never cost "
+        "a donated in-place arena (§13c)")
 
 
 def init_train_state(cfg, optimizer, key) -> tuple[TrainState, Pytree]:

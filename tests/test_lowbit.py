@@ -13,6 +13,7 @@ import pytest
 from repro.core import qmap
 from repro.core.lowbit import (SUPPORTED_BITS, CodeFormat, PackedCodes,
                                pack_codes, packed_width, unpack_codes)
+from repro.errors import ConfigError
 from repro.core.optim import (Full32Leaf, OptimConfig, Quant8Leaf,
                               make_optimizer, unpool_state)
 from repro.kernels import ops, ref
@@ -202,7 +203,8 @@ def test_state_bits_containers_and_bytes():
 
 
 def test_state_bits_config_validation():
-    with pytest.raises(AssertionError):
+    # typed exception (repro.errors): asserts vanish under python -O
+    with pytest.raises(ConfigError):
         OptimConfig(algo="adam", state_bits=3)
     assert OptimConfig(algo="adam", state_bits=4).state_bits_pair == (4, 4)
     assert OptimConfig(algo="adam",

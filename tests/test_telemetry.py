@@ -342,18 +342,22 @@ def test_telemetry_off_step_lowers_byte_identical():
     jitted train step to the SAME StableHLO, with the same donation
     aliasing — the §14 zero-overhead contract (pattern: the §13c
     donation_aliases audit)."""
+    from repro.analysis import contracts
+
     cfg = tiny_cfg()
     pipe = tiny_pipe(vocab_size=cfg.vocab_size)
     batch = {k: jnp.asarray(v) for k, v in pipe.batch_at(0).items()}
-    texts, aliases = [], []
+    texts, aliases = {}, []
     for every in (0, 2):
         opt = make_optimizer("adam8", lr=5e-3, min_8bit_size=1024,
                              telemetry_every=every)
         state, _ = L.init_train_state(cfg, opt, jax.random.PRNGKey(0))
         lowered = L.jit_train_step(cfg, opt).lower(state, batch)
-        texts.append(lowered.as_text())
+        texts[every] = lowered.as_text()
         aliases.append(L.donation_aliases(lowered))
-    assert texts[0] == texts[1]
+    # the §14 guard is now the lowering_invariant contract (DESIGN.md §15)
+    ok, detail = contracts.lowering_invariant(texts)
+    assert ok, detail
     assert "tel." not in texts[0]        # annotations are literal no-ops
     assert aliases[0] == aliases[1] > 0
 
