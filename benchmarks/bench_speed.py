@@ -367,6 +367,10 @@ def bench_telemetry_overhead(smoke: bool = False):
         qhealth probes every 10 steps (a separate jitted executable on the
         host schedule, pre-warmed off the clock); gate: mean step time
         <= 1.05x baseline, the probe cost amortized over the window.
+      * ``sent`` — the in-graph numerics sentinel compiled into the step
+        (``OptimConfig.sentinel=True``, DESIGN.md §16): per-dispatch
+        health counts reduced in VMEM and summed into the step metrics;
+        gate: mean step time <= 1.05x baseline.
 
     A small absolute guard (0.2/0.5 ms) rides on each gate so timer
     granularity on the tiny CPU step can't flake the ratio.  Appends
@@ -383,7 +387,7 @@ def bench_telemetry_overhead(smoke: bool = False):
     every = 10
     reps = 3
 
-    def make_leg(trace: bool, probes: bool):
+    def make_leg(trace: bool, probes: bool, sentinel: bool = False):
         """Compile one leg (off the clock) and return a window runner.
         The three runners are then INTERLEAVED window-by-window, so host
         drift (CPU frequency, cache state) hits every leg equally instead
@@ -393,6 +397,8 @@ def bench_telemetry_overhead(smoke: bool = False):
         try:
             cfg, pipe = small_lm(d_model=64, n_layers=2, seq=32, batch=8)
             kw = {"telemetry_every": every} if (trace or probes) else {}
+            if sentinel:
+                kw["sentinel"] = True
             opt = make_optimizer("adam8", lr=1e-3, min_8bit_size=1024, **kw)
             state, _ = L.init_train_state(cfg, opt, jax.random.PRNGKey(0))
             step = L.jit_train_step(cfg, opt)
@@ -434,7 +440,8 @@ def bench_telemetry_overhead(smoke: bool = False):
 
     legs = {"base": make_leg(trace=False, probes=False),
             "off": make_leg(trace=True, probes=False),
-            "on": make_leg(trace=True, probes=True)}
+            "on": make_leg(trace=True, probes=True),
+            "sent": make_leg(trace=False, probes=False, sentinel=True)}
     times: dict[str, list] = {k: [] for k in legs}
     for _ in range(reps):
         for name, w in legs.items():
@@ -445,15 +452,21 @@ def bench_telemetry_overhead(smoke: bool = False):
                          float(np.min(times["off"])) * 1e3)
     on_mean, on_min = (float(np.mean(times["on"])) * 1e3,
                        float(np.min(times["on"])) * 1e3)
+    sent_mean, sent_min = (float(np.mean(times["sent"])) * 1e3,
+                           float(np.min(times["sent"])) * 1e3)
     off_ratio = off_min / max(base_min, 1e-9)
     on_ratio = on_mean / max(base_mean, 1e-9)
+    sent_ratio = sent_mean / max(base_mean, 1e-9)
     emit("telemetry/baseline_ms_per_step", base_min * 1e3, "min, no telemetry")
     emit("telemetry/off_ms_per_step", off_min * 1e3,
          f"{off_ratio:.3f}x baseline (gate 1.01x): traced-in annotations")
     emit("telemetry/on_ms_per_step", on_mean * 1e3,
          f"{on_ratio:.3f}x baseline (gate 1.05x): probes every {every}")
+    emit("telemetry/sentinel_ms_per_step", sent_mean * 1e3,
+         f"{sent_ratio:.3f}x baseline (gate 1.05x): in-graph health counts")
     assert off_min <= base_min * 1.01 + 0.2, (off_min, base_min)
     assert on_mean <= base_mean * 1.05 + 0.5, (on_mean, base_mean)
+    assert sent_mean <= base_mean * 1.05 + 0.5, (sent_mean, base_mean)
     _append_bench_json({
         "bench": "telemetry_overhead",
         "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
@@ -462,9 +475,12 @@ def bench_telemetry_overhead(smoke: bool = False):
         "baseline_ms": {"mean": base_mean, "min": base_min},
         "off_ms": {"mean": off_mean, "min": off_min},
         "on_ms": {"mean": on_mean, "min": on_min},
+        "sentinel_ms": {"mean": sent_mean, "min": sent_min},
         "off_ratio_min": off_ratio, "on_ratio_mean": on_ratio,
+        "sentinel_ratio_mean": sent_ratio,
     }, label="telemetry/overhead_json")
-    return {"off_ratio": off_ratio, "on_ratio": on_ratio}
+    return {"off_ratio": off_ratio, "on_ratio": on_ratio,
+            "sentinel_ratio": sent_ratio}
 
 
 def bench_quantize_throughput():

@@ -55,8 +55,16 @@ def bench_telemetry_jsonl(smoke: bool = False):
                          override_32bit=lambda p: False,
                          telemetry_every=EVERY, **kw)
 
-    path = os.path.join(tempfile.mkdtemp(prefix="bench_telemetry_"),
-                        "telemetry.jsonl")
+    # BENCH_TELEMETRY_DIR pins the artifact dir so a later CI leg can
+    # point the run inspector at it (scripts/ci.sh, DESIGN.md §16)
+    out_dir = os.environ.get("BENCH_TELEMETRY_DIR")
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+    else:
+        out_dir = tempfile.mkdtemp(prefix="bench_telemetry_")
+    path = os.path.join(out_dir, "telemetry.jsonl")
+    if os.path.exists(path):
+        os.remove(path)            # JsonlSink appends; start fresh
     reg = tel.MetricRegistry()
     reg.add_sink(tel.JsonlSink(path))
     tracing.set_phase_tracing(True)   # before tracing: scopes bake in

@@ -54,6 +54,13 @@ XLA_FLAGS="--xla_force_host_platform_device_count=4 ${XLA_FLAGS:-}" \
 # steps on the ZeRO-1 partitioned arena with qhealth probes every 2
 # steps; schema-validates the emitted JSONL and asserts saturation/
 # utilization fields for both the pooled QuantArena and a muon matrix
-# leaf.
+# leaf.  The artifact dir is pinned so the run inspector (DESIGN.md §16)
+# can triage it afterwards: the schema gate and the full render must both
+# exit 0 on this clean run (nonzero exit = anomalies or schema errors,
+# which fails CI here).
+TELEMETRY_RUN_DIR="$(mktemp -d)"
 XLA_FLAGS="--xla_force_host_platform_device_count=4 ${XLA_FLAGS:-}" \
+  BENCH_TELEMETRY_DIR="$TELEMETRY_RUN_DIR" \
   PYTHONPATH=src python -m benchmarks.run --smoke --only telemetry
+PYTHONPATH=src python -m repro.telemetry.inspect --validate "$TELEMETRY_RUN_DIR"
+PYTHONPATH=src python -m repro.telemetry.inspect "$TELEMETRY_RUN_DIR"

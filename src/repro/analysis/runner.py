@@ -154,6 +154,9 @@ def _pair_cells(cells: list) -> dict:
         "pair:overlap": by_name.get("adamw8-b88-part4-zero2"),
         # partition pair: partitioned vs pooled adamw
         "pair:partition": by_name.get("adamw8-b88-part4"),
+        # sentinel pair (§16): pooled adamw — off / explicit-off /
+        # on-but-idle lowerings
+        "pair:sentinel": by_name.get("adamw8-b88-pooled"),
     }
 
 
@@ -204,6 +207,12 @@ def run_contracts(cells: Optional[list] = None, *,
             pair = {n: lower_step(cell, telemetry_every=n) for n in (0, 2)}
         elif scope == "pair:overlap":
             pair = {n: lower_step(cell, overlap_buckets=n) for n in (1, 2)}
+        elif scope == "pair:sentinel":
+            # off (field default) vs explicit off must be byte-identical;
+            # "on" only feeds the sentinel_invariant alias comparison.
+            pair = {"off": lower_step(cell),
+                    "off_explicit": lower_step(cell, sentinel=False),
+                    "on": lower_step(cell, sentinel=True)}
         else:  # pair:partition — the pooled twin drops mesh/partitioning
             on = lower_step(cell)
             off = lower_step(dataclasses.replace(

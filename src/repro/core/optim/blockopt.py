@@ -581,21 +581,36 @@ class Block8bitOptimizer:
             weight_decay=cfg.weight_decay, step=step_f,
             trust_coeff=cfg.trust_coeff, gnorm_scale=gnorm_scale,
             blockwise=cfg.blockwise_norm,
-            stochastic=cfg.stochastic_rounding, seed=seed, impl=self._impl)
+            stochastic=cfg.stochastic_rounding, seed=seed, impl=self._impl,
+            sentinel=cfg.sentinel)
         new = dataclasses.replace(
             leaf, master=blocks_to_param(res.p, leaf.shape, leaf.n, mdt),
             codes_m=res.codes_m, absmax_m=res.absmax_m)
         if res.codes_r is not None:
             new = dataclasses.replace(new, codes_r=res.codes_r,
                                       absmax_r=res.absmax_r)
+        # Sentinel (DESIGN.md §16): per-leaf methods return (leaf, h8)
+        # where h8 is the (N_HEALTH,) summed HealthFlags vector.
+        if cfg.sentinel:
+            return new, jnp.sum(res.health, axis=0)
         return new
 
     def _apply_full32(self, leaf: Full32Leaf, g: jax.Array, lr, step_f,
                       gnorm_scale):
-        g = g.astype(jnp.float32) * gnorm_scale
+        graw = g.astype(jnp.float32)
+        g = graw * gnorm_scale
         r = leaf.r if leaf.r is not None else None
         m2, r2, p2 = self._math32(g, leaf.master, leaf.m, r, lr, step_f)
-        return Full32Leaf(master=p2, m=m2, r=r2)
+        new = Full32Leaf(master=p2, m=m2, r=r2)
+        if self.cfg.sentinel:
+            # Full32 leaves have no codes/absmax: only the nonfinite
+            # grad/update slots are meaningful (counted on the raw grad,
+            # pre gnorm_scale — inf*0 would mask a nonfinite grad).
+            nf = lambda x: jnp.sum((~jnp.isfinite(x)).astype(jnp.float32))
+            h8 = jnp.zeros((kfu.N_HEALTH,), jnp.float32)
+            h8 = h8.at[0].set(nf(graw)).at[1].set(nf(p2))
+            return new, h8
+        return new
 
     def _apply_pool32(self, pool: Pool32Arena, gflat: jax.Array, lr,
                       step_f) -> Pool32Arena:
@@ -730,7 +745,7 @@ class Block8bitOptimizer:
                     block_offsets=block_offsets[sl],
                     tensor_scale_blocks=None if tscale is None
                     else tscale[sl],
-                    impl=self._impl, **hyper))
+                    impl=self._impl, sentinel=cfg.sentinel, **hyper))
         return _concat_span_results(outs)
 
     def _span_update_shard_map(self, mesh, part: ArenaPartition,
@@ -773,13 +788,18 @@ class Block8bitOptimizer:
                 ar_, qm1, qm2, lr=lr_, step=step_, gnorm_scale=gs_,
                 blockwise=True, stochastic=cfg.stochastic_rounding,
                 block_seeds=seeds_, block_offsets=offs_,
-                tensor_scale_blocks=ts_, impl=self._impl, **static)
+                tensor_scale_blocks=ts_, impl=self._impl,
+                sentinel=cfg.sentinel, **static)
 
             def bare(c):
                 return c.packed if isinstance(c, PackedCodes) else c
             out = (res.p, bare(res.codes_m), res.absmax_m)
             if two:
                 out += (bare(res.codes_r), res.absmax_r)
+            if cfg.sentinel:
+                # per-block health rows ride the span machinery like every
+                # other block-dim output (stitch/unpad are generic)
+                out += (res.health,)
             return out
 
         consts = (self._qmap1, self._qmap2 if two else self._qmap1,
@@ -836,7 +856,8 @@ class Block8bitOptimizer:
             cr2, ar2 = outs[3], outs[4]
             if nc_r is not None:
                 cr2 = PackedCodes(cr2, bits_r, nc_r)
-        return kfu.FusedUpdateResult(p2, cm2, am2, cr2, ar2)
+        health = outs[5 if two else 3] if cfg.sentinel else None
+        return kfu.FusedUpdateResult(p2, cm2, am2, cr2, ar2, health)
 
     def _route_matrix_leaf(self, owner: int, leaf: Quant8Leaf, g, lr,
                            step_f, seed, gnorm_scale):
@@ -872,6 +893,9 @@ class Block8bitOptimizer:
         cfg = self.cfg
         mdt = jnp.dtype(cfg.master_dtype)
         buf = grads if isinstance(grads, GradBuffer) else None
+        # (N_HEALTH,) HealthFlags contributions from every dispatch this
+        # step; summed at the end when cfg.sentinel (DESIGN.md §16).
+        health_parts: list = []
 
         # Walk the leaves once, in flatten order — the same order the
         # per-leaf dispatch numbers its leaves, so seed i matches.
@@ -936,7 +960,9 @@ class Block8bitOptimizer:
                     trust_coeff=cfg.trust_coeff, gnorm_scale=gnorm_scale,
                     blockwise=True, stochastic=cfg.stochastic_rounding,
                     block_seeds=block_seeds, block_offsets=block_offsets,
-                    segments=segs, impl=self._impl)
+                    segments=segs, impl=self._impl, sentinel=cfg.sentinel)
+            if cfg.sentinel:
+                health_parts.append(jnp.sum(res.health, axis=0))
             new_arena = dataclasses.replace(
                 arena, codes_m=res.codes_m, absmax_m=res.absmax_m,
                 codes_r=res.codes_r if res.codes_r is not None
@@ -954,6 +980,14 @@ class Block8bitOptimizer:
                      else small_g[0].reshape(-1).astype(jnp.float32))
             new_pool = self._apply_pool32(state.pool32, gflat * gnorm_scale,
                                           lr, step_f)
+            if cfg.sentinel:
+                # fp32 pool has no codes/absmax; nonfinite grad/update only
+                # (raw grads — pre gnorm_scale, as everywhere else).
+                nf = lambda x: jnp.sum((~jnp.isfinite(x))
+                                       .astype(jnp.float32))
+                h8 = jnp.zeros((kfu.N_HEALTH,), jnp.float32)
+                health_parts.append(
+                    h8.at[0].set(nf(gflat)).at[1].set(nf(new_pool.master)))
 
         # Second walk re-plays the same flatten order as `collect`, so each
         # ride-along leaf recovers its flatten index i — per-leaf seeds
@@ -980,15 +1014,22 @@ class Block8bitOptimizer:
                 if cfg.partition_active:
                     owner = mk[0] % max(cfg.partition_shards, 1)
                     mk[0] += 1
-                    return self._route_matrix_leaf(owner, leaf, g, lr,
-                                                   step_f, seed, gnorm_scale)
-                return self._apply_quant8(leaf, g, lr, step_f, seed,
-                                          gnorm_scale)
-            return self._apply_full32(leaf, g, lr, step_f, gnorm_scale)
+                    out = self._route_matrix_leaf(owner, leaf, g, lr,
+                                                  step_f, seed, gnorm_scale)
+                else:
+                    out = self._apply_quant8(leaf, g, lr, step_f, seed,
+                                             gnorm_scale)
+            else:
+                out = self._apply_full32(leaf, g, lr, step_f, gnorm_scale)
+            if cfg.sentinel:
+                out, h8 = out
+                health_parts.append(h8)
+            return out
 
         new_leaves = jax.tree_util.tree_map(upd, state.leaves,
                                             is_leaf=_is_state_leaf)
-        return new_leaves, new_arena, new_pool
+        health = _sum_health(health_parts) if cfg.sentinel else None
+        return new_leaves, new_arena, new_pool, health
 
     def apply(self, grads: Pytree, state: OptState, *,
               lr: Optional[jax.Array] = None,
@@ -1010,6 +1051,12 @@ class Block8bitOptimizer:
         :meth:`params_view` at first use (top of the next step), so the
         masters' all-gather overlaps the next forward instead of extending
         this step's tail.
+
+        With ``cfg.sentinel`` (DESIGN.md §16) the return is a 3-tuple
+        ``(params, state, health)`` where ``health`` is the summed
+        (``kfu.N_HEALTH``,) f32 HealthFlags vector over every dispatch of
+        this step (``kfu.HEALTH_SLOTS`` layout).  The OptState pytree is
+        unchanged either way — checkpoints and goldens are sentinel-blind.
         """
         cfg = self.cfg
         if isinstance(grads, GradBuffer) and not cfg.pooling_active:
@@ -1027,30 +1074,41 @@ class Block8bitOptimizer:
             base_seed = state.step.astype(jnp.int32) * jnp.int32(1000003)
 
         if cfg.pooling_active:
-            new_leaves, new_arena, new_pool = self._apply_pooled(
+            new_leaves, new_arena, new_pool, health = self._apply_pooled(
                 grads, state, lr, step_f, base_seed, gnorm_scale)
         else:
             leaf_idx = [0]
+            health_parts: list = []
 
             def upd(leaf, g):
                 i = leaf_idx[0]
                 leaf_idx[0] += 1
                 seed = base_seed + jnp.int32(i * 7919)
                 if isinstance(leaf, Quant8Leaf):
-                    return self._apply_quant8(leaf, g, lr, step_f, seed,
-                                              gnorm_scale)
-                return self._apply_full32(leaf, g, lr, step_f, gnorm_scale)
+                    out = self._apply_quant8(leaf, g, lr, step_f, seed,
+                                             gnorm_scale)
+                else:
+                    out = self._apply_full32(leaf, g, lr, step_f,
+                                             gnorm_scale)
+                if cfg.sentinel:
+                    out, h8 = out
+                    health_parts.append(h8)
+                return out
 
             new_leaves = jax.tree_util.tree_map(
                 upd, state.leaves, grads, is_leaf=_is_state_leaf)
             new_arena, new_pool = state.arena, state.pool32
+            health = _sum_health(health_parts) if cfg.sentinel else None
 
         new_state = OptState(step=state.step + 1, leaves=new_leaves,
                              gnorm_vec=new_vec, arena=new_arena,
                              pool32=new_pool)
         if not materialize_params:
-            return None, new_state
-        return self.params_view(new_state, param_dtype), new_state
+            return (None, new_state, health) if cfg.sentinel \
+                else (None, new_state)
+        params = self.params_view(new_state, param_dtype)
+        return (params, new_state, health) if cfg.sentinel \
+            else (params, new_state)
 
     def params_view(self, state: OptState, param_dtype=jnp.float32) -> Pytree:
         """Model-shape params reconstructed from the (sharded, flat-block)
@@ -1166,6 +1224,17 @@ class Block8bitOptimizer:
         return {"partition_shards": part.n_shards,
                 "owned_blocks": part.max_owned,
                 "owned_state_bytes": int(max(owner_bytes) + rep)}
+
+
+def _sum_health(parts):
+    """Sum per-dispatch (N_HEALTH,) HealthFlags vectors.  Counts are f32
+    integers, so the addition is exact in any order (DESIGN.md §16)."""
+    if not parts:
+        return jnp.zeros((kfu.N_HEALTH,), jnp.float32)
+    total = parts[0]
+    for p in parts[1:]:
+        total = total + p
+    return total
 
 
 def _concat_span_results(outs):

@@ -101,20 +101,25 @@ class MuonOptimizer(Block8bitOptimizer):
         return super()._apply_quant8(leaf, g, lr, step_f, seed, gnorm_scale)
 
     def _apply_muon_leaf(self, leaf: Quant8Leaf, g: jax.Array, lr, seed,
-                         gnorm_scale) -> Quant8Leaf:
+                         gnorm_scale):
         """One fused Muon step for a quantized matrix leaf: p/g stay in
         param (matrix) shape, the momentum state in the flat block domain
-        (ops.fused_update handles the reshape at the requant boundary)."""
+        (ops.fused_update handles the reshape at the requant boundary).
+        Under ``cfg.sentinel`` returns ``(leaf, h8)`` like every per-leaf
+        update (DESIGN.md §16)."""
         cfg = self.cfg
         res = kops.fused_update(
             "muon", leaf.master, g, leaf.codes_m, leaf.absmax_m,
             qmap_m=self._qmap1, lr=lr, beta1=cfg.beta1,
             weight_decay=cfg.weight_decay, gnorm_scale=gnorm_scale,
             stochastic=cfg.stochastic_rounding, seed=seed,
-            ns_steps=cfg.ns_steps, impl=self._impl)
-        return dataclasses.replace(
+            ns_steps=cfg.ns_steps, impl=self._impl, sentinel=cfg.sentinel)
+        new = dataclasses.replace(
             leaf, master=res.p.astype(jnp.dtype(cfg.master_dtype)),
             codes_m=res.codes_m, absmax_m=res.absmax_m)
+        if cfg.sentinel:
+            return new, jnp.sum(res.health, axis=0)
+        return new
 
     def _math32(self, g, p, m, r, lr, step_f):
         """fp32 Muon math for one-state 2-D leaves (the same shared

@@ -59,6 +59,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.lowbit import pack_codes, packed_width, unpack_codes
+from repro.errors import FormatError
 from repro.kernels import common
 
 # scalar vector layout:
@@ -111,12 +112,86 @@ ALGO_SPECS: dict[str, AlgoSpec] = {
 
 
 class FusedUpdateResult(NamedTuple):
-    """Output of one fused update in the flat block domain."""
+    """Output of one fused update in the flat block domain.
+
+    ``health`` is the optional numerics-sentinel output (DESIGN.md §16):
+    per-block f32 counts ``(n_blocks, N_SCALARS)`` in :data:`HEALTH_SLOTS`
+    order, present iff the dispatch ran with ``sentinel=True``.  A ``None``
+    leaf vanishes in pytree flattening, so sentinel-off results (and their
+    lowerings) are unchanged by the field's existence."""
     p: jax.Array
     codes_m: jax.Array
     absmax_m: jax.Array
     codes_r: Optional[jax.Array]
     absmax_r: Optional[jax.Array]
+    health: Optional[jax.Array] = None
+
+
+# ------------------------------------------------- numerics sentinel (§16)
+# Slot layout of the per-block health counts the sentinel emits.  Counts
+# are integer-valued f32 (exact addition in any order up to 2^24), so the
+# Pallas tiles, the jnp oracle, per-span shard_map pieces and their
+# concatenation/summation all agree bit-exactly.
+HEALTH_SLOTS = (
+    "nonfinite_grad",        # nonfinite entries in the incoming (raw) grad
+    "nonfinite_update",      # nonfinite entries in the updated master
+    "nonfinite_absmax_m",    # nonfinite new per-block absmax, state 1
+    "nonfinite_absmax_r",    # nonfinite new per-block absmax, state 2
+    "edge_hits_m",           # requantized state-1 codes at a codebook edge
+    "edge_hits_r",           # requantized state-2 codes at a codebook edge
+    "absmax_overflow_m",     # new state-1 absmax past the overflow guard
+    "absmax_overflow_r",     # new state-2 absmax past the overflow guard
+)
+N_HEALTH = len(HEALTH_SLOTS)
+if N_HEALTH != N_SCALARS:  # health rows reuse the (rows, 8) tile shape
+    raise FormatError("HEALTH_SLOTS must match the N_SCALARS tile width")
+
+# f32 max is ~3.4e38; an absmax past 1e30 means squaring/scale math on the
+# dequantized state is about to overflow — flag before the inf appears.
+ABSMAX_OVERFLOW_THRESHOLD = 1e30
+
+
+def health_rows(g, p2, c1n, a1n, c2n, a2n, bits_m: int, bits_r: int):
+    """Per-block health counts ``(n_blocks, N_HEALTH)`` f32, HEALTH_SLOTS
+    order, from one fused update's inputs/outputs: the raw (unscaled)
+    grad blocks ``g``, the updated master blocks ``p2``, and the NEW
+    *unpacked* codes / absmax of each state slot (pre ``pack_codes`` —
+    exactly what the kernel holds in VMEM after ``block_requantize``).
+    Pure jnp: runs inside the Pallas kernel tile-by-tile and at the XLA
+    level post-hoc (jnp oracle / muon entry) unchanged, so sentinel
+    parity across impls holds by construction.  Absmax vectors whose
+    length differs from ``n_blocks`` (the tensor-wise ablation's
+    per-tensor absmax) fold their counts into row 0."""
+    nb = p2.shape[0]
+    zero = jnp.zeros((nb,), jnp.float32)
+
+    def nf2(x):                                   # (nb, B) -> (nb,)
+        return jnp.sum((~jnp.isfinite(x)).astype(jnp.float32), axis=1)
+
+    def amax_slots(a):
+        if a is None:
+            return zero, zero
+        a = jnp.asarray(a, jnp.float32).reshape(-1)
+        nfin = (~jnp.isfinite(a)).astype(jnp.float32)
+        over = jnp.where(jnp.isfinite(a) &
+                         (a > ABSMAX_OVERFLOW_THRESHOLD), 1.0, 0.0)
+        if a.shape[0] == nb:
+            return nfin, over
+        return (zero.at[0].add(jnp.sum(nfin)),
+                zero.at[0].add(jnp.sum(over)))
+
+    def edge(c, bits):
+        if c is None:
+            return zero
+        hit = (c == 0) | (c == (1 << bits) - 1)
+        return jnp.sum(hit.astype(jnp.float32), axis=1)
+
+    nf_a1, ov_a1 = amax_slots(a1n)
+    nf_a2, ov_a2 = amax_slots(a2n)
+    return jnp.stack([
+        nf2(g.astype(jnp.float32)), nf2(p2.astype(jnp.float32)),
+        nf_a1, nf_a2, edge(c1n, bits_m), edge(c2n, bits_r),
+        ov_a1, ov_a2], axis=1)
 
 
 # --------------------------------------------------------------- update math
@@ -230,8 +305,13 @@ def _scalars_dict(scal_row):
 
 # ------------------------------------------------------------ kernel builder
 def _make_update_kernel(spec: AlgoSpec, rows: int, bsz: int, stochastic: bool,
-                        bits_m: int, bits_r: int):
-    """Build the main fused-update kernel for one (algo, tile, mode, bits)."""
+                        bits_m: int, bits_r: int, sentinel: bool = False):
+    """Build the main fused-update kernel for one (algo, tile, mode, bits).
+
+    ``sentinel`` appends one trailing ``(rows, N_HEALTH)`` output of
+    per-block health counts (``health_rows``) — computed on values the
+    update already holds in VMEM, so the only extra HBM traffic is the
+    (n_blocks, 8) f32 store itself."""
     two = spec.n_states == 2
 
     def kernel(*refs):
@@ -246,6 +326,7 @@ def _make_update_kernel(spec: AlgoSpec, rows: int, bsz: int, stochastic: bool,
         c2_ref, a2_ref = (next(it), next(it)) if two else (None, None)
         p_out, c1_out, a1_out = next(it), next(it), next(it)
         c2_out, a2_out = (next(it), next(it)) if two else (None, None)
+        h_out = next(it) if sentinel else None
 
         s = _scalars_dict(scal_ref[...])
         if spec.needs_norms:
@@ -284,12 +365,19 @@ def _make_update_kernel(spec: AlgoSpec, rows: int, bsz: int, stochastic: bool,
                                            max_code=(1 << bits_m) - 1)
         c1_out[...] = pack_codes(c1n, bits_m)
         a1_out[...] = a1n
+        c2n = a2n = None
         if two:
             c2n, a2n = common.block_requantize(r2, b2_ref[...], qm2_ref[...],
                                                random_u=u2,
                                                max_code=(1 << bits_r) - 1)
             c2_out[...] = pack_codes(c2n, bits_r)
             a2_out[...] = a2n
+        if sentinel:
+            # Health counts on the RAW grad tile (pre gnorm_scale: inf*0
+            # would mask a nonfinite grad) and the values already live in
+            # VMEM — no second pass over HBM.
+            h_out[...] = health_rows(g_ref[...], p2, c1n, a1n, c2n, a2n,
+                                     bits_m, bits_r)
 
     return kernel
 
@@ -425,7 +513,7 @@ def segment_scales_pallas(
 # ------------------------------------------------------------- public entry
 @functools.partial(jax.jit, static_argnames=("algo", "rows", "stochastic",
                                              "interpret", "bits_m", "bits_r",
-                                             "segments"))
+                                             "segments", "sentinel"))
 def fused_update_pallas(
     p: jax.Array,                  # (n_blocks, B) f32 master params
     g: jax.Array,                  # (n_blocks, B) f32/bf16 grads
@@ -447,6 +535,7 @@ def fused_update_pallas(
     bits_m: int = 8,
     bits_r: int = 8,
     segments: tuple = (),          # ((block_offset, n_blocks), ...) static
+    sentinel: bool = False,        # emit per-block health counts (§16)
 ) -> FusedUpdateResult:
     """One fused k-bit update for ``algo`` in the flat block domain.
 
@@ -511,7 +600,8 @@ def fused_update_pallas(
                 scalars[7])[:, None]
     scalars = scalars.at[7].set(1.0)
 
-    kernel = _make_update_kernel(spec, rows, bsz, stochastic, bits_m, bits_r)
+    kernel = _make_update_kernel(spec, rows, bsz, stochastic, bits_m, bits_r,
+                                 sentinel)
     in_specs = [scal_spec]
     args = [scalars.reshape(1, N_SCALARS)]
     if stochastic:
@@ -544,6 +634,10 @@ def fused_update_pallas(
             jax.ShapeDtypeStruct((n_blocks, w2), jnp.uint8),
             jax.ShapeDtypeStruct((n_blocks, 1), jnp.float32),
         ]
+    if sentinel:
+        out_specs += [pl.BlockSpec((rows, N_HEALTH), lambda i: (i, 0))]
+        out_shape += [jax.ShapeDtypeStruct((n_blocks, N_HEALTH),
+                                           jnp.float32)]
 
     outs = pl.pallas_call(
         kernel,
@@ -553,8 +647,9 @@ def fused_update_pallas(
         out_shape=out_shape,
         interpret=interpret,
     )(*args)
+    health = outs[-1] if sentinel else None
     if two:
-        p2, c1, a1, c2, a2 = outs
-        return FusedUpdateResult(p2, c1, a1[:, 0], c2, a2[:, 0])
-    p2, c1, a1 = outs
-    return FusedUpdateResult(p2, c1, a1[:, 0], None, None)
+        p2, c1, a1, c2, a2 = outs[:5]
+        return FusedUpdateResult(p2, c1, a1[:, 0], c2, a2[:, 0], health)
+    p2, c1, a1 = outs[:3]
+    return FusedUpdateResult(p2, c1, a1[:, 0], None, None, health)

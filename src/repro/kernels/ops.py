@@ -155,7 +155,7 @@ def _pallas_entry(algo: str, interpret: bool) -> Callable:
             lr, beta1, beta2, eps, weight_decay, step, trust_coeff,
             gnorm_scale, stochastic, seed, rows, bits_m=8, bits_r=8,
             block_seeds=None, block_offsets=None, segments=None,
-            tensor_scale_blocks=None):
+            tensor_scale_blocks=None, sentinel=False):
         scalars = _scalars_vec(lr, beta1, beta2, eps, weight_decay, step,
                                gnorm_scale, trust_coeff)
         two = _fu.ALGO_SPECS[algo].n_states == 2
@@ -180,11 +180,13 @@ def _pallas_entry(algo: str, interpret: bool) -> Callable:
             p, g, cm, am, cr, ar, qmap_m, qmap_r if two else None, scalars,
             block_seeds, block_offsets, tensor_scale_blocks, algo=algo,
             rows=rows, stochastic=stochastic, interpret=interpret,
-            bits_m=bits_m, bits_r=bits_r, segments=segments)
+            bits_m=bits_m, bits_r=bits_r, segments=segments,
+            sentinel=sentinel)
         return _fu.FusedUpdateResult(
             res.p[:nb], res.codes_m[:nb], res.absmax_m[:nb],
             res.codes_r[:nb] if two else None,
-            res.absmax_r[:nb] if two else None)
+            res.absmax_r[:nb] if two else None,
+            res.health[:nb] if sentinel else None)
     return run
 
 
@@ -192,6 +194,7 @@ def _jnp_entry(algo: str) -> Callable:
     def run(p, g, cm, am, cr, ar, qmap_m, qmap_r, *,
             blockwise=True, rows=DEFAULT_ROWS, bits_m=8, bits_r=8, **hyper):
         del rows  # no tiling on the XLA path
+        sentinel = hyper.pop("sentinel", False)
         # Sub-byte codes arrive packed; the oracle works on unpacked codes
         # and re-packs at the boundary (XLA fuses the shifts either way).
         cm = unpack_codes(cm, bits_m).astype(jnp.uint8)
@@ -199,10 +202,18 @@ def _jnp_entry(algo: str) -> Callable:
             cr = unpack_codes(cr, bits_r).astype(jnp.uint8)
         res = ref.fused_update_ref(p, g, cm, am, cr, ar, qmap_m, qmap_r,
                                    algo=algo, blockwise=blockwise, **hyper)
+        health = None
+        if sentinel:
+            # Post-hoc on the oracle's unpacked codes — same raw-grad /
+            # pre-pack operands as the in-kernel path, so the counts agree
+            # by construction.
+            health = _fu.health_rows(g, res.p, res.codes_m, res.absmax_m,
+                                     res.codes_r, res.absmax_r,
+                                     bits_m, bits_r)
         return _fu.FusedUpdateResult(
             res.p, pack_codes(res.codes_m, bits_m), res.absmax_m,
             None if res.codes_r is None else pack_codes(res.codes_r, bits_r),
-            res.absmax_r)
+            res.absmax_r, health)
     return run
 
 
@@ -219,7 +230,7 @@ def _muon_entry(impl: str) -> Callable:
     def run(p, g, cm, am, cr, ar, qmap_m, qmap_r, *,
             lr, beta1, weight_decay, gnorm_scale, stochastic, seed,
             bits_m=8, ns_steps=_ns.DEFAULT_NS_STEPS, blockwise=True,
-            **_unused):
+            sentinel=False, **_unused):
         del cr, ar, qmap_r, _unused
         if not blockwise:
             raise NotImplementedError(
@@ -249,8 +260,18 @@ def _muon_entry(impl: str) -> Callable:
                 + jnp.uint32(common.STATE1_SEED_SALT))
         cm2, am2 = ref._requantize(blocks, qmap_m, blockwise=True,
                                    random_u=u1)
+        health = None
+        if sentinel:
+            # Health on block-domain views of the raw grad and the updated
+            # param (padding is finite zeros, so counts are unaffected).
+            gb = jnp.pad(g.astype(jnp.float32).reshape(-1),
+                         (0, nb * bsz - n)).reshape(nb, bsz)
+            pb = jnp.pad(p2.astype(jnp.float32).reshape(-1),
+                         (0, nb * bsz - n)).reshape(nb, bsz)
+            health = _fu.health_rows(gb, pb, cm2, am2, None, None,
+                                     bits_m, 8)
         return _fu.FusedUpdateResult(p2, pack_codes(cm2, bits_m), am2,
-                                     None, None)
+                                     None, None, health)
     return run
 
 
@@ -281,6 +302,7 @@ def fused_update(
     ns_steps: int = _ns.DEFAULT_NS_STEPS,
     impl: Optional[str] = None,
     rows: int = DEFAULT_ROWS,
+    sentinel: bool = False,
 ) -> _fu.FusedUpdateResult:
     """One fused k-bit optimizer step in the flat block domain.
 
@@ -305,6 +327,13 @@ def fused_update(
     :func:`segment_tensor_scales`.  Returns a
     :class:`~repro.kernels.fused_update.FusedUpdateResult` whose
     codes_r/absmax_r are None for one-state algorithms.
+
+    ``sentinel=True`` (DESIGN.md §16) additionally fills
+    ``FusedUpdateResult.health`` with per-block f32 count rows in the
+    ``fused_update.HEALTH_SLOTS`` layout, computed on the values already
+    in VMEM on the Pallas path and post-hoc (identical operands) on the
+    jnp/muon paths; off, the field is None and the lowering is
+    byte-identical to a sentinel-free build.
 
     Matrix-class algorithms (``muon``, DESIGN.md §11) take ``p``/``g`` in
     the leaf's 2-D *param shape* (not the flat block domain); ``codes_m``/
@@ -337,7 +366,7 @@ def fused_update(
                  bits_m=bits_m, bits_r=bits_r,
                  block_seeds=block_seeds, block_offsets=block_offsets,
                  segments=None if segments is None else tuple(segments),
-                 tensor_scale_blocks=tensor_scale_blocks)
+                 tensor_scale_blocks=tensor_scale_blocks, sentinel=sentinel)
     if _fu.ALGO_SPECS[algo].matrix:
         hyper["ns_steps"] = ns_steps
         hyper["blockwise"] = blockwise

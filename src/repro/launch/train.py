@@ -69,6 +69,17 @@ def main(argv=None):
     ap.add_argument("--telemetry-every", type=int, default=0,
                     help="run quantization-health probes every N steps "
                          "(0 = off; requires --telemetry-dir)")
+    ap.add_argument("--sentinel", action="store_true",
+                    help="in-graph numerics sentinel: kernels count "
+                         "nonfinite/overflow/saturation per dispatch and "
+                         "host detectors escalate anomalies (DESIGN.md §16)")
+    ap.add_argument("--flight-dir", default=None,
+                    help="flight-recorder dump directory: on a fatal "
+                         "anomaly or nonfinite loss, dump the metrics "
+                         "ring + last healthy state bundle here "
+                         "(DESIGN.md §16)")
+    ap.add_argument("--flight-ring", type=int, default=64,
+                    help="flight-recorder ring length (steps)")
     args = ap.parse_args(argv)
 
     cfg = cfgs.get_config(args.arch)
@@ -104,6 +115,8 @@ def main(argv=None):
         opt_kw["overlap_buckets"] = args.overlap_buckets
     if args.telemetry_every:
         opt_kw["telemetry_every"] = args.telemetry_every
+    if args.sentinel:
+        opt_kw["sentinel"] = True
     opt = make_optimizer(args.optimizer, lr=args.lr, weight_decay=0.0,
                          **opt_kw)
     hyper = train_loop.TrainHyper(
@@ -123,6 +136,23 @@ def main(argv=None):
         tracing.set_phase_tracing(True)
         tracing.reset_trace_events()
         probe = tel.QHealthProbe(opt)
+
+    # §16 observability: host-side anomaly detectors over the step metrics
+    # (always cheap) + the flight recorder's crash-forensics ring/snapshot.
+    detector = tel.AnomalyDetector() if (args.sentinel or args.flight_dir) \
+        else None
+    flight = tel.FlightRecorder(ring=args.flight_ring) if args.flight_dir \
+        else None
+    telemetry_jsonl = (os.path.join(args.telemetry_dir, "telemetry.jsonl")
+                       if args.telemetry_dir else None)
+
+    def _flight_dump(reason, step):
+        if flight is None:
+            return
+        path = flight.dump(args.flight_dir, reason=reason, trigger_step=step,
+                           config=cfg, telemetry_path=telemetry_jsonl)
+        print(f"[flight] dumped {reason} forensics to {path} "
+              f"(last healthy snapshot: step {flight.snapshot_step})")
 
     # donated state (DESIGN.md §13c); the loop below rebinds state
     step_fn = train_loop.jit_train_step(cfg, opt, hyper)
@@ -178,10 +208,35 @@ def main(argv=None):
             if probe is not None and args.telemetry_every and \
                     (i + 1) % args.telemetry_every == 0:
                 with tracing.host_phase("qhealth_probe", step=i):
-                    for ev in probe.probe(state.opt_state, step=i):
-                        reg.emit_event(ev)
+                    qevs = list(probe.probe(state.opt_state, step=i))
+                for ev in qevs:
+                    reg.emit_event(ev)
                 for ev in tracing.drain_phase_events():
                     reg.emit_event(ev)
+                if detector is not None:
+                    for ev in detector.observe_qhealth(qevs):
+                        reg.emit_event(ev)
+                        if flight is not None:
+                            flight.note_anomaly(ev)
+        # §16: escalate this step's metrics into anomaly events; a fatal
+        # verdict aborts the run (after the flight dump).  The snapshot is
+        # taken from the post-step state only when the step was healthy —
+        # a poisoned state must never become the resume point.
+        fatal_reason = None if np.isfinite(loss) else "nonfinite_loss"
+        if detector is not None:
+            for ev in detector.observe_step(i, metrics):
+                if reg is not None:
+                    reg.emit_event(ev)
+                if flight is not None:
+                    flight.note_anomaly(ev)
+                print(f"[anomaly] step {i} [{ev['severity']}] "
+                      f"{ev['reason']} value={ev['value']:.4g}")
+                if ev["severity"] == "fatal" and fatal_reason is None:
+                    fatal_reason = ev["reason"]
+        if flight is not None:
+            flight.record(i, metrics, wall_s=dt)
+            if fatal_reason is None:
+                flight.snapshot(i, state)
         if i % 20 == 0 or i == args.steps - 1:
             print(f"step {i:5d} loss {loss:.4f} ({dt:.2f}s)", flush=True)
         if args.ckpt_dir and ((i + 1) % args.ckpt_every == 0 or stop["now"]):
@@ -189,8 +244,14 @@ def main(argv=None):
         if stop["now"]:
             print(f"[preempted] checkpointed at {i + 1}; exiting")
             return 0
-        if not np.isfinite(loss):
-            print("[diverged]")
+        if fatal_reason is not None:
+            print("[diverged]" if fatal_reason == "nonfinite_loss"
+                  else f"[fatal anomaly] {fatal_reason}")
+            if reg is not None:
+                reg.flush(step=i)
+                reg.close()
+                tracing.set_phase_tracing(False)
+            _flight_dump(fatal_reason, i)
             return 2
     sb = opt.state_bytes(state.opt_state) if hasattr(opt, "state_bytes") else {}
     steady_ms = timer.steady_ms()

@@ -6,7 +6,9 @@ the function the dry-run lowers for the decode_32k / long_500k cells.
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
+import time
 from typing import Optional
 
 import jax
@@ -14,6 +16,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import model as M
+
+# Request-latency histogram edges (ms), log-spaced.  The registry's
+# Histogram takes PRE-BINNED counts (registry.py), so the engine bins
+# host-side: a request of latency t lands in bisect(edges, t) — one
+# overflow bin past the last edge.
+LATENCY_BIN_EDGES_MS = (1.0, 3.0, 10.0, 30.0, 100.0, 300.0,
+                        1000.0, 3000.0, 10000.0)
+N_LATENCY_BINS = len(LATENCY_BIN_EDGES_MS) + 1
 
 
 @dataclasses.dataclass
@@ -30,9 +40,13 @@ class ServeEngine:
         self.params = params
         self.scfg = serve_cfg
         # Optional telemetry (DESIGN.md §14): request / prompt-token /
-        # generated-token counters on the serving surface.  None = no
+        # generated-token counters, a per-request latency histogram and a
+        # generated-tokens/s gauge on the serving surface.  None = no
         # telemetry, no overhead.
         self.registry = registry
+        # cumulative latency bins: observe_counts REPLACES the histogram
+        # value, so the engine owns the running counts
+        self._lat_counts = np.zeros((N_LATENCY_BINS,), np.int64)
 
         def _prefill(params, tokens):
             return M.prefill(cfg, params, tokens, max_len=serve_cfg.max_len)
@@ -42,6 +56,17 @@ class ServeEngine:
 
         self._prefill = jax.jit(_prefill)
         self._decode = jax.jit(_decode)
+
+    def _observe_request(self, n_requests: int, n_tokens: int,
+                         wall_s: float) -> None:
+        self._lat_counts[bisect.bisect(LATENCY_BIN_EDGES_MS,
+                                       wall_s * 1e3)] += n_requests
+        self.registry.histogram("serve/latency_ms",
+                                n_bins=N_LATENCY_BINS).observe_counts(
+                                    self._lat_counts)
+        if n_tokens and wall_s > 0:
+            self.registry.gauge("serve/tokens_per_s").set(
+                n_tokens / wall_s)
 
     def _sample(self, logits, key):
         if self.scfg.temperature <= 0.0:
@@ -65,9 +90,12 @@ class ServeEngine:
         if self.registry is not None:
             self.registry.counter("serve/requests").inc(B)
             self.registry.counter("serve/prompt_tokens").inc(B * P)
+        t0 = time.perf_counter()
         if max_new_tokens == 0:
             # the prefill-sampled token belongs to position P; emitting it
             # would return shape (B, 1) for a 0-token request
+            if self.registry is not None:
+                self._observe_request(B, 0, time.perf_counter() - t0)
             return np.zeros((B, 0), np.int32)
         key = jax.random.PRNGKey(self.scfg.seed)
         logits, caches = self._prefill(self.params, jnp.asarray(prompts))
@@ -81,7 +109,10 @@ class ServeEngine:
                                           jnp.asarray(P + i, jnp.int32))
             tok = self._sample(logits[:, 0], k)
             out.append(tok)
+        res = np.asarray(jnp.stack(out, axis=1))   # blocks on the device
         if self.registry is not None:
             self.registry.counter("serve/generated_tokens").inc(
                 B * max_new_tokens)
-        return np.asarray(jnp.stack(out, axis=1))
+            self._observe_request(B, B * max_new_tokens,
+                                  time.perf_counter() - t0)
+        return res

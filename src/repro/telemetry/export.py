@@ -38,9 +38,14 @@ EVENT_FIELDS = {
     # per-segment quantization health (qhealth.py)
     "qhealth": ("target", "segment", "slot", "saturation_fraction",
                 "util_hist", "util_fraction", "absmax_mean", "absmax_drift"),
+    # detector escalation (sentinel.py, DESIGN.md §16): a watched signal
+    # crossed its threshold — reason names the detector, severity is one
+    # of ANOMALY_SEVERITIES, value is the offending measurement
+    "anomaly": ("reason", "severity", "value"),
 }
 
 METRIC_TYPES = ("counter", "gauge", "histogram")
+ANOMALY_SEVERITIES = ("warn", "error", "fatal")
 
 
 def validate_event(ev: Any) -> list:
@@ -69,6 +74,10 @@ def validate_event(ev: Any) -> list:
             errs.append("qhealth util_hist must be a list of bin counts")
     if kind == "trace" and not isinstance(ev.get("phases"), list):
         errs.append("trace phases must be a list")
+    if kind == "anomaly" and "severity" in ev and \
+            ev.get("severity") not in ANOMALY_SEVERITIES:
+        errs.append(f"anomaly severity {ev.get('severity')!r} not in "
+                    f"{ANOMALY_SEVERITIES}")
     return errs
 
 
@@ -172,6 +181,11 @@ def append_json_trajectory(path: str, entry: dict,
     entry = dict(entry)
     for k, v in (defaults or {}).items():
         entry.setdefault(k, v)
+    # Every trajectory entry carries a git_sha (it's a dedupe key): entries
+    # written outside a git checkout — or by callers that couldn't resolve
+    # one (detached/missing .git) — are stamped "unknown" rather than the
+    # writer raising or silently dropping the key.
+    entry.setdefault("git_sha", "unknown")
     data = {"entries": []}
     if os.path.exists(path):
         try:

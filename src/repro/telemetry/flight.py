@@ -1,0 +1,180 @@
+"""Flight recorder: a crash forensics ring + on-trigger dump (§16).
+
+Black-box recorder for training runs: a host-side ring buffer keeps the
+last K steps' compact metrics (loss, grad norm, sentinel counters, step
+wall time — plain floats, no device buffers), and a one-deep snapshot
+slot holds a host copy of the most recent *healthy* ``TrainState``.  On
+an anomaly trigger — fatal detector event or nonfinite-loss crash — the
+recorder dumps a forensic bundle:
+
+    <dump_dir>/
+      flight.json          # schema, trigger reason/step, metrics ring,
+                           # anomaly timeline, config hash, git sha,
+                           # telemetry JSONL tail
+      state/step_NNNN/     # the last healthy TrainState in the ordinary
+                           # checkpoint format (train/checkpoint.py):
+                           # arena codes + absmax, masters, RNG key, step
+
+The state bundle reuses the elastic checkpoint machinery verbatim, so a
+dump restores exactly like any checkpoint — onto any mesh — and a run
+resumed from it replays the step before the blow-up bit-exactly
+(tests/test_sentinel.py pins this).  Because the train step donates its
+input state, the snapshot is taken from the *output* state after each
+healthy step (the donated input buffer is dead); an unhealthy step's
+output is deliberately never snapshotted.
+
+Everything is plain host Python: a run without a recorder constructs
+nothing and pays nothing.
+"""
+from __future__ import annotations
+
+import collections
+import hashlib
+import json
+import os
+import subprocess
+from typing import Any, Optional
+
+import jax
+
+from repro.train import checkpoint as _ckpt
+
+FLIGHT_SCHEMA = "repro.flight.v1"
+
+
+def _git_sha() -> str:
+    """Current commit (best-effort; "unknown" outside a usable checkout)."""
+    try:
+        out = subprocess.run(["git", "rev-parse", "--short", "HEAD"],
+                             capture_output=True, text=True, timeout=10)
+        sha = out.stdout.strip()
+        return sha if out.returncode == 0 and sha else "unknown"
+    except (OSError, subprocess.SubprocessError):
+        return "unknown"
+
+
+def config_hash(config: Any) -> str:
+    """Stable content hash of a config object (repr-based: dataclass
+    reprs list every field, so any hyperparameter change moves the hash)."""
+    return hashlib.sha256(repr(config).encode()).hexdigest()[:16]
+
+
+def _scalarize(metrics: dict) -> dict:
+    """Host-float view of a step metrics dict (drops non-scalars)."""
+    out = {}
+    for k, v in metrics.items():
+        try:
+            out[k] = float(v)
+        except (TypeError, ValueError):
+            continue
+    return out
+
+
+class FlightRecorder:
+    """Ring of recent step metrics + last-healthy-state snapshot.
+
+        fr = FlightRecorder(ring=64)
+        for i in range(steps):
+            state, metrics = step_fn(state, batch)
+            fr.record(i, metrics, wall_s=dt)
+            if <healthy>:
+                fr.snapshot(i, state)       # host copy of the NEW state
+            else:
+                fr.dump(out_dir, reason="nonfinite_loss", trigger_step=i)
+
+    ``snapshot_every`` thins the device_get cost for long healthy runs
+    (the snapshot then lags up to that many steps — still a valid resume
+    point, just an earlier one).
+    """
+
+    def __init__(self, ring: int = 64, snapshot_every: int = 1):
+        self.ring = int(ring)
+        self.snapshot_every = max(1, int(snapshot_every))
+        self._ring: collections.deque = collections.deque(maxlen=self.ring)
+        self._snap_step: Optional[int] = None
+        self._snap_state: Any = None
+        self.anomalies: list = []
+
+    # ------------------------------------------------------------ record
+    def record(self, step: int, metrics: dict, **extra) -> None:
+        """Append one step's compact metrics to the ring (host floats)."""
+        row = {"step": int(step)}
+        row.update(_scalarize(metrics))
+        row.update(_scalarize(extra))
+        self._ring.append(row)
+
+    def snapshot(self, step: int, state: Any) -> None:
+        """Retain a host copy of ``state`` as the last healthy resume
+        point.  Call AFTER the step's health verdict, with the step's
+        OUTPUT state (the donated input is dead)."""
+        if step % self.snapshot_every:
+            return
+        self._snap_step = int(step)
+        self._snap_state = jax.device_get(state)
+
+    def note_anomaly(self, event: dict) -> None:
+        self.anomalies.append(dict(event))
+
+    @property
+    def snapshot_step(self) -> Optional[int]:
+        return self._snap_step
+
+    # -------------------------------------------------------------- dump
+    def dump(self, dump_dir: str, *, reason: str, trigger_step: int,
+             config: Any = None, telemetry_path: Optional[str] = None,
+             tail: int = 50) -> str:
+        """Write the forensic bundle; returns ``dump_dir``.
+
+        ``telemetry_path``: the run's telemetry JSONL — its last ``tail``
+        events are embedded so the dump is self-contained even if the
+        telemetry dir is lost."""
+        os.makedirs(dump_dir, exist_ok=True)
+        if self._snap_state is not None:
+            _ckpt.save(os.path.join(dump_dir, "state"), self._snap_step,
+                       self._snap_state)
+        jsonl_tail: list = []
+        if telemetry_path and os.path.exists(telemetry_path):
+            with open(telemetry_path) as f:
+                lines = [ln.strip() for ln in f if ln.strip()]
+            for ln in lines[-int(tail):]:
+                try:
+                    jsonl_tail.append(json.loads(ln))
+                except json.JSONDecodeError:
+                    jsonl_tail.append({"unparsed": ln})
+        manifest = {
+            "schema": FLIGHT_SCHEMA,
+            "reason": reason,
+            "trigger_step": int(trigger_step),
+            "snapshot_step": self._snap_step,
+            "git_sha": _git_sha(),
+            "config_hash": config_hash(config) if config is not None else None,
+            "ring": list(self._ring),
+            "anomalies": list(self.anomalies),
+            "jsonl_tail": jsonl_tail,
+        }
+        with open(os.path.join(dump_dir, "flight.json"), "w") as f:
+            json.dump(manifest, f, indent=2)
+        return dump_dir
+
+
+def load_dump(dump_dir: str) -> dict:
+    """The ``flight.json`` manifest of a dump (raises if absent/invalid)."""
+    with open(os.path.join(dump_dir, "flight.json")) as f:
+        manifest = json.load(f)
+    if manifest.get("schema") != FLIGHT_SCHEMA:
+        raise ValueError(f"{dump_dir}: schema {manifest.get('schema')!r}, "
+                         f"want {FLIGHT_SCHEMA!r}")
+    return manifest
+
+
+def restore_state(dump_dir: str, template: Any,
+                  shardings: Optional[Any] = None) -> tuple:
+    """``(snapshot_step, state)`` from a dump's state bundle — the last
+    healthy TrainState, restored elastically like any checkpoint."""
+    manifest = load_dump(dump_dir)
+    step = manifest.get("snapshot_step")
+    if step is None:
+        raise ValueError(f"{dump_dir}: dump carries no state snapshot")
+    state = _ckpt.restore(os.path.join(dump_dir, "state"), step, template,
+                          shardings)
+    return int(step), state

@@ -176,7 +176,13 @@ class StepTimer:
         # computed against the window BEFORE this step
         if len(self.times) > self.window:
             w = np.array(self.times[-self.window:-1])
-            self.straggler_z = float((dt - w.mean()) / (w.std() + 1e-9))
+            std = float(w.std())
+            # A zero-variance window has no scale to judge deviation
+            # against — the epsilon-divide made any jump look like a
+            # billions-sigma straggler (or NaN).  Report 0.0: "no
+            # evidence", not "infinite evidence".
+            self.straggler_z = (float((dt - w.mean()) / std)
+                                if std > 0.0 else 0.0)
         self.times.append(dt)
         return dt
 

@@ -129,6 +129,12 @@ def make_train_step(cfg, optimizer, hyper: TrainHyper = TrainHyper(),
     if "materialize_params" in inspect.signature(
             optimizer.apply).parameters:
         defer_kw["materialize_params"] = False
+    # Numerics sentinel (DESIGN.md §16): static — when on, apply() returns
+    # (params, state, health) and the step surfaces the HealthFlags counts
+    # as sent_* metrics; when off the step lowers byte-identically to a
+    # sentinel-free build (the train_step.sentinel_invariant contract).
+    sentinel_on = bool(getattr(getattr(optimizer, "cfg", None),
+                               "sentinel", False))
 
     def compute_grads(params, batch):
         if hyper.microbatches <= 1:
@@ -216,9 +222,18 @@ def make_train_step(cfg, optimizer, hyper: TrainHyper = TrainHyper(),
         from repro.kernels import ops as kops
         dispatch0 = kops.fused_update_count()
         with _tracing.annotate("optimizer_update"):
-            _, new_opt = optimizer.apply(grads, state.opt_state, lr=lr,
-                                         param_dtype=param_dtype, **defer_kw)
+            out = optimizer.apply(grads, state.opt_state, lr=lr,
+                                  param_dtype=param_dtype, **defer_kw)
+        health = None
+        if sentinel_on:
+            _, new_opt, health = out
+        else:
+            _, new_opt = out
         metrics = {"loss": loss, "grad_norm": gnorm, **mx}
+        if health is not None:
+            from repro.kernels import fused_update as kfu
+            for i, nm in enumerate(kfu.HEALTH_SLOTS):
+                metrics[f"sent_{nm}"] = health[i]
         # Counted at trace time => a constant under jit: how many fused
         # optimizer dispatches the compiled step bakes in.  1 per state-
         # format arena with the pooled dispatch (DESIGN.md §10), O(#leaves)
@@ -327,6 +342,26 @@ _contracts.register(
         {k: low.text for k, low in pair.items()}, compare_aliases_only=True),
     doc="overlap_buckets 1 vs K restructures dispatch but must never cost "
         "a donated in-place arena (§13c)")
+
+
+def _sentinel_invariant(pair, cell):
+    """Sentinel zero-overhead contract (§16): the off default and an
+    explicit sentinel=False must lower to byte-identical StableHLO (the
+    feature costs nothing when off), and turning it on may only add the
+    health outputs — the donated in-place arena aliasing set is
+    unchanged."""
+    off = {k: low.text for k, low in pair.items() if k != "on"}
+    ok, detail = _contracts.lowering_invariant(off)
+    if not ok:
+        return False, f"sentinel-off not byte-identical: {detail}"
+    return _contracts.lowering_invariant(
+        {k: low.text for k, low in pair.items()}, compare_aliases_only=True)
+
+
+_contracts.register(
+    "train_step.sentinel_invariant", "pair:sentinel", _sentinel_invariant,
+    doc="sentinel off lowers byte-identically; on preserves the donation "
+        "aliasing set (§16)")
 
 
 def init_train_state(cfg, optimizer, key) -> tuple[TrainState, Pytree]:

@@ -1,0 +1,316 @@
+"""Numerics sentinel + flight recorder + run inspector (DESIGN.md §16).
+
+Pins the observability tentpole end to end: the in-graph health counts
+(bit-exact updates with the sentinel on, correct slot attribution for
+injected NaNs), the host-side anomaly detectors, the flight-recorder
+forensic dump (checkpoint-format bundle, bit-exact resume on the step
+before the blow-up — pooled AND 4-device ZeRO-1), and the inspector's
+exit-code contract over clean / anomalous / malformed artifacts.
+"""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from helpers import assert_trees_equal, mesh_of, tiny_cfg, tiny_pipe
+from repro import telemetry as tel
+from repro.core.optim import make_optimizer
+from repro.kernels import fused_update as kfu
+from repro.telemetry import inspect as insp
+from repro.train import loop as L
+
+
+# ------------------------------------------------------- in-graph health
+def _params():
+    key = jax.random.PRNGKey(7)
+    return {"a": jax.random.normal(key, (3000,)),
+            "b": jax.random.normal(jax.random.fold_in(key, 1), (64, 48))}
+
+
+def _opt(**kw):
+    return make_optimizer("adam8", lr=1e-2, min_8bit_size=256,
+                          override_32bit=lambda p: False, **kw)
+
+
+def test_sentinel_health_clean_run_and_bit_exact_params():
+    """Sentinel on: apply returns (params, state, health); the params and
+    state are BIT-EXACT vs sentinel off, and a clean run counts zero in
+    every nonfinite/overflow slot."""
+    params, grads = _params(), jax.tree_util.tree_map(
+        lambda p: p * 0.01, _params())
+    p_off, s_off = _opt().apply(grads, _opt().init(params))
+    p_on, s_on, health = _opt(sentinel=True).apply(
+        grads, _opt(sentinel=True).init(params))
+    assert_trees_equal(p_on, p_off)
+    assert_trees_equal(s_on.arena, s_off.arena)
+    h = np.asarray(jax.device_get(health))
+    assert h.shape == (kfu.N_HEALTH,)
+    for slot in ("nonfinite_grad", "nonfinite_update", "absmax_overflow_m",
+                 "absmax_overflow_r"):
+        assert h[kfu.HEALTH_SLOTS.index(slot)] == 0.0, (slot, h)
+
+
+def test_sentinel_health_counts_injected_nan():
+    """A NaN planted in one grad element is counted in nonfinite_grad (and
+    poisons its block's update => nonfinite_update fires too)."""
+    params = _params()
+    grads = jax.tree_util.tree_map(lambda p: p * 0.01, params)
+    grads["a"] = grads["a"].at[123].set(jnp.nan)
+    opt = _opt(sentinel=True)
+    _, _, health = opt.apply(grads, opt.init(params))
+    h = np.asarray(jax.device_get(health))
+    assert h[kfu.HEALTH_SLOTS.index("nonfinite_grad")] >= 1.0
+    assert h[kfu.HEALTH_SLOTS.index("nonfinite_update")] >= 1.0
+
+
+# ------------------------------------------------------ anomaly detector
+def test_detector_nonfinite_loss_is_fatal():
+    det = tel.AnomalyDetector()
+    evs = det.observe_step(3, {"loss": float("nan"), "grad_norm": 1.0})
+    assert [e["reason"] for e in evs] == ["nonfinite_loss"]
+    assert evs[0]["severity"] == "fatal" and evs[0]["step"] == 3
+    assert tel.validate_event(evs[0]) == []
+    assert det.worst_severity() == "fatal"
+
+
+def test_detector_sentinel_counts_escalate():
+    det = tel.AnomalyDetector()
+    evs = det.observe_step(1, {"loss": 1.0, "grad_norm": 1.0,
+                               "sent_nonfinite_grad": 2.0,
+                               "sent_absmax_overflow_m": 1.0})
+    reasons = {e["reason"]: e for e in evs}
+    assert reasons["sentinel_nonfinite"]["severity"] == "fatal"
+    assert reasons["sentinel_nonfinite"]["value"] == 2.0
+    assert reasons["absmax_overflow"]["severity"] == "error"
+    for ev in evs:
+        assert tel.validate_event(ev) == [], ev
+
+
+def test_detector_loss_spike_vs_trailing_window():
+    det = tel.AnomalyDetector(window=5, loss_z=4.0)
+    for i in range(5):
+        assert det.observe_step(i, {"loss": 1.0 + 0.01 * (i % 2),
+                                    "grad_norm": 1.0}) == []
+    evs = det.observe_step(5, {"loss": 100.0, "grad_norm": 1.0})
+    assert any(e["reason"] == "loss_spike" for e in evs)
+
+
+def test_detector_zero_variance_loss_window_is_quiet():
+    """A perfectly flat loss window must not divide by zero: the z-score
+    convention matches StepTimer (0.0 == no evidence)."""
+    det = tel.AnomalyDetector(window=5, loss_z=4.0)
+    for i in range(5):
+        det.observe_step(i, {"loss": 1.0, "grad_norm": 1.0})
+    evs = det.observe_step(5, {"loss": 1.0, "grad_norm": 1.0})
+    assert evs == []
+
+
+def test_detector_gnorm_spike_pclip_crosscheck():
+    det = tel.AnomalyDetector(window=5, gnorm_factor=10.0)
+    for i in range(5):
+        det.observe_step(i, {"loss": 1.0, "grad_norm": 1.0})
+    # clip engaged (scale < 1): spike was absorbed -> warn
+    evs = det.observe_step(5, {"loss": 1.0, "grad_norm": 50.0,
+                               "pclip_scale": 0.2})
+    spike = [e for e in evs if e["reason"] == "gnorm_spike"]
+    assert spike and spike[0]["severity"] == "warn"
+    # no clip in play -> error
+    det2 = tel.AnomalyDetector(window=5, gnorm_factor=10.0)
+    for i in range(5):
+        det2.observe_step(i, {"loss": 1.0, "grad_norm": 1.0})
+    evs2 = det2.observe_step(5, {"loss": 1.0, "grad_norm": 50.0})
+    spike2 = [e for e in evs2 if e["reason"] == "gnorm_spike"]
+    assert spike2 and spike2[0]["severity"] == "error"
+
+
+def test_detector_qhealth_escalation():
+    det = tel.AnomalyDetector(qhealth_edge=0.05)
+    evs = det.observe_qhealth([
+        # healthy segment: block-level saturation is ~1.0 by construction
+        # (absmax puts every block max on the top code) and MUST NOT fire;
+        # element-level edge fraction ~1/block_size stays below threshold
+        {"kind": "qhealth", "step": 2, "target": "arena", "segment": "b",
+         "slot": "m", "saturation_fraction": 1.0,
+         "edge_code_fraction": 1.0 / 256},
+        # clipping segment: element-level edge fraction way over 2x
+        {"kind": "qhealth", "step": 2, "target": "arena", "segment": "a",
+         "slot": "m", "saturation_fraction": 1.0,
+         "edge_code_fraction": 0.5},
+        # dynamic-range blow-up precursor: absmax 50x the EMA baseline
+        {"kind": "qhealth", "step": 2, "target": "arena", "segment": "c",
+         "slot": "r", "edge_code_fraction": 0.0, "absmax_drift": 50.0},
+    ])
+    assert len(evs) == 2
+    assert evs[0]["reason"] == "qhealth_saturation"
+    assert evs[0]["severity"] == "error"      # > 2x edge threshold
+    assert "edge_code_fraction" in evs[0]["detail"]
+    assert evs[1]["severity"] == "warn"
+    assert "absmax_drift" in evs[1]["detail"]
+    for ev in evs:
+        assert tel.validate_event(ev) == []
+
+
+# --------------------------------------------- anomaly-injection e2e
+def _run_to_blowup(opt, tmp_path, tag):
+    """Train with an absurd lr until a fatal anomaly fires; dump the
+    flight bundle.  Returns (cfg, pipe, blowup step, dump dir, last
+    healthy host state, blowup metrics)."""
+    cfg = tiny_cfg()
+    pipe = tiny_pipe(vocab_size=cfg.vocab_size)
+    step_fn = L.jit_train_step(cfg, opt)
+    state, _ = L.init_train_state(cfg, opt, jax.random.PRNGKey(0))
+    det = tel.AnomalyDetector()
+    fr = tel.FlightRecorder(ring=8)
+    last_healthy = None
+    for i in range(40):
+        batch = {k: jnp.asarray(v) for k, v in pipe.batch_at(i).items()}
+        state, m = step_fn(state, batch)
+        evs = det.observe_step(i, m)
+        for ev in evs:
+            fr.note_anomaly(ev)
+        fr.record(i, m)
+        if any(e["severity"] == "fatal" for e in evs):
+            dump = fr.dump(str(tmp_path / f"dump_{tag}"),
+                           reason=evs[0]["reason"], trigger_step=i,
+                           config=cfg)
+            assert fr.snapshot_step == i - 1
+            return cfg, pipe, i, dump, last_healthy, m
+        fr.snapshot(i, state)
+        last_healthy = jax.device_get(state)
+    pytest.fail("absurd lr did not produce a fatal anomaly in 40 steps")
+
+
+def _check_blowup_forensics(opt, tmp_path, tag):
+    cfg, pipe, k, dump, last_healthy, m_blow = _run_to_blowup(
+        opt, tmp_path, tag)
+    # the bundle is self-describing and schema-valid
+    manifest = tel.load_dump(dump)
+    assert manifest["trigger_step"] == k
+    assert manifest["snapshot_step"] == k - 1
+    assert manifest["config_hash"] == tel.config_hash(cfg)
+    assert [r["step"] for r in manifest["ring"]][-1] == k
+    assert manifest["anomalies"], "dump recorded no anomalies"
+    for ev in manifest["anomalies"]:
+        assert tel.validate_event(ev) == [], ev
+    # restore is bit-exact vs the live state on the step before blow-up
+    state0, _ = L.init_train_state(cfg, opt, jax.random.PRNGKey(0))
+    template = jax.eval_shape(lambda s: s, state0)
+    snap_step, restored = tel.restore_state(dump, template)
+    assert snap_step == k - 1
+    assert_trees_equal(jax.device_get(restored), last_healthy)
+    # ...and replaying the blow-up step reproduces it bit-for-bit
+    step_fn = L.jit_train_step(cfg, opt)
+    batch = {kk: jnp.asarray(v) for kk, v in pipe.batch_at(k).items()}
+    _, m_replay = step_fn(restored, batch)
+    np.testing.assert_array_equal(np.asarray(m_replay["loss"]),
+                                  np.asarray(m_blow["loss"]))
+    # the inspector renders the dump and exits nonzero (anomalies)
+    assert insp.main(["--flight", dump]) == insp.EXIT_ANOMALIES
+
+
+def test_anomaly_injection_e2e_pooled(tmp_path):
+    opt = make_optimizer("adam8", lr=1e18, min_8bit_size=256,
+                         override_32bit=lambda p: False, sentinel=True)
+    _check_blowup_forensics(opt, tmp_path, "pooled")
+
+
+def test_anomaly_injection_e2e_zero1(tmp_path):
+    mesh = mesh_of(4)
+    opt = make_optimizer("adam8", lr=1e18, min_8bit_size=256,
+                         override_32bit=lambda p: False, sentinel=True,
+                         mesh=mesh, partition=True, partition_shards=4)
+    _check_blowup_forensics(opt, tmp_path, "zero1")
+
+
+# --------------------------------------------------------- flight basics
+def test_flight_ring_is_bounded_and_scalarized():
+    fr = tel.FlightRecorder(ring=3)
+    for i in range(10):
+        fr.record(i, {"loss": jnp.float32(i), "junk": jnp.zeros((4,))},
+                  wall_s=0.1)
+    assert [r["step"] for r in fr._ring] == [7, 8, 9]
+    assert fr._ring[-1]["loss"] == 9.0
+    assert "junk" not in fr._ring[-1]        # non-scalars dropped
+
+
+def test_flight_dump_without_snapshot(tmp_path):
+    fr = tel.FlightRecorder()
+    fr.record(0, {"loss": 1.0})
+    d = fr.dump(str(tmp_path / "d"), reason="test", trigger_step=0)
+    manifest = tel.load_dump(d)
+    assert manifest["snapshot_step"] is None
+    with pytest.raises(ValueError, match="no state snapshot"):
+        tel.restore_state(d, template=None)
+
+
+def test_flight_jsonl_tail_embedded(tmp_path):
+    jl = tmp_path / "telemetry.jsonl"
+    rows = [{"kind": "phase", "schema": tel.SCHEMA, "step": i,
+             "phase": "step", "wall_s": 0.1} for i in range(5)]
+    jl.write_text("".join(json.dumps(r) + "\n" for r in rows))
+    fr = tel.FlightRecorder()
+    d = fr.dump(str(tmp_path / "d"), reason="t", trigger_step=4,
+                telemetry_path=str(jl), tail=3)
+    manifest = tel.load_dump(d)
+    assert [e["step"] for e in manifest["jsonl_tail"]] == [2, 3, 4]
+
+
+# ----------------------------------------------------------- inspector
+def _write_run(dirpath, events):
+    os.makedirs(dirpath, exist_ok=True)
+    path = os.path.join(dirpath, "telemetry.jsonl")
+    with open(path, "w") as f:
+        for ev in events:
+            f.write(json.dumps({"schema": tel.SCHEMA, **ev}) + "\n")
+    return dirpath
+
+
+def _clean_events():
+    return [
+        {"kind": "metric", "step": 9, "name": "train/loss",
+         "type": "gauge", "value": 2.5},
+        {"kind": "phase", "step": 1, "phase": "step", "wall_s": 0.2},
+        {"kind": "trace", "step": 0,
+         "phases": [{"phase": "optimizer_update", "dispatches": 3,
+                     "trace_s": 0.01}]},
+        {"kind": "qhealth", "step": 5, "target": "arena", "segment": "a",
+         "slot": "m", "saturation_fraction": 0.01, "util_hist": [1, 2],
+         "util_fraction": 0.5, "absmax_mean": 0.1, "absmax_drift": 1.0},
+    ]
+
+
+def test_inspector_exit_codes(tmp_path):
+    clean = _write_run(str(tmp_path / "clean"), _clean_events())
+    assert insp.main([clean]) == insp.EXIT_CLEAN
+
+    anom = _write_run(str(tmp_path / "anom"), _clean_events() + [
+        {"kind": "anomaly", "step": 7, "reason": "loss_spike",
+         "severity": "warn", "value": 9.0}])
+    assert insp.main([anom]) == insp.EXIT_ANOMALIES
+
+    bad = _write_run(str(tmp_path / "bad"), [
+        {"kind": "anomaly", "step": 7, "reason": "x",
+         "severity": "catastrophic", "value": 1.0}])
+    assert insp.main([bad]) == insp.EXIT_SCHEMA
+    assert insp.main([str(tmp_path / "nonexistent")]) == insp.EXIT_SCHEMA
+
+
+def test_inspector_validate_subcommand(tmp_path):
+    """Satellite: export.validate_jsonl exposed as an exit-coded CLI."""
+    clean = _write_run(str(tmp_path / "clean"), _clean_events())
+    assert insp.main(["--validate", clean]) == insp.EXIT_CLEAN
+    bad = _write_run(str(tmp_path / "bad"),
+                     [{"kind": "metric", "step": 0}])
+    assert insp.main(["--validate", bad]) == insp.EXIT_SCHEMA
+
+
+def test_inspector_diff(tmp_path):
+    a = _write_run(str(tmp_path / "a"), _clean_events())
+    b = _write_run(str(tmp_path / "b"), _clean_events() + [
+        {"kind": "anomaly", "step": 3, "reason": "gnorm_spike",
+         "severity": "error", "value": 12.0}])
+    assert insp.main(["--diff", a, a]) == insp.EXIT_CLEAN
+    assert insp.main(["--diff", a, b]) == insp.EXIT_ANOMALIES

@@ -88,6 +88,37 @@ def test_generate_capacity_check_raises():
         eng.generate(prompts, -1)
 
 
+def test_serve_telemetry_latency_and_throughput():
+    """§16 serving observability: per-request latency lands in the
+    pre-binned histogram (cumulative across calls, incl. 0-token
+    requests) and a generated-tokens/s gauge is published; every emitted
+    event is schema-valid."""
+    from repro.serve import engine as E
+    from repro.telemetry import InMemorySink, MetricRegistry, validate_event
+
+    cfg = CASES["dense"]
+    params, _ = M.init_model(cfg, jax.random.PRNGKey(0))
+    reg = MetricRegistry()
+    sink = InMemorySink()
+    reg.add_sink(sink)
+    eng = ServeEngine(cfg, params, ServeConfig(max_len=64), registry=reg)
+    prompts = np.random.RandomState(0).randint(0, 97, (3, 10)).astype(np.int32)
+    eng.generate(prompts, 6)
+    eng.generate(prompts, 0)
+
+    m = reg.metrics()
+    counts = np.asarray(m["serve/latency_ms"])
+    assert counts.shape == (E.N_LATENCY_BINS,)
+    assert counts.sum() == 6          # 3 requests per call, 2 calls
+    assert m["serve/requests"] == 6
+    assert m["serve/generated_tokens"] == 18
+    assert m["serve/tokens_per_s"] > 0.0
+    reg.flush(step=3)
+    assert sink.events, "flush emitted no events"
+    for ev in sink.events:
+        assert validate_event(ev) == [], ev
+
+
 def test_long_context_decode_small():
     """xlstm-style O(1) state: decode far past any attention window."""
     cfg = CASES["xlstm"]

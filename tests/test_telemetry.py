@@ -149,6 +149,24 @@ def test_append_json_trajectory_dedupes(tmp_path):
     assert entries == [{"bench": "a", "git_sha": "s1", "v": 9, "tag": "d"}]
 
 
+def test_append_json_trajectory_stamps_unknown_git_sha(tmp_path):
+    """Entries written without a resolvable git_sha (detached/missing
+    checkout) are stamped "unknown" — git_sha is a dedupe key and must
+    always be present (§16 satellite)."""
+    path = str(tmp_path / "B.json")
+    append_json_trajectory(path, {"bench": "a", "v": 1},
+                           dedupe_fields=("bench",))
+    with open(path) as f:
+        entries = json.load(f)["entries"]
+    assert entries[0]["git_sha"] == "unknown"
+    # an explicit sha is never clobbered
+    append_json_trajectory(path, {"bench": "b", "git_sha": "cafe", "v": 2},
+                           dedupe_fields=("bench",))
+    with open(path) as f:
+        entries = json.load(f)["entries"]
+    assert entries[1]["git_sha"] == "cafe"
+
+
 def test_bench_json_sink_routes_events(tmp_path):
     path = str(tmp_path / "B.json")
     reg = tel.MetricRegistry()
@@ -435,15 +453,32 @@ def test_step_timer_compile_split_and_straggler():
     t.record(10.0)                    # compile step
     assert t.compile_s == 10.0
     assert np.isnan(t.steady_ms())    # no steady samples yet
-    for _ in range(8):
-        t.record(0.1)
-    assert t.steady_ms() == pytest.approx(100.0)
+    # jittered steady steps, like a real clock (the exactly-constant
+    # window is pinned separately by the zero-variance regression test)
+    steady = [0.1, 0.11, 0.09, 0.1, 0.105, 0.095, 0.1, 0.11]
+    for dt in steady:
+        t.record(dt)
+    assert t.steady_ms() == pytest.approx(1e3 * np.mean(steady))
     assert not t.is_straggler
-    t.record(5.0)                     # 50x the window: straggler
+    t.record(5.0)                     # ~50x the window: straggler
     assert t.is_straggler and t.straggler_z > 3.0
     assert t.compile_s == 10.0        # unchanged by steady steps
     s = t.summary()
     assert s["compile_s"] == 10.0 and s["n_steps"] == 10
+
+
+def test_step_timer_zero_variance_window_scores_zero():
+    """A zero-variance trailing window has no scale to judge deviation
+    against: the z-score must be 0.0 ("no evidence"), not the inf/NaN an
+    epsilon divide produced (§16 satellite regression)."""
+    t = tracing.StepTimer(window=5, z_threshold=3.0)
+    t.record(1.0)                     # compile step
+    for _ in range(8):
+        t.record(0.1)                 # bit-identical steps: std == 0
+    t.record(50.0)                    # 500x jump, but no variance baseline
+    assert t.straggler_z == 0.0
+    assert np.isfinite(t.straggler_z)
+    assert not t.is_straggler
 
 
 def test_step_timer_context_manager():
