@@ -1,0 +1,166 @@
+"""Serving benchmark: paged quantized KV + continuous batching (§17).
+
+Three cell families into BENCH_speed.json:
+
+  * ``serve/kv_bytes_per_token`` at bits 16/8/4 — stored KV bytes per
+    generated token (codes + per-row absmax, all attn layers).  Gate:
+    the 4-bit cell is <= 0.30x the fp16 baseline (the paper's memory
+    win reaching inference; head_dim=64 puts the absmax overhead at
+    (32+4)/128 = 0.281x).
+  * ``serve/tokens_per_s/{continuous,static_bucket}`` — the same
+    mixed-length request stream through ``ContinuousBatchingEngine``
+    (paged 8-bit KV) vs the fixed-bucket ``ServeEngine`` (fp16 cache,
+    arrival-order buckets padded to the bucket max).  Gate: continuous
+    >= 1.5x static on the skewed stream — slots recycle the moment a
+    short request finishes instead of draining the bucket.
+  * ``serve/latency/continuous`` — p50/p99 per-request latency (ms)
+    from the timed continuous run.
+
+Both engines are warmed (jit compile paid up front) before timing.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import append_bench_json, emit
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+from repro.serve.engine import ServeConfig, ServeEngine
+from repro.serve.kvcache import PagedKVConfig, kv_bytes_per_token
+from repro.serve.scheduler import (ContinuousBatchingEngine, Request,
+                                   SchedulerConfig)
+
+BENCH_JSON = os.path.join(os.path.dirname(__file__), "..",
+                          "BENCH_speed.json")
+
+# head_dim=64 is the smallest paper-typical head at which the 4-bit row
+# (32 code bytes + 4 absmax bytes) clears the 0.30x gate
+_CFG = dict(arch_id="bench-serve", family="dense", n_layers=2, d_model=128,
+            n_heads=2, n_kv_heads=2, d_ff=128, vocab_size=211, head_dim=64,
+            compute_dtype="float32", remat="none", attn_chunk=16)
+
+
+def _mixed_stream(n_slots: int, n_rounds: int, vocab: int):
+    """Arrival-order rounds of one long + (n_slots-1) short requests: the
+    static engine pads every bucket to the long request's length."""
+    rng = np.random.RandomState(0)
+    reqs = []
+    for r in range(n_rounds):
+        for s in range(n_slots):
+            rid = r * n_slots + s
+            P = 6 if s else 10
+            n_new = 1 if s else 28
+            reqs.append(Request(rid=rid,
+                                prompt=tuple(rng.randint(0, vocab, P)
+                                             .tolist()),
+                                max_new_tokens=n_new))
+    return reqs
+
+
+def bench_kv_bytes(smoke: bool = False):
+    cfg = ModelConfig(**_CFG)
+    base16 = kv_bytes_per_token(cfg, 16)
+    for bits in (16, 8, 4):
+        v = kv_bytes_per_token(cfg, bits)
+        ratio = v / base16
+        emit(f"serve/kv_bytes_per_token/b{bits}", 0.0,
+             f"{v:.0f}B {ratio:.3f}x_fp16")
+        append_bench_json(BENCH_JSON, {
+            "bench": "serve/kv_bytes_per_token", "bits": bits,
+            "smoke": smoke, "bytes_per_token": v,
+            "ratio_vs_fp16": round(ratio, 4),
+            "head_dim": cfg.head_dim, "n_kv_heads": cfg.n_kv_heads,
+            "n_layers": cfg.n_layers})
+        if bits == 4:
+            assert ratio <= 0.30, (
+                f"4-bit KV bytes/token gate: {ratio:.3f}x fp16 > 0.30x")
+    emit("serve/kv_bytes_per_token/json", 0.0, os.path.abspath(BENCH_JSON))
+
+
+def _run_static(eng, reqs, n_slots):
+    """Fixed-bucket baseline: arrival-order buckets of ``n_slots``, padded
+    to the bucket's max prompt length, run for the bucket's max new-token
+    count.  Returns useful (requested) tokens produced."""
+    useful = 0
+    for i in range(0, len(reqs), n_slots):
+        bucket = reqs[i:i + n_slots]
+        P = max(len(r.prompt) for r in bucket)
+        n_new = max(r.max_new_tokens for r in bucket)
+        prompts = np.zeros((len(bucket), P), np.int32)
+        for j, r in enumerate(bucket):   # right-aligned in the pad bucket
+            prompts[j, P - len(r.prompt):] = r.prompt
+        eng.generate(prompts, n_new)
+        useful += sum(r.max_new_tokens for r in bucket)
+    return useful
+
+
+def bench_throughput(smoke: bool = False):
+    cfg = ModelConfig(**_CFG)
+    params, _ = M.init_model(cfg, jax.random.PRNGKey(0))
+    n_slots = 4
+    n_rounds = 2 if smoke else 4
+    reqs = _mixed_stream(n_slots, n_rounds, cfg.vocab_size)
+    kv = PagedKVConfig(page_size=8, n_pages=32, n_slots=n_slots,
+                       max_pages_per_seq=8, kv_bits=8)
+    cont = ContinuousBatchingEngine(cfg, params, SchedulerConfig(kv=kv))
+    static = ServeEngine(cfg, params, ServeConfig(max_len=64,
+                                                  temperature=0.0))
+
+    # warmup: pay every jit compile (both engines) outside the timed run
+    cont.serve(reqs)
+    _run_static(static, reqs, n_slots)
+
+    t0 = time.perf_counter()
+    cont._latencies_ms.clear()
+    out = cont.serve(reqs)
+    t_cont = time.perf_counter() - t0
+    n_useful = sum(len(v) for v in out.values())
+    tps_cont = n_useful / t_cont
+
+    t0 = time.perf_counter()
+    useful_static = _run_static(static, reqs, n_slots)
+    t_static = time.perf_counter() - t0
+    tps_static = useful_static / t_static
+
+    ratio = tps_cont / tps_static
+    emit("serve/tokens_per_s/continuous", t_cont / n_useful * 1e6,
+         f"{tps_cont:.1f}tok/s")
+    emit("serve/tokens_per_s/static_bucket", t_static / useful_static * 1e6,
+         f"{tps_static:.1f}tok/s")
+    emit("serve/tokens_per_s/ratio", 0.0, f"{ratio:.2f}x")
+    lat = cont.latency_percentiles()
+    emit("serve/latency/continuous", 0.0,
+         f"p50={lat['p50_ms']:.1f}ms p99={lat['p99_ms']:.1f}ms")
+    common = {"smoke": smoke, "n_streams": len(reqs), "n_slots": n_slots,
+              "bits": kv.kv_bits, "page_size": kv.page_size}
+    append_bench_json(BENCH_JSON, {
+        "bench": "serve/tokens_per_s/continuous",
+        "tokens_per_s": round(tps_cont, 2), **common})
+    append_bench_json(BENCH_JSON, {
+        "bench": "serve/tokens_per_s/static_bucket",
+        "tokens_per_s": round(tps_static, 2), "bits": 16,
+        **{k: v for k, v in common.items() if k != "bits"}})
+    append_bench_json(BENCH_JSON, {
+        "bench": "serve/tokens_per_s/ratio",
+        "ratio_vs_static": round(ratio, 3), **common})
+    append_bench_json(BENCH_JSON, {
+        "bench": "serve/latency/continuous",
+        "p50_ms": round(lat["p50_ms"], 2),
+        "p99_ms": round(lat["p99_ms"], 2), **common})
+    emit("serve/tokens_per_s/json", 0.0, os.path.abspath(BENCH_JSON))
+    assert ratio >= 1.5, (
+        f"continuous-batching throughput gate: {ratio:.2f}x static < 1.5x "
+        f"on the mixed-length stream")
+
+
+def main(smoke: bool = False):
+    bench_kv_bytes(smoke=smoke)
+    bench_throughput(smoke=smoke)
+
+
+if __name__ == "__main__":
+    main()

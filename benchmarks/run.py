@@ -29,6 +29,9 @@ SUITES = {
     "analyze": ("benchmarks.bench_analyze",
                 "Static VMEM budget table -> BENCH_speed.json "
                 "(DESIGN.md §15)"),
+    "serve": ("benchmarks.bench_serve",
+              "Paged quantized KV serving: bytes/token + continuous-"
+              "batching tokens/s + p50/p99 (DESIGN.md §17)"),
 }
 
 # Suites a --smoke run exercises (fast enough for CI, covers the kernels).
@@ -64,6 +67,12 @@ def main() -> None:
                          "VMEM budget table recorded to BENCH_speed.json "
                          "(headroom per kernel config), even under "
                          "--smoke (DESIGN.md §15)")
+    ap.add_argument("--serve", action="store_true",
+                    help="also run the serving suite: paged 8/4-bit KV "
+                         "bytes/token and continuous-batching vs static-"
+                         "bucket tokens/s with their gates (4-bit <= "
+                         "0.30x fp16 bytes; continuous >= 1.5x static), "
+                         "even under --smoke (DESIGN.md §17)")
     ap.add_argument("--telemetry", action="store_true",
                     help="also run the telemetry legs: the JSONL/qhealth "
                          "smoke suite (schema-validated probe artifact, "
@@ -83,6 +92,8 @@ def main() -> None:
         names.append("telemetry")
     if args.analyze and "analyze" not in names:
         names.append("analyze")
+    if args.serve and "serve" not in names:
+        names.append("serve")
     print("name,us_per_call,derived")
     for n in names:
         mod_name, desc = SUITES[n]

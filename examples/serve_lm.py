@@ -1,26 +1,48 @@
-"""Serving example: batched generation with prefill + KV-cache decode.
+"""Serving example: continuous batching over the paged 8-bit KV cache.
 
     PYTHONPATH=src python examples/serve_lm.py
+
+A mixed-length request stream runs through the slot-based scheduler
+(DESIGN.md §17): prompts admit as slots free up, KV pages are block-wise
+quantized on append, and sampling streams are per-(request, token) so
+preemption can never change the generated tokens.  The fixed-bucket
+fp16 engine (ServeEngine) remains available for equal-length batches —
+see ``repro.launch.serve`` for the A/B CLI.
 """
 import numpy as np
 import jax
 
 from repro.configs import base
 from repro.models import model as M
-from repro.serve.engine import ServeConfig, ServeEngine
+from repro.serve.kvcache import PagedKVConfig
+from repro.serve.scheduler import (ContinuousBatchingEngine, Request,
+                                   SchedulerConfig)
 
 
 def main():
     cfg = base.reduced(base.get_config("stablelm-1.6b"),
                        d_model=128, n_layers=2, vocab_size=512)
     params, _ = M.init_model(cfg, jax.random.PRNGKey(0))
-    engine = ServeEngine(cfg, params, ServeConfig(max_len=128,
-                                                  temperature=0.8, seed=1))
-    prompts = np.random.RandomState(0).randint(
-        0, cfg.vocab_size, (4, 16)).astype(np.int32)
-    out = engine.generate(prompts, max_new_tokens=24)
-    for i, row in enumerate(out):
-        print(f"request {i}: prompt={prompts[i][:6]}... -> {row.tolist()}")
+    rng = np.random.RandomState(0)
+    requests = [
+        Request(rid=i,
+                prompt=tuple(rng.randint(0, cfg.vocab_size,
+                                         [16, 8, 24, 12][i % 4]).tolist()),
+                max_new_tokens=[24, 6, 12, 18][i % 4])
+        for i in range(8)
+    ]
+    engine = ContinuousBatchingEngine(
+        cfg, params,
+        SchedulerConfig(kv=PagedKVConfig(page_size=8, n_pages=64,
+                                         n_slots=4, max_pages_per_seq=8,
+                                         kv_bits=8),
+                        temperature=0.8, seed=1))
+    results = engine.serve(requests)
+    for r in requests:
+        toks = results[r.rid]
+        print(f"request {r.rid}: P={len(r.prompt):2d} "
+              f"max_new={r.max_new_tokens:2d} -> {toks.tolist()}")
+    print("latency:", engine.latency_percentiles())
 
 
 if __name__ == "__main__":

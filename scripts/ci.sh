@@ -64,3 +64,10 @@ XLA_FLAGS="--xla_force_host_platform_device_count=4 ${XLA_FLAGS:-}" \
   PYTHONPATH=src python -m benchmarks.run --smoke --only telemetry
 PYTHONPATH=src python -m repro.telemetry.inspect --validate "$TELEMETRY_RUN_DIR"
 PYTHONPATH=src python -m repro.telemetry.inspect "$TELEMETRY_RUN_DIR"
+
+# Serving leg (DESIGN.md §17): paged block-wise 8/4-bit KV cache +
+# continuous batching.  Gates: 4-bit KV bytes/token <= 0.30x the fp16
+# contiguous baseline, and continuous-batching tokens/s >= 1.5x the
+# static-bucket engine on a mixed-length stream.  Cells (bytes/token,
+# tokens/s for both engines, p50/p99 latency) land in BENCH_speed.json.
+PYTHONPATH=src python -m benchmarks.run --smoke --serve --only serve

@@ -143,6 +143,32 @@ def lower_update(algo: str, bits_m: int = 8) -> Lowering:
     return Lowering(name=f"update:{algo}-b{bits_m}", text=low.as_text())
 
 
+def lower_serve(kv_bits: int = 8) -> Lowering:
+    """Lowered jitted paged decode step (the 'serve' scope subject): tiny
+    dense config, donated cache pytree, page table + positions as inputs
+    (DESIGN.md §17)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.models import layers as mlayers
+    from repro.models import model as mm
+
+    cfg, _ = _harness()
+    params, _ = mm.init_model(cfg, jax.random.PRNGKey(0))
+    n_slots, n_pages, page = 4, 16, 8
+    caches = mm.init_paged_cache(cfg, n_slots, n_pages, page, kv_bits)
+    paged = mlayers.PagedContext(
+        jnp.zeros((n_slots, 4), jnp.int32),
+        jnp.zeros((n_slots,), jnp.int32), impl="jnp")
+    tok = jnp.zeros((n_slots, 1), jnp.int32)
+
+    def step(params, token, caches, paged):
+        return mm.paged_decode_step(cfg, params, token, caches, paged)
+
+    low = jax.jit(step, donate_argnums=(2,)).lower(params, tok, caches,
+                                                   paged)
+    return Lowering(name=f"serve:decode-b{kv_bits}", text=low.as_text())
+
+
 def _pair_cells(cells: list) -> dict:
     """Pick the matrix cells the knob-pair contracts run on."""
     by_name = {c.name: c for c in cells}
@@ -167,6 +193,7 @@ def run_contracts(cells: Optional[list] = None, *,
     to be skipped and ``allow_skips`` is False."""
     # Importing the protected modules registers their contracts.
     import repro.kernels.ops  # noqa: F401
+    import repro.serve.kvcache  # noqa: F401
     import repro.sharding.rules  # noqa: F401
     import repro.train.loop  # noqa: F401
 
@@ -196,6 +223,16 @@ def run_contracts(cells: Optional[list] = None, *,
                 if r is not None:
                     results.append(r)
                     log(str(r))
+
+    serve_contracts = contracts_for("serve")
+    for kv_bits in (8, 4):
+        low = lower_serve(kv_bits)
+        cell = Cell(low.name, "serve", (kv_bits,))
+        for spec in serve_contracts:
+            r = evaluate(spec, low, cell)
+            if r is not None:
+                results.append(r)
+                log(str(r))
 
     for scope, cell in _pair_cells(cells).items():
         if cell is None:

@@ -72,27 +72,47 @@ def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
 # cache (block = one head row of Dh values, absmax per (position, head)).
 # Halves decode-cache HBM residency; enabled per-arch via
 # cfg.kv_cache_bits == 8.  DESIGN.md §4, EXPERIMENTS.md §Perf D.
+# The k-bit row quantizer itself lives in kernels/paged_kv.py (shared with
+# the paged serving cache, DESIGN.md §17); these are the 8-bit-default
+# wrappers the contiguous cache path keeps using.
 
-def _kv_qmap():
-    from repro.core import qmap as qmap_lib
-    return jnp.asarray(qmap_lib.get_qmap("dynamic", True))
-
-
-def kv_quantize(x):
-    """x: (..., Dh) -> (codes uint8 (..., Dh), absmax f32 (...,))."""
-    cb = _kv_qmap()
-    x = x.astype(jnp.float32)
-    absmax = jnp.max(jnp.abs(x), axis=-1)
-    scale = jnp.where(absmax > 0, absmax, 1.0)
-    bounds = (cb[1:] + cb[:-1]) * 0.5
-    codes = jnp.searchsorted(bounds, x / scale[..., None],
-                             side="right").astype(jnp.uint8)
-    return codes, absmax
+def kv_quantize(x, bits: int = 8):
+    """x: (..., Dh) -> (codes uint8 (..., Dh*bits/8), absmax f32 (...,))."""
+    from repro.kernels import paged_kv
+    return paged_kv.quantize_rows(x, bits)
 
 
-def kv_dequantize(codes, absmax, dtype):
-    cb = _kv_qmap()
-    return (cb[codes.astype(jnp.int32)] * absmax[..., None]).astype(dtype)
+def kv_dequantize(codes, absmax, dtype, bits: int = 8):
+    from repro.kernels import paged_kv
+    return paged_kv.dequantize_rows(codes, absmax, dtype, bits)
+
+
+# ------------------------------------------------ paged KV serving context
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PagedContext:
+    """Per-decode-step paged-cache context (DESIGN.md §17).
+
+    page_table: (n_slots, max_pages_per_seq) int32 — physical page per
+                logical page; -1 = unallocated (gathered-but-masked).
+    positions : (n_slots,) int32 — index of the token being decoded this
+                step per slot; -1 = inactive slot (its append is dropped
+                and its attention masks every key).
+    impl      : gather-dequant kernel implementation (static; "jnp" XLA
+                oracle, "interpret"/"pallas" the Pallas kernel).
+    """
+
+    page_table: jax.Array
+    positions: jax.Array
+    impl: str = "jnp"
+
+    def tree_flatten(self):
+        return (self.page_table, self.positions), (self.impl,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, *aux)
 
 
 # ----------------------------------------------------------------- attention
@@ -203,6 +223,75 @@ def _decode_attention(q, k_cache, v_cache, cache_len):
     return out.reshape(B, 1, H, D)
 
 
+def _masked_decode_attention(q, k, v, valid):
+    """Single-position attention with an explicit per-slot validity mask.
+
+    q: (B, 1, H, D); k/v: (B, L, KV, D); valid: (B, L) bool.  Unlike
+    ``_decode_attention`` the mask is 2-D (per-slot lengths differ under
+    continuous batching) and an all-False row (inactive slot) yields zeros
+    instead of NaN — the scheduler discards those logits, but they must not
+    poison debug NaN-checks.
+    """
+    B, _, H, D = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qh = (q.reshape(B, KV, G, D) * (D ** -0.5)).astype(jnp.float32)
+    scores = jnp.einsum("bkgd,bckd->bkgc", qh, k.astype(jnp.float32))
+    m = valid[:, None, None, :]
+    neg = jnp.finfo(jnp.float32).min
+    scores = jnp.where(m, scores, neg)
+    smax = jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.where(m, jnp.exp(scores - smax), 0.0)
+    denom = jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    out = jnp.einsum("bkgc,bckd->bkgd", p / denom, v.astype(jnp.float32))
+    return out.reshape(B, 1, H, D)
+
+
+def _paged_decode_attention(q, k, v, cfg, cache, paged):
+    """Paged-KV decode (DESIGN.md §17): quantize-on-append the new k/v rows
+    into the slot's current page, then gather-dequant every table page and
+    attend under the per-slot length (and SWA window) mask.
+
+    cache: {"k_codes": (n_pages, page, KV, W), "k_absmax": (n_pages, page,
+    KV), "v_codes", "v_absmax"}; q/k/v: (B, 1, {H|KV}, Dh).
+    Returns (out (B, 1, H, Dh), new_cache).
+    """
+    from repro.kernels import paged_kv
+
+    n_pages, page = cache["k_codes"].shape[:2]
+    bits = paged_kv.bits_of(cfg.head_dim, cache["k_codes"].shape[-1])
+    pos = paged.positions                                # (B,) int32
+    active = pos >= 0
+    pos_c = jnp.maximum(pos, 0)
+    B = pos.shape[0]
+    # Destination (physical page, offset) of this step's row per slot;
+    # inactive slots are pointed out of range so the scatter drops them.
+    logical = pos_c // page
+    ppage = paged.page_table[jnp.arange(B), logical]
+    ppage = jnp.where(active & (ppage >= 0), ppage, n_pages)
+    off = pos_c % page
+    new_cache = dict(cache)
+    for name, row in (("k", k), ("v", v)):
+        new_cache[f"{name}_codes"], new_cache[f"{name}_absmax"] = \
+            paged_kv.append_rows(cache[f"{name}_codes"],
+                                 cache[f"{name}_absmax"],
+                                 row[:, 0], ppage, off, bits)
+    dt = q.dtype
+    k_all = paged_kv.gather_pages(new_cache["k_codes"],
+                                  new_cache["k_absmax"], paged.page_table,
+                                  bits=bits, dtype=dt, impl=paged.impl)
+    v_all = paged_kv.gather_pages(new_cache["v_codes"],
+                                  new_cache["v_absmax"], paged.page_table,
+                                  bits=bits, dtype=dt, impl=paged.impl)
+    L = k_all.shape[1]
+    idx = jnp.arange(L)[None, :]
+    valid = active[:, None] & (idx <= pos_c[:, None])
+    if cfg.attn_type == "swa" and cfg.window:
+        valid &= idx > (pos_c[:, None] - cfg.window)
+    out = _masked_decode_attention(q, k_all, v_all, valid)
+    return out, new_cache
+
+
 def _write_prefill_cache(buf, new):
     """Store S new kv rows into a ring buffer of physical size eff, such that
     position p lives in slot p % eff (static S)."""
@@ -215,11 +304,15 @@ def _write_prefill_cache(buf, new):
     return jax.lax.dynamic_update_slice_in_dim(buf, new, 0, axis=1)
 
 
-def apply_attention(p, x, cfg, *, positions, cache=None, cache_len=None):
+def apply_attention(p, x, cfg, *, positions, cache=None, cache_len=None,
+                    paged=None):
     """x: (B, S, d).
 
     cache=None            -> train forward, no state io.
-    cache given, S == 1   -> decode: write kv at slot (cache_len-1) % eff.
+    cache given, S == 1   -> decode: write kv at slot (cache_len-1) % eff;
+                             with ``paged`` (a PagedContext) the cache is
+                             the shared quantized page pool and per-slot
+                             positions/page tables drive append + attend.
     cache given, S > 1    -> prefill: full chunked attention + bulk cache fill.
     Returns (out, new_cache)."""
     B, S, d = x.shape
@@ -240,6 +333,10 @@ def apply_attention(p, x, cfg, *, positions, cache=None, cache_len=None):
 
     window = cfg.window if cfg.attn_type == "swa" else 0
     quant_cache = cache is not None and "k_codes" in cache
+    if paged is not None and cache is not None and S == 1:
+        out, new_cache = _paged_decode_attention(q, k, v, cfg, cache, paged)
+        out = constrain(out.reshape(B, S, H * Dh).astype(dt), "dp", None, "tp")
+        return out @ p["wo"].astype(dt), new_cache
     if cache is None:
         out = _chunked_causal_attention(q, k, v, window=window,
                                         chunk=cfg.attn_chunk)

@@ -70,15 +70,18 @@ def _init_block(key, cfg, kind: str):
     raise ValueError(kind)
 
 
-def _apply_block(p, x, cfg, kind: str, *, positions, state=None, cache_len=None):
+def _apply_block(p, x, cfg, kind: str, *, positions, state=None,
+                 cache_len=None, paged=None):
     """Returns (x_out, new_state, metrics). ``state``: layer cache for
-    decode (attn: {k,v}; recurrent kinds: cell state), or None."""
+    decode (attn: {k,v}; recurrent kinds: cell state), or None.  ``paged``:
+    layers.PagedContext during paged-KV decode (DESIGN.md §17) — only attn
+    blocks consume it; recurrent kinds keep their per-slot dense state."""
     metrics = {}
     if kind == "attn":
         h = layers.apply_norm(p["norm1"], x, cfg.norm_type)
         a_out, new_cache = layers.apply_attention(
             p["attn"], h, cfg, positions=positions, cache=state,
-            cache_len=cache_len)
+            cache_len=cache_len, paged=paged)
         if cfg.parallel_block:
             if cfg.is_moe:
                 f_out, metrics = moe.apply_moe(p["moe"], h, cfg)
@@ -177,7 +180,8 @@ def _remat_wrap(fn, cfg):
     return jax.checkpoint(fn)
 
 
-def _superblock_fwd(bp, x, cfg, positions, states=None, cache_len=None):
+def _superblock_fwd(bp, x, cfg, positions, states=None, cache_len=None,
+                    paged=None):
     """Apply one super-block. states: dict keyed like bp or None."""
     bp = constrain_block_params(bp)
     new_states, metrics_acc = {}, []
@@ -190,7 +194,7 @@ def _superblock_fwd(bp, x, cfg, positions, states=None, cache_len=None):
         # gathers/reduce-scatters (EXPERIMENTS.md §Perf C4).
         x = constrain(x, "dp", "tp", None)
         x, ns, mt = _apply_block(bp[name], x, cfg, kind, positions=positions,
-                                 state=st, cache_len=cache_len)
+                                 state=st, cache_len=cache_len, paged=paged)
         new_states[name] = ns
         if mt:
             metrics_acc.append(mt)
@@ -201,9 +205,12 @@ def _superblock_fwd(bp, x, cfg, positions, states=None, cache_len=None):
     return x, new_states, agg
 
 
-def _run_blocks(params, x, cfg, positions, caches=None, cache_len=None):
+def _run_blocks(params, x, cfg, positions, caches=None, cache_len=None,
+                paged=None):
     """Run all layers. caches: None (no state io) or pytree with leading
-    n_super dim for the scanned part + list for remainder."""
+    n_super dim for the scanned part + list for remainder.  ``paged`` (a
+    layers.PagedContext) rides into the scan body as a loop constant — the
+    page table and per-slot positions are layer-invariant."""
     metrics = {}
     decode_mode = caches is not None
 
@@ -211,7 +218,8 @@ def _run_blocks(params, x, cfg, positions, caches=None, cache_len=None):
         if decode_mode:
             def body(h, xs):
                 bp, st = xs
-                h, ns, mt = _superblock_fwd(bp, h, cfg, positions, st, cache_len)
+                h, ns, mt = _superblock_fwd(bp, h, cfg, positions, st,
+                                            cache_len, paged)
                 return h, (ns, mt)
             x, (new_scan_cache, mts) = jax.lax.scan(
                 body, x, (params["blocks"], caches["scan"]))
@@ -228,7 +236,8 @@ def _run_blocks(params, x, cfg, positions, caches=None, cache_len=None):
         new_scan_cache = []
         for i, bp in enumerate(params["blocks_list"]):
             st = caches["scan"][i] if decode_mode else None
-            x, ns, mt = _superblock_fwd(bp, x, cfg, positions, st, cache_len)
+            x, ns, mt = _superblock_fwd(bp, x, cfg, positions, st, cache_len,
+                                        paged)
             new_scan_cache.append(ns)
             metrics.update(mt)
         if not decode_mode:
@@ -243,7 +252,7 @@ def _run_blocks(params, x, cfg, positions, caches=None, cache_len=None):
             st = caches["rem"][i] if decode_mode else None
             x, ns, mt = _apply_block(bp[kind], x, cfg, kind,
                                      positions=positions, state=st,
-                                     cache_len=cache_len)
+                                     cache_len=cache_len, paged=paged)
             new_rem.append(ns)
             metrics.update(mt)
 
@@ -329,6 +338,149 @@ def decode_step(cfg, params, token, caches, pos):
     x = layers.apply_norm(params["final_norm"], x, cfg.norm_type)
     logits = emb.apply_head(params.get("head", {}), x, params["embed"], cfg)
     return logits, new_caches
+
+
+# ------------------------------------------------ paged serving (§17)
+
+def _init_paged_layer_cache(cfg, kind, n_slots, n_pages, page_size, kv_bits,
+                            n_super=None):
+    """Layer cache for the paged serving path: attn layers share one
+    quantized page pool (no batch dim — the page table maps slots to
+    pages); recurrent kinds keep per-slot dense state exactly as the
+    contiguous cache does."""
+    from repro.kernels import paged_kv
+    lead = (n_super,) if n_super else ()
+    if kind == "attn":
+        KV, Dh = cfg.n_kv_heads, cfg.head_dim
+        W = paged_kv.packed_row_width(Dh, kv_bits)
+        return {"k_codes": jnp.zeros(lead + (n_pages, page_size, KV, W),
+                                     jnp.uint8),
+                "k_absmax": jnp.zeros(lead + (n_pages, page_size, KV),
+                                      jnp.float32),
+                "v_codes": jnp.zeros(lead + (n_pages, page_size, KV, W),
+                                     jnp.uint8),
+                "v_absmax": jnp.zeros(lead + (n_pages, page_size, KV),
+                                      jnp.float32)}
+    return _init_layer_cache(cfg, kind, n_slots, page_size, n_super=n_super)
+
+
+def init_paged_cache(cfg, n_slots, n_pages, page_size, kv_bits=8):
+    """Paged serving cache pytree (same {"scan","rem"} structure as
+    ``init_cache``): per attn layer a pool of ``n_pages`` pages of
+    ``page_size`` positions, block-wise quantized to ``kv_bits`` (8-bit
+    plain / 4-bit packed codes, DESIGN.md §17)."""
+    if cfg.scan_layers and cfg.n_superblocks > 0:
+        scan_cache = {
+            f"b{i}_{kind}": _init_paged_layer_cache(
+                cfg, kind, n_slots, n_pages, page_size, kv_bits,
+                n_super=cfg.n_superblocks)
+            for i, kind in enumerate(cfg.block_pattern)}
+    else:
+        scan_cache = [
+            {f"b{i}_{kind}": _init_paged_layer_cache(
+                cfg, kind, n_slots, n_pages, page_size, kv_bits)
+             for i, kind in enumerate(cfg.block_pattern)}
+            for _ in range(cfg.n_superblocks)]
+    rem = [
+        _init_paged_layer_cache(
+            cfg, cfg.block_pattern[i % len(cfg.block_pattern)],
+            n_slots, n_pages, page_size, kv_bits)
+        for i in range(cfg.n_remainder_layers)]
+    return {"scan": scan_cache, "rem": rem}
+
+
+def paged_decode_step(cfg, params, token, caches, paged):
+    """One continuous-batching decode step over every slot.
+
+    token: (n_slots, 1) int32 (the last sampled token per slot; inactive
+    slots carry a dummy).  ``paged``: layers.PagedContext with per-slot
+    positions and the page table.  Returns (logits (n_slots, 1, V),
+    new_caches) — pages are appended in place (donate ``caches`` when
+    jitting; the serve contract audits this, DESIGN.md §17).
+    """
+    x = emb.apply_embedding(params["embed"], token, cfg)
+    positions = jnp.maximum(paged.positions, 0)[:, None]     # (B, 1)
+    x, new_caches, _ = _run_blocks(params, x, cfg, positions, caches=caches,
+                                   cache_len=None, paged=paged)
+    x = layers.apply_norm(params["final_norm"], x, cfg.norm_type)
+    logits = emb.apply_head(params.get("head", {}), x, params["embed"], cfg)
+    return logits, new_caches
+
+
+def _commit_attn_pages(cfg, paged_layer, dense_layer, table_row,
+                       prompt_len, kv_bits, lead):
+    """Quantize a batch-1 dense prefill cache's k/v rows into the slot's
+    allocated pages.  SWA dense caches are rings holding only the last
+    ``eff`` positions; exactly those rows are committed (older positions
+    are outside every future window, their pages stay zero and masked)."""
+    from repro.kernels import paged_kv
+    if "k" not in dense_layer:
+        raise ValueError("paged commit needs a 16-bit dense prefill cache "
+                         "(cfg.kv_cache_bits == 16 for the prefill config)")
+    page = paged_layer["k_codes"].shape[2 if lead else 1]
+    eff = dense_layer["k"].shape[2 if lead else 1]
+    pos = np.arange(prompt_len - min(prompt_len, eff), prompt_len)
+    ring_idx = jnp.asarray(pos % eff)
+    pids = table_row[jnp.asarray(pos // page)]
+    offs = jnp.asarray(pos % page)
+    out = dict(paged_layer)
+    for name in ("k", "v"):
+        dense = dense_layer[name]
+        rows = dense[:, 0][:, ring_idx] if lead else dense[0][ring_idx]
+        codes, absmax = paged_kv.quantize_rows(rows, kv_bits)
+        if lead:
+            out[f"{name}_codes"] = paged_layer[f"{name}_codes"].at[
+                :, pids, offs].set(codes)
+            out[f"{name}_absmax"] = paged_layer[f"{name}_absmax"].at[
+                :, pids, offs].set(absmax)
+        else:
+            out[f"{name}_codes"] = paged_layer[f"{name}_codes"].at[
+                pids, offs].set(codes)
+            out[f"{name}_absmax"] = paged_layer[f"{name}_absmax"].at[
+                pids, offs].set(absmax)
+    return out
+
+
+def commit_prefill_to_paged(cfg, paged_caches, dense_caches, slot,
+                            table_row, prompt_len, kv_bits=8):
+    """Admit one prefetched request into the paged cache (DESIGN.md §17).
+
+    ``dense_caches`` is a batch-1 ``prefill`` cache built with a 16-bit
+    contiguous config (max_len == prompt_len); its attn k/v rows are
+    quantized into the pages named by ``table_row`` ((max_pages_per_seq,)
+    int32) with the SAME row quantizer the decode append uses, and every
+    recurrent layer's state is inserted at batch row ``slot``.  Returns the
+    updated paged cache pytree (donate ``paged_caches`` when jitting).
+    """
+    def insert_slot(pg, dn, lead):
+        if lead:
+            return pg.at[:, slot].set(dn[:, 0].astype(pg.dtype))
+        return pg.at[slot].set(dn[0].astype(pg.dtype))
+
+    def commit_layer(kind, pg_layer, dn_layer, lead):
+        if kind == "attn":
+            return _commit_attn_pages(cfg, pg_layer, dn_layer, table_row,
+                                      prompt_len, kv_bits, lead)
+        return jax.tree_util.tree_map(
+            lambda pg, dn: insert_slot(pg, dn, lead), pg_layer, dn_layer)
+
+    out = {"rem": [], "scan": None}
+    if cfg.scan_layers and cfg.n_superblocks > 0:
+        out["scan"] = {
+            name: commit_layer(name.split("_", 1)[1], paged_caches["scan"][name],
+                               dense_caches["scan"][name], True)
+            for name in paged_caches["scan"]}
+    else:
+        out["scan"] = [
+            {name: commit_layer(name.split("_", 1)[1], sb[name],
+                                dense_caches["scan"][i][name], False)
+             for name in sb}
+            for i, sb in enumerate(paged_caches["scan"])]
+    for i, layer in enumerate(paged_caches["rem"]):
+        kind = cfg.block_pattern[i % len(cfg.block_pattern)]
+        out["rem"].append(commit_layer(kind, layer,
+                                       dense_caches["rem"][i], False))
+    return out
 
 
 def prefill(cfg, params, tokens, max_len, embeds=None):

@@ -47,6 +47,10 @@ class ServeEngine:
         # cumulative latency bins: observe_counts REPLACES the histogram
         # value, so the engine owns the running counts
         self._lat_counts = np.zeros((N_LATENCY_BINS,), np.int64)
+        # per-call stream counter: folding it into the seed gives every
+        # generate() call its own sampling stream — a fixed PRNGKey(seed)
+        # here made successive temperature>0 batches sample identically
+        self._n_calls = 0
 
         def _prefill(params, tokens):
             return M.prefill(cfg, params, tokens, max_len=serve_cfg.max_len)
@@ -97,7 +101,9 @@ class ServeEngine:
             if self.registry is not None:
                 self._observe_request(B, 0, time.perf_counter() - t0)
             return np.zeros((B, 0), np.int32)
-        key = jax.random.PRNGKey(self.scfg.seed)
+        key = jax.random.fold_in(jax.random.PRNGKey(self.scfg.seed),
+                                 self._n_calls)
+        self._n_calls += 1
         logits, caches = self._prefill(self.params, jnp.asarray(prompts))
         out = []
         key, k = jax.random.split(key)

@@ -119,6 +119,100 @@ def test_serve_telemetry_latency_and_throughput():
         assert validate_event(ev) == [], ev
 
 
+def test_generate_sampled_calls_differ():
+    """Regression: ``generate`` used to rebuild PRNGKey(seed) per call, so
+    at temperature>0 every batch sampled IDENTICAL tokens.  Successive
+    calls must draw from distinct streams (while greedy stays
+    deterministic, covered above)."""
+    cfg = CASES["dense"]
+    params, _ = M.init_model(cfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params, ServeConfig(max_len=64, temperature=1.0,
+                                               seed=3))
+    prompts = np.random.RandomState(0).randint(0, 97, (3, 10)).astype(np.int32)
+    g1 = eng.generate(prompts, 12)
+    g2 = eng.generate(prompts, 12)
+    assert not np.array_equal(g1, g2), \
+        "two sampled generations returned identical tokens"
+    # and the whole engine stays reproducible from a fresh instance
+    eng2 = ServeEngine(cfg, params, ServeConfig(max_len=64, temperature=1.0,
+                                                seed=3))
+    np.testing.assert_array_equal(g1, eng2.generate(prompts, 12))
+
+
+def test_latency_histogram_bin_edges():
+    """Boundary semantics of the pre-binned latency histogram: an exact
+    edge value lands in the bin to its RIGHT (bisect), and anything past
+    10 s lands in the overflow bin."""
+    from bisect import bisect
+    from repro.serve.engine import LATENCY_BIN_EDGES_MS, N_LATENCY_BINS
+
+    assert N_LATENCY_BINS == len(LATENCY_BIN_EDGES_MS) + 1
+    assert bisect(LATENCY_BIN_EDGES_MS, 0.5) == 0
+    for i, edge in enumerate(LATENCY_BIN_EDGES_MS):
+        assert bisect(LATENCY_BIN_EDGES_MS, edge) == i + 1        # on-edge
+        assert bisect(LATENCY_BIN_EDGES_MS, edge - 1e-9) == i     # below
+    assert bisect(LATENCY_BIN_EDGES_MS, 10_000.0) == N_LATENCY_BINS - 1
+    assert bisect(LATENCY_BIN_EDGES_MS, 3_600_000.0) == N_LATENCY_BINS - 1
+
+    # drive the engine's binning directly: a fake 2 ms and a fake 2 h
+    # request land in bin 1 and the overflow bin
+    from repro.telemetry import MetricRegistry
+    cfg = CASES["dense"]
+    params, _ = M.init_model(cfg, jax.random.PRNGKey(0))
+    reg = MetricRegistry()
+    eng = ServeEngine(cfg, params, ServeConfig(max_len=64), registry=reg)
+    eng._observe_request(1, 10, 0.002)
+    eng._observe_request(2, 10, 7200.0)
+    counts = np.asarray(reg.metrics()["serve/latency_ms"])
+    assert counts[1] == 1 and counts[N_LATENCY_BINS - 1] == 2
+    assert counts.sum() == 3
+
+
+def test_scheduler_telemetry_schema_valid(tmp_path):
+    """Scheduler counters/gauges (occupancy, evictions, kv bytes/token,
+    tokens/s) flush as schema-valid JSONL (§14 x §17)."""
+    from repro.serve.kvcache import PagedKVConfig
+    from repro.serve.scheduler import (ContinuousBatchingEngine, Request,
+                                       SchedulerConfig)
+    from repro.telemetry import JsonlSink, MetricRegistry, validate_jsonl
+
+    cfg = CASES["dense"]
+    params, _ = M.init_model(cfg, jax.random.PRNGKey(0))
+    reg = MetricRegistry()
+    out = tmp_path / "serve_metrics.jsonl"
+    reg.add_sink(JsonlSink(str(out)))
+    kv = PagedKVConfig(page_size=4, n_pages=6, n_slots=2,
+                       max_pages_per_seq=3)
+    eng = ContinuousBatchingEngine(cfg, params, SchedulerConfig(kv=kv),
+                                   registry=reg)
+    rng = np.random.RandomState(0)
+    reqs = [Request(rid=i, prompt=tuple(rng.randint(0, 97, 5).tolist()),
+                    max_new_tokens=6) for i in range(4)]
+    eng.serve(reqs)
+
+    m = reg.metrics()
+    assert m["serve/sched/admitted"] >= 4
+    assert m["serve/sched/completed"] == 4
+    assert m["serve/requests"] == 4
+    assert m["serve/generated_tokens"] == 24
+    assert 0.0 <= m["serve/sched/slot_occupancy"] <= 1.0
+    assert m["serve/sched/page_occupancy"] == 0.0   # all released at end
+    assert m["serve/tokens_per_s"] > 0.0
+    assert m["serve/kv_bytes_per_token"] > 0.0
+    counts = np.asarray(m["serve/latency_ms"])
+    assert counts.sum() == 4
+    reg.flush(step=1)
+    events, errors = validate_jsonl(str(out))
+    assert events, "flush emitted no events"
+    assert errors == [], errors
+    names = {ev["name"] for ev in events}
+    for required in ("serve/sched/admitted", "serve/sched/completed",
+                     "serve/sched/slot_occupancy",
+                     "serve/sched/page_occupancy", "serve/tokens_per_s",
+                     "serve/kv_bytes_per_token", "serve/latency_ms"):
+        assert required in names, (required, names)
+
+
 def test_long_context_decode_small():
     """xlstm-style O(1) state: decode far past any attention window."""
     cfg = CASES["xlstm"]
